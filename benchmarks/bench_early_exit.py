@@ -1,0 +1,42 @@
+"""Early-exit benchmark (survey §2.2.3 / Table 4 early-exit row):
+per-exit quality and the latency (mean depth) vs quality trade of
+confidence-gated exits, after LayerSkip-style training."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.early_exit import early_exit_decision, exit_logits, layerskip_loss
+from repro.data import batches
+from repro.models import Model, cross_entropy
+from repro.training import AdamW, train
+
+
+def run(csv=print):
+    cfg = get_config("smollm-135m").reduced().replace(num_layers=4)
+    m = Model(cfg)
+    exits = [0, 1, 2]
+    res = train(m, m.init(jax.random.PRNGKey(0)), batches(cfg, 8, 48),
+                steps=60, opt=AdamW(lr=2e-3),
+                loss_fn=lambda p, b: layerskip_loss(m, p, b, exits)[0],
+                log_every=10_000, log=lambda *_: None)
+    params = res["params"]
+
+    b = next(batches(cfg, 4, 48, seed=7))
+    _, _, hs = m.forward(params, b, collect_hidden=True)
+    ex = exit_logits(m, params, hs, exits + [cfg.num_layers - 1])
+    for i, l in enumerate(exits + [cfg.num_layers - 1]):
+        ce = float(cross_entropy(ex[i][:, :-1], b["labels"][:, 1:]))
+        csv(f"early_exit_ce,layer={l},{ce:.4f}")
+
+    # confidence-gated exits at the last position of each sequence
+    last = ex[:, :, -1, :]
+    for thr in (0.2, 0.5, 0.8):
+        idx, _ = early_exit_decision(last, threshold=thr)
+        csv(f"early_exit_mean_depth,thr={thr},{float(jnp.mean(idx)):.3f}")
+
+
+if __name__ == "__main__":
+    run()

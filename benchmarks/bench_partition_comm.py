@@ -1,0 +1,46 @@
+"""Split inference + communication optimization benchmark (survey §2.2.2 and
+§2.2.4 / Table 4): wire bytes vs output fidelity per boundary compressor,
+and the hybrid cost model's optimal branch points per architecture."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_archs
+from repro.core.compression import (Identity, Int4Quantizer, Int8Quantizer,
+                                    TopKSparsifier, entropy_bits_estimate,
+                                    relative_error)
+from repro.core.partition import SplitCostModel, split_inference
+from repro.models import Model, example_batch
+
+
+def run(csv=print):
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = example_batch(cfg, 2, 24, with_labels=False)
+    full, _ = m.forward(params, batch)
+
+    for comp in (Identity(), Int8Quantizer(), Int4Quantizer(),
+                 TopKSparsifier(frac=0.1)):
+        lg, wire = split_inference(m, params, batch, k=1, compressor=comp)
+        err = relative_error(full, lg)
+        csv(f"split_wire_bytes,{comp.name},{wire}")
+        csv(f"split_logit_rel_err,{comp.name},{err:.5f}")
+
+    # entropy bound for the int8 boundary (survey's entropy-coding headroom)
+    from repro.core.partition import edge_forward
+    h = edge_forward(params, batch["tokens"], cfg, 1)
+    q = Int8Quantizer().compress(h)
+    bits = entropy_bits_estimate(q.payload["q"])
+    csv(f"split_boundary_entropy_bits_per_elem,int8,{bits:.3f}")
+
+    cm = SplitCostModel()
+    for arch in ("smollm-135m", "granite-8b", "granite-20b"):
+        k, _ = cm.best_split(get_config(arch), tokens=128)
+        csv(f"split_best_branch_layer,{arch},{k}")
+
+
+if __name__ == "__main__":
+    run()

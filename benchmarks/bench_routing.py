@@ -1,0 +1,74 @@
+"""Task-assignment benchmark (survey §2.1 / Table 2 + Table 4 routing rows).
+
+Cost-quality frontier of confidence routing between a weak edge model and a
+strong cloud model on mixed-difficulty synthetic data, plus UCB bandit
+regret (PerLLM-style reward-minus-cost routing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.routing import UCBRouter
+from repro.core.uncertainty import entropy
+from repro.data import SyntheticLM, batches
+from repro.models import Model, cross_entropy
+from repro.training import AdamW, train
+
+
+def run(csv=print):
+    cfg = get_config("smollm-135m").reduced()
+    cloud_m = Model(cfg)
+    edge_cfg = cfg.replace(num_layers=1, d_ff=128)
+    edge_m = Model(edge_cfg)
+
+    # train cloud well, edge poorly -> a real quality gap
+    cloud = train(cloud_m, cloud_m.init(jax.random.PRNGKey(0)),
+                  batches(cfg, 8, 48), steps=60, opt=AdamW(lr=2e-3),
+                  log_every=10_000, log=lambda *_: None)["params"]
+    edge = train(edge_m, edge_m.init(jax.random.PRNGKey(1)),
+                 batches(cfg, 8, 48), steps=15, opt=AdamW(lr=2e-3),
+                 log_every=10_000, log=lambda *_: None)["params"]
+
+    eval_batches = [next(batches(cfg, 4, 48, seed=100 + i)) for i in range(6)]
+
+    @jax.jit
+    def per_request(edge_p, cloud_p, b):
+        le, _ = edge_m.forward(edge_p, b)
+        lc, _ = cloud_m.forward(cloud_p, b)
+        ce_e = cross_entropy(le[:, :-1], b["labels"][:, 1:])
+        ce_c = cross_entropy(lc[:, :-1], b["labels"][:, 1:])
+        u = jnp.mean(entropy(le))
+        return ce_e, ce_c, u
+
+    rows = [per_request(edge, cloud, b) for b in eval_batches]
+    ces_e = np.array([float(r[0]) for r in rows])
+    ces_c = np.array([float(r[1]) for r in rows])
+    us = np.array([float(r[2]) for r in rows])
+    csv(f"routing_edge_ce,mean,{ces_e.mean():.4f}")
+    csv(f"routing_cloud_ce,mean,{ces_c.mean():.4f}")
+
+    # frontier: escalate when edge entropy above threshold
+    for thr in (0.0, us.mean(), 1.0):
+        to_cloud = us > thr
+        ce = np.where(to_cloud, ces_c, ces_e).mean()
+        cost = to_cloud.mean()          # fraction of cloud calls
+        csv(f"routing_frontier,thr={thr:.2f}:cloud_frac={cost:.2f},{ce:.4f}")
+
+    # bandit: reward = -ce - cost_weight * cost(model)
+    rng = np.random.default_rng(0)
+    router = UCBRouter(2, cost_weight=0.05)
+    costs = [0.0, 1.0]
+    for t in range(300):
+        i = t % len(eval_batches)
+        a = router.select()
+        q = -(ces_e[i] if a == 0 else ces_c[i]) + rng.normal(0, 0.05)
+        router.update(a, q, costs[a])
+    csv(f"routing_bandit_pulls,edge,{int(router.n[0])}")
+    csv(f"routing_bandit_pulls,cloud,{int(router.n[1])}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,126 @@
+"""Roofline analysis (required deliverable g).
+
+Reads the dry-run records (experiments/dryrun/*.json) and derives, per
+(arch x shape) on the single-pod mesh:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs            [s]
+    memory term     = HLO_bytes_per_device / HBM_bw                [s]
+    collective term = collective_bytes_per_device / ICI_link_bw    [s]
+
+plus the dominant bottleneck, MODEL_FLOPS = 6·N·D (train) / 2·N·D
+(prefill/decode; N_active for MoE), and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (conservative single-link model).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops_per_device(cfg, shape, devices: int) -> float:
+    """Useful model FLOPs per device for the step the dry-run lowered."""
+    n = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / devices
+    tokens = shape.global_batch            # one token per sequence
+    return 2.0 * n * tokens / devices
+
+
+def load_records(mesh: str = "single") -> List[Dict]:
+    out = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return out
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if f.endswith(f"_{mesh}.json"):
+            out.append(json.load(open(os.path.join(DRYRUN_DIR, f))))
+    return out
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    from repro.configs import SHAPES, get_config
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    devices = CHIPS[rec["mesh"]]
+    hc = rec.get("hlo_cost")
+    if hc:   # trip-count-aware analysis (preferred; see launch/hlo_cost.py)
+        flops, bytes_, coll = hc["flops"], hc["bytes"], hc["collective_bytes"]
+    else:    # raw XLA cost_analysis (while bodies counted once — caveat)
+        flops = rec["flops_per_device"]
+        bytes_ = rec["bytes_per_device"]
+        coll = sum(v for k, v in rec["collectives"].items() if k != "count")
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(cfg, shape, devices)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "step": rec.get("step", "?"),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_,
+        "collective_bytes": coll,
+        "coll_breakdown": {k: v for k, v in (hc or {}).items()
+                           if k.startswith("coll_")} or rec["collectives"],
+    }
+
+
+def table(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for rec in load_records(mesh):
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | step | compute s | memory s | collective s | "
+           "dominant | useful ratio |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    rows = table("single")
+    if not rows:
+        print("roofline,status,no dryrun records — run repro.launch.dryrun")
+        return
+    print("name,arch,shape,compute_s,memory_s,collective_s,dominant,useful_ratio")
+    for r in rows:
+        print(f"roofline,{r['arch']},{r['shape']},{r['compute_s']:.4e},"
+              f"{r['memory_s']:.4e},{r['collective_s']:.4e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

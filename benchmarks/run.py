@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per survey table/claim (see DESIGN.md §7).
+
+Prints ``name,case,value`` CSV rows.  Run:
+
+    PYTHONPATH=src python -m benchmarks.run [--only speculative]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_collab_training, bench_early_exit,
+                        bench_partition_comm, bench_routing,
+                        bench_speculative, roofline)
+
+SUITES = {
+    "speculative": bench_speculative.run,        # survey §2.4 / Table 2
+    "routing": bench_routing.run,                # survey §2.1 / Table 4
+    "early_exit": bench_early_exit.run,          # survey §2.2.3 / Table 4
+    "partition_comm": bench_partition_comm.run,  # survey §2.2.2/.4 / Table 4
+    "collab_training": bench_collab_training.run,  # survey §3 / Table 6
+    "roofline": lambda csv=print: roofline.main(),  # deliverable (g)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(SUITES))
+    args = ap.parse_args()
+    suites = {args.only: SUITES[args.only]} if args.only else SUITES
+    print("name,case,value")
+    for name, fn in suites.items():
+        t0 = time.time()
+        print(f"# === {name} ===", file=sys.stderr)
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

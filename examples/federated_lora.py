@@ -1,0 +1,53 @@
+"""Federated adapter tuning (survey §3.4): non-IID clients fine-tune
+heterogeneous-rank LoRA adapters on a frozen base model; the server
+aggregates with HETLoRA's rank-aware scheme.
+
+    PYTHONPATH=src python examples/federated_lora.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM, batches, dirichlet_clients
+from repro.data.pipeline import client_divergence
+from repro.models import Model, cross_entropy
+from repro.training import AdamW
+from repro.training.lora import (hetlora_aggregate, init_lora, lora_loss_fn,
+                                 lora_param_count, merge_lora)
+
+cfg = get_config("smollm-135m").reduced()
+model = Model(cfg)
+base = model.init(jax.random.PRNGKey(0))
+n_base = sum(x.size for x in jax.tree.leaves(base))
+
+N_CLIENTS = 3
+RANKS = [2, 4, 8]
+mixtures = dirichlet_clients(N_CLIENTS, 4, alpha=0.2)
+print(f"client divergence (mean pairwise TV): {client_divergence(mixtures):.3f}")
+
+synth = SyntheticLM(cfg.vocab_size)
+client_adapters = []
+for c in range(N_CLIENTS):
+    ad = init_lora(jax.random.PRNGKey(10 + c), base, rank=RANKS[c])
+    loss_fn = lora_loss_fn(model, base)
+    opt = AdamW(lr=3e-3, weight_decay=0.0)
+    st = opt.init(ad)
+    it = batches(cfg, 4, 48, domain_weights=mixtures[c], seed=c, synth=synth)
+    grad = jax.jit(jax.value_and_grad(loss_fn))
+    for i in range(12):
+        l, g = grad(ad, next(it))
+        ad, st, _ = opt.update(g, st, ad)
+    print(f"client {c}: rank={RANKS[c]} local loss {float(l):.4f} "
+          f"adapter params {lora_param_count(ad)} "
+          f"({lora_param_count(ad)/n_base:.4%} of base — the only bytes "
+          f"that cross the edge-cloud link)")
+    client_adapters.append(ad)
+
+print("\n== HETLoRA rank-aware aggregation ==")
+agg = hetlora_aggregate(client_adapters, max_rank=max(RANKS))
+merged = merge_lora(base, agg)
+evalb = next(batches(cfg, 8, 48, seed=77, synth=synth))
+lg, _ = model.forward(merged, evalb)
+lg0, _ = model.forward(base, evalb)
+print(f"base CE   : {float(cross_entropy(lg0[:, :-1], evalb['labels'][:, 1:])):.4f}")
+print(f"merged CE : {float(cross_entropy(lg[:, :-1], evalb['labels'][:, 1:])):.4f}")

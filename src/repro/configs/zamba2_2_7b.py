@@ -1,0 +1,19 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + one shared attention block
+applied periodically (weights reused, true to Zamba2) [arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    shared_attn_every=6,     # shared block after every 6 mamba layers
+)

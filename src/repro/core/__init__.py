@@ -1,0 +1,9 @@
+"""Core collaboration library — the survey's taxonomy as composable modules.
+
+Inference (survey §2): routing, uncertainty, early_exit, partition,
+compression, cache, speculative, self_speculative, tree_speculation, engine.
+"""
+from repro.core.speculative import (SpecDecoder, SpecStats,  # noqa: F401
+                                    autoregressive_baseline,
+                                    speculative_sample)
+from repro.core.uncertainty import get_estimator  # noqa: F401

@@ -1,0 +1,67 @@
+"""Semantic response cache (survey §2.3.2 — VELO-style vector-database
+cache at the edge).
+
+Requests are keyed by an embedding; a hit (cosine similarity above a
+threshold) returns the cached cloud response without a cloud call.  History
+store doubles as the retrieval substrate for the Hybrid-RACA-style
+historical-enhancement path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    key: np.ndarray
+    value: Any
+    hits: int = 0
+
+
+class SemanticCache:
+    def __init__(self, capacity: int = 1024, threshold: float = 0.9):
+        self.capacity = capacity
+        self.threshold = threshold
+        self.entries: List[CacheEntry] = []
+        self.lookups = 0
+        self.hits = 0
+
+    @staticmethod
+    def _norm(v: np.ndarray) -> np.ndarray:
+        v = np.asarray(v, np.float32).reshape(-1)
+        return v / (np.linalg.norm(v) + 1e-12)
+
+    def lookup(self, key: np.ndarray) -> Optional[Any]:
+        self.lookups += 1
+        if not self.entries:
+            return None
+        k = self._norm(key)
+        mat = np.stack([e.key for e in self.entries])
+        sims = mat @ k
+        i = int(np.argmax(sims))
+        if sims[i] >= self.threshold:
+            self.hits += 1
+            self.entries[i].hits += 1
+            return self.entries[i].value
+        return None
+
+    def insert(self, key: np.ndarray, value: Any):
+        if len(self.entries) >= self.capacity:
+            # evict the least-hit entry (VELO uses utility-aware eviction)
+            self.entries.pop(int(np.argmin([e.hits for e in self.entries])))
+        self.entries.append(CacheEntry(self._norm(key), value))
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+def embed_tokens_mean(model, params, tokens) -> np.ndarray:
+    """Cheap request embedding: mean of the model's token embeddings."""
+    import jax.numpy as jnp
+    emb = params["embed"]
+    v = jnp.mean(jnp.take(emb, jnp.asarray(tokens, jnp.int32), axis=0), axis=-2)
+    return np.asarray(v, np.float32)

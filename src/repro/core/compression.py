@@ -1,0 +1,152 @@
+"""Communication optimization (survey §2.2.4).
+
+Everything that crosses the edge-cloud boundary (activations in split
+inference, logits in verification, adapter deltas in federated tuning) goes
+through a ``Compressor``.  Each compressor reports exact wire bytes so the
+benchmarks can trade fidelity against transfer cost, mirroring the survey's
+entropy-compression / EdgeShard-style selective-transmission discussion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Compressed:
+    payload: dict
+    wire_bytes: int
+    method: str
+
+
+def _nbytes(tree) -> int:
+    return int(sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)))
+
+
+class Identity:
+    name = "identity"
+
+    def compress(self, x) -> Compressed:
+        return Compressed({"x": x}, _nbytes(x), self.name)
+
+    def decompress(self, c: Compressed):
+        return c.payload["x"]
+
+
+class Int8Quantizer:
+    """Per-channel symmetric int8 (survey: INT8 intermediate representations,
+    Li et al. / Ye et al.).  axis=-1 channels."""
+    name = "int8"
+
+    def compress(self, x) -> Compressed:
+        x = jnp.asarray(x)
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        wire = q.size * 1 + scale.size * 4
+        return Compressed({"q": q, "scale": scale}, int(wire), self.name)
+
+    def decompress(self, c: Compressed):
+        return c.payload["q"].astype(jnp.float32) * c.payload["scale"]
+
+
+class Int4Quantizer:
+    """Per-channel symmetric int4 (packed two-per-byte on the wire)."""
+    name = "int4"
+
+    def compress(self, x) -> Compressed:
+        x = jnp.asarray(x)
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 7.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(x / scale), -7, 7).astype(jnp.int8)
+        wire = (q.size + 1) // 2 + scale.size * 4
+        return Compressed({"q": q, "scale": scale}, int(wire), self.name)
+
+    def decompress(self, c: Compressed):
+        return c.payload["q"].astype(jnp.float32) * c.payload["scale"]
+
+
+class TopKSparsifier:
+    """Keep the top-k fraction of entries by magnitude (EdgeShard-style
+    'forward only inference-critical features'); optional error feedback."""
+    name = "topk"
+
+    def __init__(self, frac: float = 0.1, error_feedback: bool = False):
+        self.frac = frac
+        self.error_feedback = error_feedback
+        self._residual = None
+
+    def compress(self, x) -> Compressed:
+        x = jnp.asarray(x)
+        if self.error_feedback and self._residual is not None:
+            x = x + self._residual
+        flat = x.reshape(-1)
+        k = max(1, int(flat.size * self.frac))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = flat[idx]
+        if self.error_feedback:
+            kept = jnp.zeros_like(flat).at[idx].set(vals)
+            self._residual = (flat - kept).reshape(x.shape)
+        wire = k * (4 + 4)   # fp32 value + int32 index
+        return Compressed({"idx": idx, "vals": vals, "shape": x.shape},
+                          int(wire), self.name)
+
+    def decompress(self, c: Compressed):
+        shape = c.payload["shape"]
+        size = int(np.prod(shape))
+        flat = jnp.zeros((size,), jnp.float32).at[c.payload["idx"]].set(
+            c.payload["vals"].astype(jnp.float32))
+        return flat.reshape(shape)
+
+
+class TopKLogits:
+    """Transmit only the top-k logits + an 'other' bucket — the standard
+    trick for shipping verification distributions edge<->cloud."""
+    name = "topk_logits"
+
+    def __init__(self, k: int = 64):
+        self.k = k
+
+    def compress(self, logits) -> Compressed:
+        logits = jnp.asarray(logits)
+        vals, idx = jax.lax.top_k(logits, self.k)
+        wire = int(np.prod(logits.shape[:-1])) * self.k * (4 + 4)
+        return Compressed({"idx": idx, "vals": vals,
+                           "V": logits.shape[-1]}, wire, self.name)
+
+    def decompress(self, c: Compressed):
+        """Reconstruct (…, V) with -inf outside the top-k (probability mass
+        outside top-k is treated as zero; survey's semantic-fidelity
+        trade-off applies)."""
+        idx, vals = c.payload["idx"], c.payload["vals"]
+        V = c.payload["V"]
+        out = jnp.full(idx.shape[:-1] + (V,), -1e30, jnp.float32)
+        return jnp.put_along_axis(out, idx, vals.astype(jnp.float32), axis=-1,
+                                  inplace=False)
+
+
+def entropy_bits_estimate(x, bins: int = 256) -> float:
+    """Empirical entropy (bits/element) of a quantized tensor — the survey's
+    entropy-compression bound [17]: a lossless coder could reach this."""
+    q = np.asarray(x).reshape(-1)
+    hist, _ = np.histogram(q, bins=bins)
+    p = hist / max(hist.sum(), 1)
+    p = p[p > 0]
+    return float(-(p * np.log2(p)).sum())
+
+
+def relative_error(x, y) -> float:
+    x, y = np.asarray(x, np.float32), np.asarray(y, np.float32)
+    return float(np.linalg.norm(x - y) / (np.linalg.norm(x) + 1e-12))
+
+
+COMPRESSORS = {
+    "identity": Identity,
+    "int8": Int8Quantizer,
+    "int4": Int4Quantizer,
+    "topk": TopKSparsifier,
+}

@@ -1,0 +1,74 @@
+"""Early exit (survey §2.2.3 — LITE / LayerSkip / EE-LLM style).
+
+Two pieces:
+* inference: confidence-gated exit over per-layer hidden states (the shared
+  LM head is applied at candidate exit layers; generation stops at the first
+  layer whose confidence clears the threshold);
+* training: LayerSkip-style auxiliary exit loss so intermediate layers
+  produce usable logits (weight grows with depth).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.uncertainty import get_estimator
+from repro.models.model import cross_entropy
+
+
+def exit_logits(model, params, hidden_per_layer, layers: Sequence[int]):
+    """hidden_per_layer: (L, B, S, d) from forward(collect_hidden=True).
+    Applies final norm + shared unembedding at each exit layer.
+    Returns (n_exits, B, S, V) f32."""
+    from repro.models import layers as L
+    cfg = model.cfg
+    head = params.get("lm_head", params["embed"])
+    outs = []
+    for l in layers:
+        h = hidden_per_layer[l]
+        if "final_norm" in params:
+            h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        else:   # encdec layernorm
+            h = L.layernorm(h, params["final_norm_w"], params["final_norm_b"])
+        outs.append(L.unembed(head, h))
+    return jnp.stack(outs)
+
+
+def early_exit_decision(exit_logits_stack, threshold: float,
+                        estimator: str = "max_prob"):
+    """exit_logits_stack: (n_exits, B, V) at one decode position.
+    Returns (chosen_exit_idx (B,), logits (B, V)): first exit whose
+    confidence clears the threshold (the last exit always 'fires')."""
+    est = get_estimator(estimator)
+    u = est(exit_logits_stack)                       # (n_exits, B)
+    ok = u < threshold
+    ok = ok.at[-1].set(True)
+    idx = jnp.argmax(ok, axis=0)                     # first True
+    chosen = jnp.take_along_axis(
+        exit_logits_stack, idx[None, :, None], axis=0)[0]
+    return idx, chosen
+
+
+def layerskip_loss(model, params, batch, exit_layers: Sequence[int],
+                   final_weight: float = 1.0):
+    """Training loss: final CE + depth-weighted auxiliary exit CE
+    (LayerSkip's curriculum, static form).  Returns (loss, per_exit_ce)."""
+    logits, aux, hs = model.forward(params, batch, collect_hidden=True)
+    labels = batch["labels"]
+    if model.cfg.family == "vlm":
+        P = batch["embeds"].shape[1]
+        logits = logits[:, P:, :]
+        hs = hs[:, :, P:, :]
+    ce_final = cross_entropy(logits[:, :-1], labels[:, 1:])
+    ex = exit_logits(model, params, hs, exit_layers)
+    L_total = model.cfg.num_layers
+    ces = []
+    loss = final_weight * ce_final + aux
+    for i, l in enumerate(exit_layers):
+        w = 0.3 * (l + 1) / L_total                  # deeper exits weigh more
+        ce = cross_entropy(ex[i][:, :-1], labels[:, 1:])
+        ces.append(ce)
+        loss = loss + w * ce
+    return loss, jnp.stack(ces) if ces else jnp.zeros((0,))

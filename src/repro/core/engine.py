@@ -1,0 +1,132 @@
+"""Task-level mixture orchestration (survey §2.3): the collaborative serving
+engine that composes the taxonomy's mechanisms per request:
+
+    1. semantic cache lookup (VELO)                     -> free
+    2. edge-only generation + uncertainty check          -> cheap
+    3. escalation:
+       a. "speculative"  — token-level mixture (§2.4)
+       b. "cloud"        — full cloud generation (task assignment)
+       c. "skeleton"     — cloud drafts a skeleton prefix, edge completes
+                           (cloud-to-edge skeleton, §2.4.3/PICE)
+
+The engine is a host-side control loop around jitted model steps, with
+per-request traces for the benchmarks (edge/cloud calls, wire bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import SemanticCache, embed_tokens_mean
+from repro.core.speculative import SpecDecoder, autoregressive_baseline
+from repro.core.uncertainty import get_estimator
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    path: str                       # cache | edge | speculative | cloud | skeleton
+    edge_calls: int = 0
+    cloud_passes: int = 0
+    uncertainty: float = 0.0
+    tokens: Optional[List[int]] = None
+
+
+class CollaborativeEngine:
+    def __init__(self, edge_model, cloud_model, *, gamma: int = 4,
+                 temperature: float = 0.0, escalate_threshold: float = 0.6,
+                 estimator: str = "entropy", escalation: str = "speculative",
+                 use_cache: bool = True, cache_threshold: float = 0.95,
+                 skeleton_len: int = 8):
+        self.edge = edge_model
+        self.cloud = cloud_model
+        self.temperature = temperature
+        self.threshold = escalate_threshold
+        self.est = get_estimator(estimator)
+        self.escalation = escalation
+        self.skeleton_len = skeleton_len
+        self.spec = SpecDecoder(edge_model, cloud_model, gamma=gamma,
+                                temperature=temperature)
+        self.cache = SemanticCache(threshold=cache_threshold) if use_cache else None
+        self._edge_step = jax.jit(lambda p, t, c: edge_model.decode_step(p, t, c))
+
+    # ----------------------------------------------------------------
+    def _edge_generate(self, params, prompt, max_new):
+        """Edge-only generation; returns (tokens, mean uncertainty, calls)."""
+        prompt = jnp.atleast_2d(jnp.asarray(prompt, jnp.int32))
+        _, cache = self.edge.prefill(params, {"tokens": prompt[:, :-1]},
+                                     max_seq=prompt.shape[1] + max_new + 4)
+        tok = prompt[:, -1:]
+        out, us = [], []
+        rng = jax.random.PRNGKey(0)
+        for _ in range(max_new):
+            lg, cache = self._edge_step(params, tok, cache)
+            us.append(float(np.asarray(self.est(lg)).mean()))
+            if self.temperature == 0.0:
+                nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+            else:
+                rng, rr = jax.random.split(rng)
+                nxt = jax.random.categorical(rr, lg / self.temperature, -1
+                                             ).astype(jnp.int32)
+            out.append(int(nxt[0]))
+            tok = nxt[:, None]
+        return out, float(np.mean(us)), max_new
+
+    # ----------------------------------------------------------------
+    def serve(self, edge_params, cloud_params, prompt, max_new: int
+              ) -> RequestTrace:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+
+        if self.cache is not None:
+            key = embed_tokens_mean(self.edge, edge_params, prompt)
+            hit = self.cache.lookup(key)
+            if hit is not None:
+                return RequestTrace("cache", tokens=list(hit))
+
+        tokens, u, calls = self._edge_generate(edge_params, prompt, max_new)
+        if u <= self.threshold:
+            trace = RequestTrace("edge", edge_calls=calls, uncertainty=u,
+                                 tokens=tokens)
+        elif self.escalation == "speculative":
+            toks, st = self.spec.generate(edge_params, cloud_params, prompt,
+                                          max_new)
+            trace = RequestTrace("speculative",
+                                 edge_calls=calls + st.draft_calls,
+                                 cloud_passes=st.target_passes + st.replay_passes,
+                                 uncertainty=u, tokens=toks)
+        elif self.escalation == "skeleton":
+            toks, ec, cp = self._skeleton_completion(edge_params, cloud_params,
+                                                     prompt, max_new)
+            trace = RequestTrace("skeleton", edge_calls=calls + ec,
+                                 cloud_passes=cp, uncertainty=u, tokens=toks)
+        else:   # plain cloud fallback (task assignment)
+            toks = autoregressive_baseline(self.cloud, cloud_params, prompt,
+                                           max_new, temperature=self.temperature)
+            trace = RequestTrace("cloud", edge_calls=calls,
+                                 cloud_passes=max_new, uncertainty=u,
+                                 tokens=toks)
+
+        if self.cache is not None and trace.tokens is not None:
+            self.cache.insert(key, trace.tokens)
+        return trace
+
+    # ----------------------------------------------------------------
+    def _skeleton_completion(self, edge_params, cloud_params, prompt,
+                             max_new: int):
+        """Cloud-to-edge skeleton (PICE/CoGenesis): the cloud generates the
+        first ``skeleton_len`` tokens (the semantic plan); the edge completes
+        the remainder conditioned on them."""
+        k = min(self.skeleton_len, max_new)
+        skel = autoregressive_baseline(self.cloud, cloud_params, prompt, k,
+                                       temperature=self.temperature)
+        ext = np.concatenate([np.asarray(prompt, np.int32),
+                              np.asarray(skel, np.int32)])
+        rest, _, ec = self._edge_generate(edge_params, ext, max_new - k)
+        return skel + rest, ec, k
+
+    # ----------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0}

@@ -1,0 +1,113 @@
+"""Computation offloading / split inference (survey §2.2.2).
+
+Structural model partitioning: the edge device runs layers [0, k) and ships
+the (optionally compressed) boundary activation to the cloud, which runs
+layers [k, L).  Includes the survey's hybrid cost model for choosing the
+branch point (Stammler et al. / Yang et al. style) and INT8 boundary
+quantization (Li et al.).
+
+Works for the scan-stacked transformer families (dense/moe/vlm); the split
+point for zamba2 keeps the shared attention block cloud-side.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressed, Identity
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.transformer import _block
+
+
+def _split_blocks(params, k: int):
+    lower = jax.tree.map(lambda x: x[:k], params["blocks"])
+    upper = jax.tree.map(lambda x: x[k:], params["blocks"])
+    return lower, upper
+
+
+def edge_forward(params, tokens, cfg, k: int, *, embeds=None):
+    """Run embedding + blocks [0, k). Returns boundary activation (B,S,d)."""
+    h = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    prefix_len = 0
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+        prefix_len = embeds.shape[1]
+    S = h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    mask = (cfg.sliding_window, prefix_len)
+    lower, _ = _split_blocks(params, k)
+
+    def body(hh, p):
+        hh, _aux, _ = _block(p, hh, positions, cfg, mask)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, lower)
+    return h
+
+
+def cloud_forward(params, boundary_h, cfg, k: int, *, prefix_len: int = 0):
+    """Run blocks [k, L) + head on a (possibly decompressed) boundary act."""
+    S = boundary_h.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    mask = (cfg.sliding_window, prefix_len)
+    _, upper = _split_blocks(params, k)
+
+    def body(hh, p):
+        hh, _aux, _ = _block(p, hh, positions, cfg, mask)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, boundary_h.astype(jnp.dtype(cfg.activ_dtype)),
+                        upper)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params.get("lm_head", params["embed"]), h)
+
+
+def split_inference(model, params, batch, k: int, compressor=None
+                    ) -> Tuple[jnp.ndarray, int]:
+    """Full split pass. Returns (logits, wire_bytes across the boundary)."""
+    cfg = model.cfg
+    assert cfg.family in ("dense", "moe", "vlm"), \
+        "split inference implemented for scan-stacked decoder families"
+    compressor = compressor or Identity()
+    embeds = batch.get("embeds")
+    h = edge_forward(params, batch["tokens"], cfg, k, embeds=embeds)
+    c = compressor.compress(h)
+    h2 = compressor.decompress(c)
+    prefix_len = embeds.shape[1] if embeds is not None else 0
+    logits = cloud_forward(params, h2, cfg, k, prefix_len=prefix_len)
+    return logits, c.wire_bytes
+
+
+@dataclasses.dataclass
+class SplitCostModel:
+    """Survey §2.2.2 hybrid cost function: pick the branch point k minimizing
+        T(k) = edge_flops(k)/edge_speed + wire_bytes(k)/bandwidth
+             + cloud_flops(k)/cloud_speed
+    """
+    edge_flops_per_s: float = 2e12        # phone-class NPU
+    cloud_flops_per_s: float = 197e12     # one TPU v5e chip
+    bandwidth_bytes_per_s: float = 12.5e6 # 100 Mb/s uplink
+    bytes_per_act: float = 1.0            # int8 boundary
+
+    def layer_flops(self, cfg, tokens: int) -> float:
+        d, f = cfg.d_model, max(cfg.d_ff, cfg.d_model * 4)
+        attn = 4 * d * d + 2 * tokens * d   # proj + score/value (amortized)
+        mlp = (3 if cfg.mlp_activation in ("silu", "geglu") else 2) * d * f
+        return 2.0 * tokens * (attn + mlp)
+
+    def total_time(self, cfg, tokens: int, k: int) -> float:
+        lf = self.layer_flops(cfg, tokens)
+        wire = tokens * cfg.d_model * self.bytes_per_act
+        return (k * lf / self.edge_flops_per_s
+                + wire / self.bandwidth_bytes_per_s
+                + (cfg.num_layers - k) * lf / self.cloud_flops_per_s)
+
+    def best_split(self, cfg, tokens: int) -> Tuple[int, np.ndarray]:
+        ts = np.array([self.total_time(cfg, tokens, k)
+                       for k in range(cfg.num_layers + 1)])
+        return int(np.argmin(ts)), ts

@@ -1,0 +1,121 @@
+"""Self-speculative decoding (survey §2.4.2 — Kangaroo / LayerSkip / SWIFT).
+
+No auxiliary draft model: the target's own shallow sub-network (first k
+blocks + shared LM head) drafts, the full network verifies.  The draft
+shares the target's KV cache — drafting writes layers [0,k) at the draft
+positions and verification overwrites all layers, so no extra memory and no
+separate-model resync.
+
+Only meaningful for the scan-stacked attention families (the shallow prefix
+of an SSM has its own state to carry — supported via a separate cache copy).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.speculative import SpecStats, speculative_sample
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+
+def partial_extend_step(params, tokens, cache, cfg, k: int, *, window: int = 0):
+    """Run the first k blocks + final norm + head, updating cache layers
+    [0, k) at [pos, pos+T). Returns (logits (B,T,V), cache)."""
+    h = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    pos = cache["pos"]
+    T = tokens.shape[1]
+    lower = jax.tree.map(lambda x: x[:k], params["blocks"])
+    ck, cv = cache["k"][:k], cache["v"][:k]
+
+    def body(hh, xs):
+        p, ck_l, cv_l = xs
+        hn = L.rmsnorm(hh, p["attn_norm"], cfg.norm_eps)
+        a, ck_l, cv_l = L.extend_attention(p["attn"], hn, ck_l, cv_l, pos, cfg,
+                                           window=window or cfg.sliding_window)
+        hh = hh + a
+        hn = L.rmsnorm(hh, p["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = MOE.moe_block(p["moe"], hn, cfg)
+        else:
+            m = L.mlp_block(p["mlp"], hn, cfg.mlp_activation)
+        return hh + m, (ck_l, cv_l)
+
+    h, (nk, nv) = jax.lax.scan(body, h, (lower, ck, cv))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params.get("lm_head", params["embed"]), h)
+    new_k = jnp.concatenate([nk, cache["k"][k:]], axis=0)
+    new_v = jnp.concatenate([nv, cache["v"][k:]], axis=0)
+    # note: pos is NOT advanced here; the caller manages it (draft positions
+    # are provisional until verification).
+    return logits, {**cache, "k": new_k, "v": new_v}
+
+
+class SelfSpecDecoder:
+    """Draft with the first ``exit_layer`` blocks, verify with all blocks."""
+
+    def __init__(self, model, *, exit_layer: int, gamma: int = 4,
+                 temperature: float = 1.0):
+        assert model.cfg.family in ("dense", "moe", "vlm"), \
+            "self-speculation implemented for scan-stacked decoders"
+        assert 0 < exit_layer < model.cfg.num_layers
+        self.model = model
+        self.k = exit_layer
+        self.gamma = gamma
+        self.temperature = temperature
+        cfg = model.cfg
+        self._draft = jax.jit(lambda p, t, c, pos: partial_extend_step(
+            p, t, {**c, "pos": pos}, cfg, self.k))
+        self._verify = jax.jit(lambda p, t, c: model.extend_step(p, t, c))
+
+    def generate(self, params, prompt, max_new: int, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        prompt = jnp.atleast_2d(jnp.asarray(prompt, jnp.int32))
+        max_seq = prompt.shape[1] + max_new + self.gamma + 8
+        _, cache = self.model.prefill(params, {"tokens": prompt[:, :-1]},
+                                      max_seq=max_seq)
+        stats = SpecStats()
+        out: List[int] = []
+        last = prompt[:, -1:]
+        while len(out) < max_new:
+            rng, r_d, r_v = jax.random.split(rng, 3)
+            pos0 = cache["pos"]
+
+            # ---- shallow drafting (sequential, one token at a time)
+            draft_tokens, draft_logits = [], []
+            tok, pos = last, pos0
+            for _ in range(self.gamma):
+                lg, cache = self._draft(params, tok, cache, pos)
+                stats.draft_calls += 1
+                lg = lg[:, -1]
+                if self.temperature == 0.0:
+                    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                else:
+                    r_d, rr = jax.random.split(r_d)
+                    nxt = jax.random.categorical(
+                        rr, lg / self.temperature, -1).astype(jnp.int32)
+                draft_logits.append(lg[0])
+                draft_tokens.append(int(nxt[0]))
+                tok = nxt[:, None]
+                pos = pos + 1
+
+            # ---- full-depth verification (overwrites all layers at pos0..)
+            cache = {**cache, "pos": pos0}   # drafting advanced pos provisionally
+            ver_in = jnp.concatenate(
+                [last, jnp.asarray(draft_tokens, jnp.int32)[None, :]], axis=1)
+            t_logits, cache = self._verify(params, ver_in, cache)
+            stats.target_passes += 1
+            n_acc, next_tok = speculative_sample(
+                r_v, t_logits[0], jnp.stack(draft_logits),
+                jnp.asarray(draft_tokens, jnp.int32),
+                temperature=self.temperature)
+            n_acc, next_tok = int(n_acc), int(next_tok)
+            out.extend(draft_tokens[:n_acc] + [next_tok])
+            stats.rounds += 1
+            stats.accepted.append(n_acc)
+            cache = self.model.rewind(cache, int(pos0) + n_acc + 1)
+            last = jnp.asarray([[next_tok]], jnp.int32)
+        stats.tokens_out = len(out)
+        return out[:max_new], stats

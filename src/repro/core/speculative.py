@@ -1,0 +1,270 @@
+"""Token-level mixture: speculative decoding (survey §2.4).
+
+Edge SLM drafts gamma tokens; cloud LLM verifies them in ONE parallel pass
+(modified rejection sampling, Leviathan et al. / survey §2.4.1).  The scheme
+is *lossless*: the output distribution equals sampling from the target model
+alone — `speculative_sample` is the pure, property-tested core.
+
+Cache bookkeeping (the part the survey leaves implicit, and where the
+architecture families differ):
+
+* KV-cache models (dense/moe/vlm/encdec) roll back rejected tokens by
+  resetting ``pos`` — stale entries are masked out and later overwritten.
+* Recurrent-state models (ssm/hybrid) cannot rewind; we snapshot the state
+  before each round and REPLAY the accepted prefix (one extra extend pass —
+  this cost shows up in SpecStats.replay_passes and in the benchmarks).
+
+Invariant maintained by ``SpecDecoder.generate``: both caches contain
+``sequence[:-1]``; ``sequence[-1]`` ("last token") is pending.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _probs(logits, temperature: float):
+    """softmax(l/T) with T=0 -> one-hot argmax (greedy)."""
+    logits = logits.astype(jnp.float32)
+    if temperature == 0.0:
+        return jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1],
+                              dtype=jnp.float32)
+    return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("temperature",))
+def speculative_sample(rng, target_logits, draft_logits, draft_tokens,
+                       temperature: float = 1.0):
+    """Modified rejection sampling over a gamma-token draft.
+
+    target_logits: (gamma+1, V) — logits for draft positions 0..gamma-1 plus
+        the bonus position after a fully-accepted draft.
+    draft_logits: (gamma, V); draft_tokens: (gamma,) int32.
+    Returns (n_accepted (), next_token ()): the emitted tokens are
+    draft_tokens[:n_accepted] + [next_token].
+    """
+    gamma = draft_tokens.shape[0]
+    p = _probs(target_logits, temperature)            # (gamma+1, V)
+    q = _probs(draft_logits, temperature)             # (gamma, V)
+    r_accept, r_resample = jax.random.split(rng)
+
+    p_tok = jnp.take_along_axis(p[:gamma], draft_tokens[:, None], axis=1)[:, 0]
+    q_tok = jnp.take_along_axis(q, draft_tokens[:, None], axis=1)[:, 0]
+    ratio = p_tok / jnp.maximum(q_tok, 1e-20)
+    u = jax.random.uniform(r_accept, (gamma,))
+    accept = u < jnp.minimum(ratio, 1.0)
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32)))
+
+    # residual distribution at the first rejected position (or bonus at gamma)
+    q_pad = jnp.concatenate([q, jnp.zeros((1, q.shape[1]), q.dtype)], axis=0)
+    resid = jnp.clip(p[n_acc] - q_pad[n_acc], 0.0, None)
+    resid_sum = jnp.sum(resid)
+    resid = jnp.where(resid_sum > 0, resid / jnp.maximum(resid_sum, 1e-20),
+                      p[n_acc])
+    next_token = jax.random.categorical(r_resample, jnp.log(resid + 1e-20))
+    return n_acc, next_token.astype(jnp.int32)
+
+
+def acceptance_rate_bound(p, q):
+    """Theoretical per-token acceptance prob: 1 - TV(p, q) = sum min(p, q).
+    Used by tests and by the gamma controller."""
+    return jnp.sum(jnp.minimum(p, q), axis=-1)
+
+
+@dataclasses.dataclass
+class SpecStats:
+    draft_calls: int = 0
+    target_passes: int = 0
+    replay_passes: int = 0
+    rounds: int = 0
+    accepted: List[int] = dataclasses.field(default_factory=list)
+    tokens_out: int = 0
+
+    @property
+    def mean_accepted(self) -> float:
+        return float(np.mean(self.accepted)) if self.accepted else 0.0
+
+    @property
+    def tokens_per_target_pass(self) -> float:
+        tp = self.target_passes + self.replay_passes
+        return self.tokens_out / tp if tp else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "draft_calls": self.draft_calls,
+            "target_passes": self.target_passes,
+            "replay_passes": self.replay_passes,
+            "mean_accepted": self.mean_accepted,
+            "tokens_out": self.tokens_out,
+            "tokens_per_target_pass": self.tokens_per_target_pass,
+        }
+
+
+class AdaptiveGamma:
+    """PEARL/DISCO-style draft-length control: lengthen the draft when
+    acceptance is high, shorten when the target keeps rejecting."""
+
+    def __init__(self, gamma: int = 4, lo: int = 1, hi: int = 16,
+                 up: float = 0.85, down: float = 0.4):
+        self.gamma, self.lo, self.hi, self.up, self.down = gamma, lo, hi, up, down
+
+    def update(self, n_acc: int, gamma_used: int) -> int:
+        rate = n_acc / max(gamma_used, 1)
+        if rate >= self.up:
+            self.gamma = min(self.gamma + 1, self.hi)
+        elif rate <= self.down:
+            self.gamma = max(self.gamma - 1, self.lo)
+        return self.gamma
+
+
+class SpecDecoder:
+    """Edge-draft / cloud-verify decoding loop (B=1 sequences).
+
+    draft_model / target_model: repro Model objects sharing a vocabulary.
+    """
+
+    def __init__(self, draft_model, target_model, *, gamma: int = 4,
+                 temperature: float = 1.0, adaptive: bool = False):
+        self.draft = draft_model
+        self.target = target_model
+        self.gamma = gamma
+        self.temperature = temperature
+        self.adaptive = AdaptiveGamma(gamma) if adaptive else None
+        self._draft_step = jax.jit(
+            lambda p, t, c: draft_model.decode_step(p, t, c))
+        self._target_extend = jax.jit(
+            lambda p, t, c: target_model.extend_step(p, t, c))
+        self._draft_extend = jax.jit(
+            lambda p, t, c: draft_model.extend_step(p, t, c))
+
+    # ----------------------------------------------------------------
+    def _snapshot(self, model, cache):
+        if model.rewindable_cache:
+            return cache["pos"]
+        return jax.tree.map(lambda x: x, cache)     # shallow copy of pytree
+
+    def _restore_and_replay(self, model, params, cache, snap, tokens):
+        """Bring `model`'s cache to contain ...prefix + tokens."""
+        if model.rewindable_cache:
+            cache = model.rewind(cache, snap)
+            if tokens.size:
+                _, cache = (self._target_extend if model is self.target
+                            else self._draft_extend)(params, tokens[None, :], cache)
+            return cache, (1 if tokens.size else 0)
+        # recurrent: replay from snapshot
+        if tokens.size:
+            _, cache = (self._target_extend if model is self.target
+                        else self._draft_extend)(params, tokens[None, :], snap)
+            return cache, 1
+        return snap, 0
+
+    # ----------------------------------------------------------------
+    def generate(self, draft_params, target_params, prompt, max_new: int,
+                 rng=None):
+        """prompt: (S,) or (1,S) int32. Returns (tokens list, SpecStats)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        prompt = jnp.atleast_2d(jnp.asarray(prompt, jnp.int32))
+        assert prompt.shape[0] == 1, "SpecDecoder operates on B=1 sequences"
+        S = prompt.shape[1]
+        max_seq = S + max_new + 2 * max(self.gamma, 16) + 8
+
+        d_lg, d_cache = self.draft.prefill(
+            draft_params, {"tokens": prompt[:, :-1]}, max_seq=max_seq)
+        t_lg, t_cache = self.target.prefill(
+            target_params, {"tokens": prompt[:, :-1]}, max_seq=max_seq)
+
+        stats = SpecStats()
+        out: List[int] = []
+        last = prompt[:, -1:]                          # pending token (1,1)
+
+        while len(out) < max_new:
+            gamma = self.adaptive.gamma if self.adaptive else self.gamma
+            rng, r_draft, r_ver = jax.random.split(rng, 3)
+
+            d_snap = self._snapshot(self.draft, d_cache)
+            t_snap = self._snapshot(self.target, t_cache)
+
+            # ---- draft gamma tokens (+1 call to keep the cache aligned)
+            draft_tokens, draft_logits = [], []
+            tok = last
+            for i in range(gamma):
+                lg, d_cache = self._draft_step(draft_params, tok, d_cache)
+                stats.draft_calls += 1
+                if self.temperature == 0.0:
+                    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                else:
+                    r_draft, rr = jax.random.split(r_draft)
+                    nxt = jax.random.categorical(
+                        rr, lg / self.temperature, axis=-1).astype(jnp.int32)
+                draft_logits.append(lg[0])
+                draft_tokens.append(int(nxt[0]))
+                tok = nxt[:, None]
+            _, d_cache = self._draft_step(draft_params, tok, d_cache)
+            stats.draft_calls += 1
+
+            # ---- verify in one target pass over [last, d_0..d_{gamma-1}]
+            ver_in = jnp.concatenate(
+                [last, jnp.asarray(draft_tokens, jnp.int32)[None, :]], axis=1)
+            t_logits, t_cache = self._target_extend(target_params, ver_in, t_cache)
+            stats.target_passes += 1
+
+            n_acc, next_tok = speculative_sample(
+                r_ver, t_logits[0], jnp.stack(draft_logits),
+                jnp.asarray(draft_tokens, jnp.int32),
+                temperature=self.temperature)
+            n_acc, next_tok = int(n_acc), int(next_tok)
+
+            # ---- commit & resync
+            emitted = draft_tokens[:n_acc] + [next_tok]
+            out.extend(emitted)
+            stats.rounds += 1
+            stats.accepted.append(n_acc)
+            if self.adaptive:
+                self.adaptive.update(n_acc, gamma)
+
+            acc_tokens = jnp.asarray([int(last[0, 0])] + draft_tokens[:n_acc],
+                                     jnp.int32)
+            if self.target.rewindable_cache:
+                t_cache = self.target.rewind(t_cache, int(t_snap) + n_acc + 1)
+            else:
+                _, t_cache = self._target_extend(
+                    target_params, acc_tokens[None, :], t_snap)
+                stats.replay_passes += 1
+            if self.draft.rewindable_cache:
+                d_cache = self.draft.rewind(d_cache, int(d_snap) + n_acc + 1)
+            else:
+                _, d_cache = self._draft_extend(
+                    draft_params, acc_tokens[None, :], d_snap)
+                stats.replay_passes += 1
+            last = jnp.asarray([[next_tok]], jnp.int32)
+
+        stats.tokens_out = len(out)
+        return out[:max_new], stats
+
+
+def autoregressive_baseline(model, params, prompt, max_new: int, rng=None,
+                            temperature: float = 1.0):
+    """Plain target-only decoding — the survey's cloud-only baseline."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    prompt = jnp.atleast_2d(jnp.asarray(prompt, jnp.int32))
+    max_seq = prompt.shape[1] + max_new + 4
+    step = jax.jit(lambda p, t, c: model.decode_step(p, t, c))
+    _, cache = model.prefill(params, {"tokens": prompt[:, :-1]}, max_seq=max_seq)
+    tok = prompt[:, -1:]
+    out = []
+    for _ in range(max_new):
+        lg, cache = step(params, tok, cache)
+        if temperature == 0.0:
+            nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+        else:
+            rng, rr = jax.random.split(rng)
+            nxt = jax.random.categorical(rr, lg / temperature, -1).astype(jnp.int32)
+        out.append(int(nxt[0]))
+        tok = nxt[:, None]
+    return out

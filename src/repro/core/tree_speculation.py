@@ -1,0 +1,227 @@
+"""Token-tree speculation (survey §2.4.4 — LLMCad / SpecInfer / Sequoia /
+OPT-Tree style).
+
+Instead of a single gamma-token chain, the draft expands a TREE of candidate
+continuations; the target verifies every node in ONE pass using a tree
+attention mask (each node attends to its ancestors only), then the longest
+target-consistent root path is accepted via per-node rejection sampling.
+
+Only attention-family targets support tree masks (``Model.extend_step
+block_mask``); SSM/hybrid recurrences are linear-order (DESIGN.md
+§Arch-applicability) and fall back to chain speculation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenTree:
+    """Flattened tree. Node 0 is the root token (the pending "last token");
+    nodes are topologically ordered (parent index < child index)."""
+    tokens: np.ndarray          # (n,) int32
+    parent: np.ndarray          # (n,) int32; parent[0] = -1
+    draft_logp: np.ndarray      # (n, V) draft log-probs AT each node's position
+                                # (i.e. distribution the node's token was drawn from)
+
+    @property
+    def n(self) -> int:
+        return len(self.tokens)
+
+    def ancestors(self, i: int) -> List[int]:
+        path = []
+        while i != -1:
+            path.append(i)
+            i = int(self.parent[i])
+        return path[::-1]
+
+    def attention_mask(self) -> np.ndarray:
+        """(n, n) bool: node i attends to j iff j is an ancestor of i (or i)."""
+        m = np.zeros((self.n, self.n), bool)
+        for i in range(self.n):
+            for j in self.ancestors(i):
+                m[i, j] = True
+        return m
+
+    def children(self, i: int) -> List[int]:
+        return [j for j in range(self.n) if self.parent[j] == i]
+
+    def depths(self) -> np.ndarray:
+        d = np.zeros(self.n, np.int32)
+        for i in range(1, self.n):
+            d[i] = d[self.parent[i]] + 1
+        return d
+
+
+def build_tree(draft_model, draft_params, draft_cache, last_token: int,
+               branching: Sequence[int], rng, temperature: float = 1.0):
+    """Greedy top-k tree expansion (OPT-Tree style, static branching plan).
+
+    branching: e.g. (3, 2, 1) — 3 children of the root, 2 of each of those, …
+    Draft cache is advanced level-by-level by replaying each node's ancestor
+    path (the draft is cheap; this mirrors LLMCad's on-device tree growth).
+    Returns (TokenTree, draft_calls).
+    """
+    step = jax.jit(lambda p, t, c: draft_model.decode_step(p, t, c))
+    extend = jax.jit(lambda p, t, c: draft_model.extend_step(p, t, c))
+    snap_pos = draft_cache["pos"] if draft_model.rewindable_cache else None
+
+    tokens = [int(last_token)]
+    parent = [-1]
+    logps: List[Optional[np.ndarray]] = [None]
+    frontier = [0]
+    calls = 0
+    for level, width in enumerate(branching):
+        new_frontier = []
+        for node in frontier:
+            # bring cache to contain the ancestor path of `node` (minus itself)
+            path = [tokens[i] for i in _ancestor_indices(parent, node)]
+            if draft_model.rewindable_cache:
+                cache = dict(draft_cache, pos=snap_pos)
+            else:
+                cache = jax.tree.map(lambda x: x, draft_cache)
+            if len(path) > 1:
+                _, cache = extend(draft_params,
+                                  jnp.asarray(path[:-1], jnp.int32)[None], cache)
+                calls += 1
+            lg, cache = step(draft_params,
+                             jnp.asarray([[path[-1]]], jnp.int32), cache)
+            calls += 1
+            logp = jax.nn.log_softmax(lg[0].astype(jnp.float32) /
+                                      max(temperature, 1e-6))
+            top = jax.lax.top_k(logp, width)[1]
+            for t in np.asarray(top):
+                tokens.append(int(t))
+                parent.append(node)
+                logps.append(np.asarray(logp))
+                new_frontier.append(len(tokens) - 1)
+        frontier = new_frontier
+    V = logps[1].shape[0] if len(logps) > 1 else 1
+    logp_arr = np.stack([np.zeros(V, np.float32) if l is None else l
+                         for l in logps])
+    return TokenTree(np.asarray(tokens, np.int32),
+                     np.asarray(parent, np.int32), logp_arr), calls
+
+
+def _ancestor_indices(parent, i):
+    path = []
+    while i != -1:
+        path.append(i)
+        i = int(parent[i])
+    return path[::-1]
+
+
+def verify_tree(target_model, target_params, target_cache, tree: TokenTree,
+                rng, temperature: float = 1.0):
+    """One target pass over all tree nodes with the tree attention mask, then
+    greedy/stochastic path acceptance from the root (Traversal-Verification
+    style: walk down, at each node accept one child via rejection sampling
+    against the draft distribution, else resample and stop).
+
+    Returns (accepted_tokens (without the root), next_token, new_target_cache,
+    n_nodes_verified).
+    """
+    mask = jnp.asarray(tree.attention_mask())
+    toks = jnp.asarray(tree.tokens, jnp.int32)[None, :]
+    q_pos = target_cache["pos"] + jnp.asarray(tree.depths())   # RoPE by depth
+    t_logits, new_cache = target_model.extend_step(
+        target_params, toks, target_cache, block_mask=mask, q_positions=q_pos)
+    t_logits = t_logits[0].astype(jnp.float32)          # (n, V)
+
+    def probs(l):
+        if temperature == 0.0:
+            return jax.nn.one_hot(jnp.argmax(l, -1), l.shape[-1], dtype=jnp.float32)
+        return jax.nn.softmax(l / temperature, -1)
+
+    accepted: List[int] = []
+    node = 0
+    rng_np = np.random.default_rng(int(jax.random.randint(rng, (), 0, 2**31 - 1)))
+    while True:
+        p = np.asarray(probs(t_logits[node]))
+        kids = tree.children(node)
+        chosen = None
+        q_total = np.zeros_like(p)
+        for c in kids:
+            q = np.exp(tree.draft_logp[c])
+            q = q / q.sum()
+            tok = int(tree.tokens[c])
+            if rng_np.uniform() < min(1.0, p[tok] / max(q[tok], 1e-20)):
+                chosen = c
+                break
+            q_total = np.maximum(q_total, q)   # union bound on tried branches
+        if chosen is None:
+            resid = np.clip(p - q_total, 0.0, None)
+            if resid.sum() <= 0:
+                resid = p
+            resid = resid / resid.sum()
+            nxt = int(rng_np.choice(len(resid), p=resid))
+            return accepted, nxt, new_cache, tree.n
+        accepted.append(int(tree.tokens[chosen]))
+        node = chosen
+        if not tree.children(node):
+            p_leaf = np.asarray(probs(t_logits[node]))
+            nxt = int(rng_np.choice(len(p_leaf), p=p_leaf))
+            return accepted, nxt, new_cache, tree.n
+
+
+class TreeSpecDecoder:
+    """Tree-speculative decoding loop (KV-cache targets only)."""
+
+    def __init__(self, draft_model, target_model, *,
+                 branching: Sequence[int] = (3, 2, 1),
+                 temperature: float = 1.0):
+        if not target_model.rewindable_cache:
+            raise ValueError("tree speculation needs an attention target "
+                             "(see DESIGN.md §Arch-applicability)")
+        self.draft, self.target = draft_model, target_model
+        self.branching = tuple(branching)
+        self.temperature = temperature
+
+    def generate(self, draft_params, target_params, prompt, max_new: int,
+                 rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        prompt = jnp.atleast_2d(jnp.asarray(prompt, jnp.int32))
+        n_tree = 1 + int(np.sum(np.cumprod(self.branching)))
+        max_seq = prompt.shape[1] + max_new + (max_new + 1) * n_tree + 8
+        _, d_cache = self.draft.prefill(draft_params,
+                                        {"tokens": prompt[:, :-1]},
+                                        max_seq=max_seq)
+        _, t_cache = self.target.prefill(target_params,
+                                         {"tokens": prompt[:, :-1]},
+                                         max_seq=max_seq)
+        out: List[int] = []
+        last = int(prompt[0, -1])
+        stats = {"rounds": 0, "target_passes": 0, "draft_calls": 0,
+                 "nodes_verified": 0, "accepted_per_round": []}
+        while len(out) < max_new:
+            rng, r1, r2 = jax.random.split(rng, 3)
+            t_pos0 = int(t_cache["pos"])
+            tree, calls = build_tree(self.draft, draft_params, d_cache, last,
+                                     self.branching, r1, self.temperature)
+            stats["draft_calls"] += calls
+            acc, nxt, t_cache, n_nodes = verify_tree(
+                self.target, target_params, t_cache, tree, r2, self.temperature)
+            stats["rounds"] += 1
+            stats["target_passes"] += 1
+            stats["nodes_verified"] += n_nodes
+            stats["accepted_per_round"].append(len(acc))
+            emitted = acc + [nxt]
+            out.extend(emitted)
+            # target cache: rewind, then replay the accepted linear path so
+            # the cache layout is linear again (tree slots are discarded).
+            t_cache = self.target.rewind(t_cache, t_pos0)
+            replay = jnp.asarray([last] + acc, jnp.int32)[None]
+            _, t_cache = self.target.extend_step(target_params, replay, t_cache)
+            stats["target_passes"] += 1
+            # draft cache: same linear replay
+            if self.draft.rewindable_cache:
+                d_cache = self.draft.rewind(d_cache, t_pos0)
+            _, d_cache = self.draft.extend_step(draft_params, replay, d_cache)
+            stats["draft_calls"] += 1
+            last = nxt
+        return out[:max_new], stats

@@ -1,0 +1,81 @@
+"""Uncertainty estimation for escalation decisions (survey §2.1, §2.2.1 and
+the §6 "future prospects" advocating evidence-based estimators).
+
+All estimators map logits (..., V) -> scalar uncertainty (...,) in [0, 1]-ish
+range (higher = more uncertain).  The Dirichlet evidence estimator implements
+the survey's proposed direction: treat exp-logits as evidence, decompose into
+epistemic (vacuity) and aleatoric (expected entropy) components.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def max_prob(logits):
+    """1 - max softmax probability."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return 1.0 - jnp.max(p, axis=-1)
+
+
+def entropy(logits, normalize: bool = True):
+    """Shannon entropy of the softmax; optionally normalized by log V."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    h = -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+    if normalize:
+        h = h / jnp.log(logits.shape[-1])
+    return h
+
+
+def margin(logits):
+    """1 - (p1 - p2): small top-2 margin = uncertain."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return 1.0 - (top2[..., 0] - top2[..., 1])
+
+
+def energy(logits, temperature: float = 1.0):
+    """Negative free energy -T*logsumexp(l/T), min-max squashed via sigmoid.
+    Unlike softmax scores this preserves the raw evidential magnitude
+    (survey §6: normalized probabilities obscure evidential strength)."""
+    e = -temperature * jax.nn.logsumexp(logits.astype(jnp.float32) / temperature,
+                                        axis=-1)
+    return jax.nn.sigmoid(e)   # low evidence -> high energy -> near 1
+
+
+def dirichlet_evidence(logits, clip: float = 10.0):
+    """Evidence-based uncertainty (survey §6).
+
+    alpha = 1 + exp(clip(logits)); S = sum(alpha).
+      * epistemic (vacuity)  u_ep = V / S           (little total evidence)
+      * aleatoric            u_al = E[H(p)] / log V  (conflicting evidence)
+    Returns dict {"epistemic", "aleatoric", "total"}.
+    """
+    V = logits.shape[-1]
+    l = jnp.clip(logits.astype(jnp.float32), -clip, clip)
+    alpha = 1.0 + jnp.exp(l)
+    S = jnp.sum(alpha, axis=-1)
+    u_ep = V / S
+    # expected entropy of Categorical(p), p ~ Dir(alpha):
+    # E[H] = -sum_k alpha_k/S * (digamma(alpha_k+1) - digamma(S+1))
+    dg = jax.scipy.special.digamma
+    e_h = -jnp.sum(alpha / S[..., None] * (dg(alpha + 1.0) - dg(S[..., None] + 1.0)),
+                   axis=-1)
+    u_al = e_h / jnp.log(V)
+    return {"epistemic": u_ep, "aleatoric": u_al,
+            "total": jnp.clip(u_ep + u_al, 0.0, 2.0) / 2.0}
+
+
+ESTIMATORS = {
+    "max_prob": max_prob,
+    "entropy": entropy,
+    "margin": margin,
+    "energy": energy,
+    "dirichlet": lambda l: dirichlet_evidence(l)["total"],
+}
+
+
+def get_estimator(name: str):
+    if name not in ESTIMATORS:
+        raise KeyError(f"unknown estimator {name!r}; known: {sorted(ESTIMATORS)}")
+    return ESTIMATORS[name]

@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLM, batches, dirichlet_clients  # noqa: F401

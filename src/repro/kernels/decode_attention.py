@@ -1,0 +1,98 @@
+"""GQA decode attention Pallas TPU kernel (flash-decoding style).
+
+The serving hot loop: ONE query token per sequence against a long KV cache
+(32k / 500k).  Memory-bound — the kernel's job is to stream the cache
+through VMEM exactly once at full HBM bandwidth.
+
+Layout: q (B, Kv, G, hd) — the G = H/Kv query heads of one kv head are a
+(G, hd) tile that rides the MXU against each (BS, hd) kv block.
+``length`` (B,) masks the valid cache prefix (cache positions >= length are
+garbage/unwritten); window w restricts to the trailing w entries.
+
+Grid: (B, Kv, S//BS) — last axis sequential with running max/denominator in
+VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bs: int, ns: int, window: int, scale: float):
+    isb = pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)             # (BS, hd)
+    v = v_ref[0, 0].astype(jnp.float32)             # (BS, hd)
+    s = (q @ k.T) * scale                            # (G, BS)
+
+    length = len_ref[0]
+    k_pos = isb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    mask = k_pos < length
+    if window:
+        mask = mask & (k_pos >= length - window)
+    s = jnp.where(mask[None, :], s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(isb == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bs", "interpret"))
+def decode_attention(q, k, v, length, *, window: int = 0, bs: int = 512,
+                     interpret: bool = False):
+    """q: (B, Kv, G, hd); k,v: (B, Kv, S, hd); length: (B,) int32 — number of
+    valid cache entries (the query attends to positions < length).
+    Returns (B, Kv, G, hd)."""
+    B, Kv, G, hd = q.shape
+    S = k.shape[2]
+    bs = min(bs, S)
+    assert S % bs == 0
+    ns = S // bs
+    scale = 1.0 / np.sqrt(hd)
+
+    kern = functools.partial(_kernel, bs=bs, ns=ns, window=window, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, Kv, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, i: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, g, i: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, g, i: (b, g, i, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, g, i: (b, g, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, g, i: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU they compile to
+Mosaic.  ``use_pallas()`` is the global switch the model code consults.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.spec_verify import spec_verify as _verify
+from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                  interpret=on_cpu())
+
+
+def decode_attention(q, k, v, length, *, window=0, bs=512):
+    return _decode(q, k, v, length, window=window, bs=bs, interpret=on_cpu())
+
+
+def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,
+                temperature=1.0):
+    return _verify(rng, target_logits, draft_logits, draft_tokens,
+                   temperature=temperature, interpret=on_cpu())
+
+
+def ssd_chunk_scan(q, k, v, log_a, log_i, *, chunk=128):
+    return _ssd(q, k, v, log_a, log_i, chunk=chunk, interpret=on_cpu())

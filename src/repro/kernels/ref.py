@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q,k,v: (B,H,S,hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = k_pos <= q_pos
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length, *, window: int = 0):
+    """q: (B,Kv,G,hd); k,v: (B,Kv,S,hd); length: (B,)."""
+    B, Kv, G, hd = q.shape
+    S = k.shape[2]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    k_pos = jnp.arange(S)[None, :]
+    mask = k_pos < length[:, None]
+    if window:
+        mask = mask & (k_pos >= length[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def spec_verify_ref(rng, target_logits, draft_logits, draft_tokens, *,
+                    temperature: float = 1.0):
+    """Mirrors kernels.spec_verify exactly (same rng stream / tie-breaks)."""
+    gamma, V = draft_logits.shape
+    r_acc, r_res = jax.random.split(rng)
+    u_acc = jax.random.uniform(r_acc, (gamma + 1,))
+    u_res = jax.random.uniform(r_res, (gamma + 1,))
+
+    tl = target_logits.astype(jnp.float32)
+    ql = jnp.concatenate([draft_logits.astype(jnp.float32),
+                          jnp.zeros((1, V), jnp.float32)], axis=0)
+    if temperature == 0.0:
+        p = (tl >= jnp.max(tl, -1, keepdims=True)).astype(jnp.float32)
+        p = p / jnp.sum(p, -1, keepdims=True)
+        q = (ql >= jnp.max(ql, -1, keepdims=True)).astype(jnp.float32)
+        q = q / jnp.sum(q, -1, keepdims=True)
+    else:
+        p = jax.nn.softmax(tl / temperature, -1)
+        q = jax.nn.softmax(ql / temperature, -1)
+
+    toks = jnp.concatenate([jnp.asarray(draft_tokens, jnp.int32),
+                            jnp.zeros((1,), jnp.int32)])
+    p_tok = jnp.take_along_axis(p, toks[:, None], 1)[:, 0]
+    q_tok = jnp.take_along_axis(q, toks[:, None], 1)[:, 0]
+    accept = u_acc < jnp.minimum(p_tok / jnp.maximum(q_tok, 1e-20), 1.0)
+    n_acc = jnp.sum(jnp.cumprod(accept[:gamma].astype(jnp.int32)))
+
+    is_bonus = (jnp.arange(gamma + 1) == gamma)[:, None]
+    resid = jnp.clip(p - jnp.where(is_bonus, 0.0, 1.0) * q, 0.0, None)
+    tot = jnp.sum(resid, -1, keepdims=True)
+    resid = jnp.where(tot > 0, resid / jnp.maximum(tot, 1e-20), p)
+    cdf = jnp.cumsum(resid, axis=-1)
+    sel = jnp.sum((cdf < u_res[:, None]).astype(jnp.int32), axis=-1)
+    sel = jnp.minimum(sel, V - 1)
+    return n_acc, sel[n_acc]
+
+
+def ssd_chunk_scan_ref(q, k, v, log_a, log_i, *, chunk: int = 128):
+    """Delegates to the model-side oracle (zero initial state)."""
+    from repro.models.ssm import gla_chunked
+    y, den, m, _ = gla_chunked(q, k, v, log_a, log_i, chunk=chunk)
+    return y, den, m

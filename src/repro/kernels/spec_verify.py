@@ -1,0 +1,102 @@
+"""Fused speculative-verification Pallas kernel.
+
+Per draft position the verifier needs: softmax(p), softmax(q), the
+acceptance test p[tok]/q[tok] vs uniform, and inverse-CDF sampling from the
+residual max(p-q, 0).  Done naively that materializes several (gamma, V)
+f32 temporaries in HBM; fused, each logits row is read ONCE into VMEM and
+only scalars leave.  A vocab row (up to 257k x 4B = ~1MB) fits VMEM
+comfortably, so the tiling is one row per grid step.
+
+Grid: (gamma+1,). Outputs per row: accept flag (vs the supplied uniform),
+residual-sampled token, and the row's target top-1 (greedy path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tok_ref, u_acc_ref, u_res_ref, p_ref, q_ref,
+            accept_ref, resid_tok_ref, argmax_ref, *, temperature: float,
+            gamma: int):
+    i = pl.program_id(0)
+    pl_row = p_ref[0].astype(jnp.float32)           # (V,)
+    q_row = q_ref[0].astype(jnp.float32)            # (V,) (zeros row at i==gamma)
+    V = pl_row.shape[0]
+
+    if temperature == 0.0:
+        p = (pl_row >= jnp.max(pl_row)).astype(jnp.float32)
+        p = p / jnp.sum(p)
+        qq = (q_row >= jnp.max(q_row)).astype(jnp.float32)
+        qq = qq / jnp.sum(qq)
+    else:
+        pm = pl_row / temperature
+        p = jax.nn.softmax(pm)
+        qm = q_row / temperature
+        qq = jax.nn.softmax(qm)
+
+    tok = tok_ref[0]
+    p_tok = jnp.sum(jnp.where(jax.lax.iota(jnp.int32, V) == tok, p, 0.0))
+    q_tok = jnp.sum(jnp.where(jax.lax.iota(jnp.int32, V) == tok, qq, 0.0))
+    ratio = p_tok / jnp.maximum(q_tok, 1e-20)
+    accept_ref[0] = (u_acc_ref[0] < jnp.minimum(ratio, 1.0)).astype(jnp.int32)
+
+    # residual inverse-CDF sampling (bonus row i==gamma: q==0 -> resid = p)
+    is_bonus = i == gamma
+    resid = jnp.clip(p - jnp.where(is_bonus, 0.0, 1.0) * qq, 0.0, None)
+    total = jnp.sum(resid)
+    resid = jnp.where(total > 0, resid / jnp.maximum(total, 1e-20), p)
+    cdf = jnp.cumsum(resid)
+    sel = jnp.sum((cdf < u_res_ref[0]).astype(jnp.int32))
+    resid_tok_ref[0] = jnp.minimum(sel, V - 1)
+    argmax_ref[0] = jnp.argmax(p).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "interpret"))
+def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,
+                temperature: float = 1.0, interpret: bool = False):
+    """Fused equivalent of core.speculative.speculative_sample.
+
+    target_logits: (gamma+1, V); draft_logits: (gamma, V);
+    draft_tokens: (gamma,). Returns (n_accepted (), next_token ()).
+    """
+    gamma, V = draft_logits.shape
+    r_acc, r_res = jax.random.split(rng)
+    u_acc = jax.random.uniform(r_acc, (gamma + 1,))
+    u_res = jax.random.uniform(r_res, (gamma + 1,))
+    toks = jnp.concatenate([jnp.asarray(draft_tokens, jnp.int32),
+                            jnp.zeros((1,), jnp.int32)])
+    q_pad = jnp.concatenate([draft_logits.astype(jnp.float32),
+                             jnp.zeros((1, V), jnp.float32)], axis=0)
+
+    kern = functools.partial(_kernel, temperature=temperature, gamma=gamma)
+    accept, resid_tok, argmax_tok = pl.pallas_call(
+        kern,
+        grid=(gamma + 1,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, V), lambda i: (i, 0)),
+            pl.BlockSpec((1, V), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((gamma + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((gamma + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((gamma + 1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(toks, u_acc, u_res, target_logits.astype(jnp.float32), q_pad)
+
+    n_acc = jnp.sum(jnp.cumprod(accept[:gamma]))
+    next_token = resid_tok[n_acc]
+    return n_acc, next_token

@@ -1,0 +1,230 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE, so any
+scan-over-layers model under-reports flops/bytes/collectives by ~num_layers.
+This module re-derives the three roofline inputs from the optimized HLO text
+with call-graph multiplicities:
+
+    * flops        — 2 * prod(result dims) * prod(contracting dims) per dot
+                     (dots dominate; elementwise flops are ignored)
+    * bytes        — operand + result bytes of every non-fused top-level op
+                     (fusion internals don't touch HBM; approximate upper
+                     bound on unique-buffer traffic)
+    * collectives  — operand bytes per collective op, by type
+
+Multiplicities: ENTRY x1; while body/cond x known_trip_count; fusion/call/
+to_apply computations inherit the caller's multiplicity (flop-counted, not
+byte-counted for fusion internals).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_SINGLE_RE = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_CALLED_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_computations(rest: str):
+    out = list(_CALLED_SINGLE_RE.findall(rest))
+    for grp in _CALLED_BRANCH_RE.findall(rest):
+        out.extend(re.findall(r"%?([\w.\-]+)", grp))
+    return out
+_TRIP_RE = re.compile(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)')
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(dtype: str, dims: str) -> Tuple[int, int]:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(result_part: str) -> int:
+    return sum(_shape_elems_bytes(dt, dims)[1]
+               for dt, dims in _SHAPE_RE.findall(result_part))
+
+
+class Instruction:
+    __slots__ = ("name", "op", "result_part", "rest", "operands")
+
+    def __init__(self, name, op, result_part, rest, operands):
+        self.name = name
+        self.op = op
+        self.result_part = result_part
+        self.rest = rest
+        self.operands = operands
+
+
+def parse_module(text: str):
+    """Returns (computations: name -> [Instruction], entry_name)."""
+    comps: Dict[str, List[Instruction]] = {}
+    entry = None
+    current = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", s)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                if s.startswith("ENTRY"):
+                    entry = current
+            continue
+        if s.startswith("}"):
+            current = None
+            continue
+        if current is None or "=" not in s:
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # split result type part from op call:  "f32[2,3]{1,0} dot(...)"
+        call = re.search(r"\b([\w\-]+)\(", rhs)
+        if not call:
+            continue
+        op = call.group(1)
+        result_part = rhs[:call.start()]
+        rest = rhs[call.start():]
+        inner = rest[rest.index("(") + 1:]
+        depth = 1
+        end = 0
+        for i, ch in enumerate(inner):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = inner[:end]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        comps[current].append(Instruction(name, op, result_part,
+                                          rest, operands))
+    return comps, entry
+
+
+def _multiplicities(comps, entry) -> Tuple[Dict[str, float], set]:
+    """Computation -> execution count; plus the set of fusion-internal
+    computations (their ops don't touch HBM)."""
+    mult: Dict[str, float] = {}
+    fusion_internal = set()
+    stack = [(entry, 1.0)]
+    while stack:
+        comp, m = stack.pop()
+        if comp not in comps:
+            continue
+        mult[comp] = mult.get(comp, 0.0) + m
+        for ins in comps[comp]:
+            called = _called_computations(ins.rest)
+            if not called:
+                continue
+            if ins.op == "while":
+                t = _TRIP_RE.search(ins.rest)
+                trip = float(t.group(1)) if t else 1.0
+                for c in called:
+                    stack.append((c, m * trip))
+            elif ins.op == "fusion":
+                for c in called:
+                    fusion_internal.add(c)
+                    stack.append((c, m))
+            else:   # call / conditional / reduce to_apply / sort comparator
+                for c in called:
+                    fusion_internal.add(c) if ins.op in ("reduce", "sort",
+                                                         "scatter",
+                                                         "reduce-window") \
+                        else None
+                    stack.append((c, m))
+    return mult, fusion_internal
+
+
+def _symbol_table(instrs) -> Dict[str, str]:
+    return {i.name: i.result_part for i in instrs}
+
+
+def _dot_flops(ins: Instruction, sym: Dict[str, str]) -> float:
+    res = _SHAPE_RE.findall(ins.result_part)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for dt, dims in res[:1]:
+        out_elems, _ = _shape_elems_bytes(dt, dims)
+    m = _DOT_CONTRACT_RE.search(ins.rest)
+    contract = 1
+    if m and ins.operands:
+        lhs = ins.operands[0]
+        lhs_part = sym.get(lhs, "")
+        shp = _SHAPE_RE.findall(lhs_part)
+        # inline operand types take precedence if present in the call
+        inline = _SHAPE_RE.findall(ins.rest.split("(", 1)[1].split(")")[0])
+        if inline:
+            shp = inline[:1]
+        if shp:
+            dims = [int(d) for d in shp[0][1].split(",") if d]
+            for ci in (int(x) for x in m.group(1).split(",") if x):
+                if ci < len(dims):
+                    contract *= dims[ci]
+    return 2.0 * out_elems * contract
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    comps, entry = parse_module(text)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+    mult, fusion_internal = _multiplicities(comps, entry)
+
+    flops = 0.0
+    bytes_ = 0.0
+    coll: Dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    skip_bytes_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "after-all", "partition-id", "replica-id",
+                      "iota"}
+
+    for comp, instrs in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        sym = _symbol_table(instrs)
+        for ins in instrs:
+            if ins.op in ("dot", "dot-general"):
+                flops += m * _dot_flops(ins, sym)
+            if ins.op.rstrip("-start") in COLLECTIVES or any(
+                    ins.op == c or ins.op == c + "-start" for c in COLLECTIVES):
+                base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+                ob = sum(_result_bytes(sym.get(o, "")) for o in ins.operands)
+                if ob == 0:
+                    ob = _result_bytes(ins.result_part)
+                coll[base] = coll.get(base, 0.0) + m * ob
+            if comp in fusion_internal or ins.op in skip_bytes_ops \
+                    or ins.op.endswith("-done"):
+                continue
+            if ins.op == "dynamic-update-slice":
+                # XLA updates in place (buffer aliasing): traffic is the
+                # update operand read + slice write, NOT the full buffer.
+                upd = _result_bytes(sym.get(ins.operands[1], "")) \
+                    if len(ins.operands) > 1 else 0
+                bytes_ += m * 2 * upd
+                continue
+            if ins.op in ("dynamic-slice", "slice", "gather"):
+                # reads only the slice (= result), writes it once.
+                bytes_ += m * 2 * _result_bytes(ins.result_part)
+                continue
+            ob = sum(_result_bytes(sym.get(o, "")) for o in ins.operands)
+            bytes_ += m * (_result_bytes(ins.result_part) + ob)
+
+    out = {"flops": flops, "bytes": bytes_,
+           "collective_bytes": sum(coll.values())}
+    out.update({f"coll_{k}": v for k, v in coll.items()})
+    return out

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 v5e chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — "pod" is
+extra data parallelism across the DCI/ICI boundary (and models the survey's
+cloud/edge pool boundary for the collaborative engine).
+
+Functions, not module constants: importing this module must not touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2):
+    """Tiny mesh for CPU tests (requires xla_force_host_platform_device_count
+    >= data*model in the test process)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def mesh_devices(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,180 @@
+"""Sharding rules: params / optimizer / batches / caches -> PartitionSpecs.
+
+Policy (single pod, axes (data, model); multi-pod prepends "pod" to the
+batch axes):
+  * params: FSDP over "data" on the d_model-ish dim + tensor parallel over
+    "model" on heads/d_ff/vocab; MoE experts over "model" (expert
+    parallelism, matching the shard_map in moe.py); tiny leaves replicated.
+  * batches: leading batch dim over ("pod","data") when divisible.
+  * KV caches: batch over data axes; kv-heads over "model" when divisible,
+    else the sequence dim; recurrent states shard their head dim.
+
+Every rule checks divisibility and falls back to replication — a sharding
+that does not divide is a silent correctness/perf bug, so the fallback is
+logged via the returned spec itself (visible in the dry-run report).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# leaf-name classes
+_DOWN = ("wo", "w_down", "out_proj")
+_UP = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_q", "w_k", "w_v",
+       "w_gates", "w_i", "w_f")
+_EMBED = ("embed", "lm_head")
+_REPLICATE = ("router", "g_bias", "f_bias", "A_log", "dt_bias", "D",
+              "alpha", "enc_pos", "dec_pos", "out_norm", "r_gates")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+def param_spec(path, leaf, mesh, cfg=None) -> P:
+    name = _path_str(path).split("/")[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    if nd <= 1 or name in _REPLICATE:
+        return P()
+    # Head-aware TP (perf iteration #2, EXPERIMENTS.md §Perf): sharding an
+    # attention projection over 'model' is only clean when the head count
+    # divides the axis; otherwise the (B,S,H,hd) reshape crosses shard
+    # boundaries and XLA replicates the attention compute.  Fall back to
+    # FSDP-only for misaligned head counts.
+    if cfg is not None and name in ("wq", "wk", "wv", "wo"):
+        heads = cfg.num_heads if name in ("wq", "wo") else cfg.num_kv_heads
+        if heads % mesh.shape.get("model", 1) != 0:
+            spec = [None] * nd
+            d_dim = nd - 2 if name in ("wq", "wk", "wv") else nd - 1
+            if _div(shape[d_dim], mesh, "data"):
+                spec[d_dim] = "data"
+            return P(*spec)
+    if name in _EMBED:
+        return P(*( ["model" if _div(shape[0], mesh, "model") else None]
+                   + [None] * (nd - 1)))
+    # expert weights (..., E, d, f) detected by moe path
+    if "moe" in _path_str(path) and nd >= 3 and name in ("w_gate", "w_up", "w_down"):
+        spec = [None] * nd
+        e_dim = nd - 3
+        if _div(shape[e_dim], mesh, "model"):
+            spec[e_dim] = "model"
+        return P(*spec)
+    if name in _DOWN:
+        spec = [None] * nd
+        if _div(shape[-2], mesh, "model"):
+            spec[-2] = "model"
+        if _div(shape[-1], mesh, "data"):
+            spec[-1] = "data"
+        return P(*spec)
+    if name in _UP or nd >= 2:
+        spec = [None] * nd
+        if _div(shape[-2], mesh, "data"):
+            spec[-2] = "data"
+        if _div(shape[-1], mesh, "model"):
+            spec[-1] = "model"
+        return P(*spec)
+    return P()
+
+
+def params_shardings(params, mesh, cfg=None):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh,
+                                         param_spec(path, leaf, mesh, cfg)),
+        params)
+
+
+def params_specs(params, mesh, cfg=None):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh, cfg), params)
+
+
+# ---------------------------------------------------------------- batches
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_spec(shape, mesh) -> P:
+    dp = batch_axes(mesh)
+    if shape and shape[0] % _dp_size(mesh) == 0:
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch, mesh):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)), batch)
+
+
+# ---------------------------------------------------------------- caches
+def cache_spec(path, leaf, mesh, cfg) -> P:
+    """KV caches / recurrent states (see module docstring)."""
+    name = _path_str(path).split("/")[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    dp = batch_axes(mesh)
+    if nd == 0 or name == "pos":
+        return P()
+    spec = [None] * nd
+
+    if cfg.family in ("dense", "moe", "vlm", "encdec") or name in ("k", "v", "ck", "cv"):
+        # (L|G, B, S, Kv, hd).  Preference: kv-heads over 'model'; else the
+        # HEAD DIM (perf iteration #3, EXPERIMENTS.md §Perf: sequence-dim
+        # sharding makes the per-step dynamic-update-slice a cross-shard op
+        # and XLA falls back to full rematerialization of the cache).
+        if nd == 5:
+            if shape[1] % _dp_size(mesh) == 0:
+                spec[1] = dp
+            if _div(shape[3], mesh, "model"):
+                spec[3] = "model"
+            elif _div(shape[4], mesh, "model"):
+                spec[4] = "model"
+            return P(*spec)
+
+    # recurrent states: find the batch dim (matches known B) then shard the
+    # largest remaining dim over "model" if divisible.
+    b_dim = None
+    for i, s in enumerate(shape):
+        if s == getattr(cfg, "_runtime_batch", -1):
+            b_dim = i
+            break
+    if b_dim is not None and shape[b_dim] % _dp_size(mesh) == 0:
+        spec[b_dim] = dp
+    rest = [(s, i) for i, s in enumerate(shape) if i != b_dim and spec[i] is None]
+    rest.sort(reverse=True)
+    for s, i in rest:
+        if _div(s, mesh, "model"):
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(cache, mesh, cfg, batch_size: int):
+    object.__setattr__(cfg, "_runtime_batch", batch_size)
+    out = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh, cfg)),
+        cache)
+    return out

@@ -1,0 +1,68 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 --batch 8 --seq 128 --reduced
+
+On real hardware drop --reduced and pass --mesh to train the full config on
+the production mesh (the dry-run validates those graphs in this container).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro import runtime
+from repro.configs import get_config
+from repro.data import batches
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model
+from repro.training import AdamW, cosine_schedule, train
+from repro.training.checkpoint import save
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params ({'reduced' if args.reduced else 'full'})")
+
+    opt = AdamW(lr=args.lr, schedule=cosine_schedule(args.steps // 10, args.steps))
+    it = batches(cfg, args.batch, args.seq)
+
+    ctx = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        ctx = runtime.mesh_context(mesh)
+        ctx.__enter__()
+        params = jax.device_put(params, SH.params_shardings(params, mesh))
+
+    res = train(model, params, it, steps=args.steps, opt=opt, remat=args.remat)
+    if ctx is not None:
+        ctx.__exit__(None, None, None)
+    if args.save:
+        save(args.save, res["params"], step=args.steps)
+        print(f"saved to {args.save}")
+
+
+if __name__ == "__main__":
+    main()

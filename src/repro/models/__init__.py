@@ -1,0 +1,1 @@
+from repro.models.model import Model, cross_entropy, example_batch  # noqa: F401

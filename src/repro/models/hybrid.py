@@ -1,0 +1,197 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): Mamba2 backbone + one *shared*
+attention+MLP block applied after every ``shared_attn_every`` mamba layers.
+The shared block's weights are reused at each application (true to Zamba2),
+but each application keeps its own KV cache slot.
+
+Layer stacking: the 54 mamba layers are stacked (G groups x K layers) and
+consumed with a nested lax.scan so the HLO stays one-mamba-layer sized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _dims(cfg):
+    K = cfg.shared_attn_every
+    G = cfg.num_layers // K
+    assert G * K == cfg.num_layers
+    return G, K
+
+
+def init_params(rng, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    r = L.split(rng, cfg.num_layers + 4)
+    mamba = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[S.init_mamba2(r[i], cfg, dtype)
+                           for i in range(cfg.num_layers)])
+    G, K = _dims(cfg)
+    mamba = jax.tree.map(lambda x: x.reshape((G, K) + x.shape[1:]), mamba)
+    rs = L.split(r[-4], 3)
+    shared = {
+        "attn_norm": jnp.zeros((cfg.d_model,), dtype),
+        "attn": L.init_attention(rs[0], cfg, dtype),
+        "mlp_norm": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": L.init_mlp(rs[1], cfg, dtype),
+    }
+    return {
+        "embed": L.init_embedding(r[-3], cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": mamba,
+        "shared": shared,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def forward(params, tokens, cfg, *, window: int = 0, remat: bool = False,
+            collect_hidden: bool = False):
+    h = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    B, Sq, d = h.shape
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    win = window or cfg.sliding_window
+    shared = params["shared"]
+
+    def group(h, mamba_group):
+        h = runtime.shard_activation(h)
+
+        def one_mamba(hh, p):
+            out, _st = S.mamba2_forward(p, hh, cfg)
+            return hh + out, jnp.zeros((), hh.dtype)
+        h, _ = jax.lax.scan(one_mamba, h, mamba_group)
+        a, _kv = L.attention_block(
+            shared["attn"], L.rmsnorm(h, shared["attn_norm"], cfg.norm_eps),
+            positions, cfg, window=win)
+        h = h + a
+        m = L.mlp_block(shared["mlp"], L.rmsnorm(h, shared["mlp_norm"], cfg.norm_eps),
+                        cfg.mlp_activation)
+        h = h + m
+        return h, (h if collect_hidden else jnp.zeros((), h.dtype))
+
+    if remat:
+        group = jax.checkpoint(group,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    h, hs = jax.lax.scan(group, h, params["mamba"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)
+    if collect_hidden:
+        return logits, jnp.float32(0.0), hs
+    return logits, jnp.float32(0.0)
+
+
+# ----------------------------------------------------------------- cache
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    G, K = _dims(cfg)
+    base = S.mamba2_init_cache(cfg, batch)
+    mamba = jax.tree.map(lambda x: jnp.zeros((G, K) + x.shape, x.dtype), base)
+    # running-max needs -inf init, not zeros:
+    mamba["gla"] = S.GLAState(mamba["gla"].S, mamba["gla"].n,
+                              jnp.full(mamba["gla"].m.shape, -1e30, jnp.float32))
+    kv_shape = (G, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "mamba": mamba,
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg, *, max_seq=None, window: int = 0):
+    h = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    B, Sq, d = h.shape
+    max_seq = max_seq or Sq
+    positions = jnp.arange(Sq, dtype=jnp.int32)
+    win = window or cfg.sliding_window
+    shared = params["shared"]
+
+    def group(h, mamba_group):
+        h = runtime.shard_activation(h)
+
+        def one_mamba(hh, p):
+            out, st = S.mamba2_forward(p, hh, cfg)
+            return hh + out, st
+        h, sts = jax.lax.scan(one_mamba, h, mamba_group)
+        a, (k, v) = L.attention_block(
+            shared["attn"], L.rmsnorm(h, shared["attn_norm"], cfg.norm_eps),
+            positions, cfg, window=win)
+        h = h + a
+        h = h + L.mlp_block(shared["mlp"], L.rmsnorm(h, shared["mlp_norm"], cfg.norm_eps),
+                            cfg.mlp_activation)
+        return h, (sts, k, v)
+
+    h, (mamba_states, ks, vs) = jax.lax.scan(group, h, params["mamba"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], h[:, -1, :])
+    pad = max_seq - Sq
+    if pad > 0:
+        zp = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, zp), jnp.pad(vs, zp)
+    dtype = jnp.dtype(cfg.param_dtype)
+    cache = {"mamba": mamba_states, "k": ks.astype(dtype), "v": vs.astype(dtype),
+             "pos": jnp.asarray(Sq, jnp.int32)}
+    return logits, cache
+
+
+def extend_step(params, tokens, cache, cfg, *, window: int = 0):
+    """Multi-token cached decode. tokens (B,T) -> (logits (B,T,V), cache)."""
+    h = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    pos = cache["pos"]
+    T = tokens.shape[1]
+    shared = params["shared"]
+
+    def group(h, xs):
+        mamba_group, mstate, ck, cv = xs
+        h = runtime.shard_activation(h)
+
+        def one_mamba(hh, xs2):
+            p, st = xs2
+            out, st = S.mamba2_forward(p, hh, cfg, cache=st)
+            return hh + out, st
+        h, msts = jax.lax.scan(one_mamba, h, (mamba_group, mstate))
+        hn = L.rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.extend_attention(shared["attn"], hn, ck, cv, pos, cfg,
+                                       window=window or cfg.sliding_window)
+        h = h + a
+        h = h + L.mlp_block(shared["mlp"], L.rmsnorm(h, shared["mlp_norm"], cfg.norm_eps),
+                            cfg.mlp_activation)
+        return h, (msts, ck, cv)
+
+    h, (msts, ks, vs) = jax.lax.scan(
+        group, h, (params["mamba"], cache["mamba"], cache["k"], cache["v"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)
+    return logits, {"mamba": msts, "k": ks, "v": vs,
+                    "pos": pos + jnp.asarray(T, jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg, *, window: int = 0):
+    h = L.embed(params["embed"], token).astype(jnp.dtype(cfg.activ_dtype))
+    pos = cache["pos"]
+    shared = params["shared"]
+
+    def group(h, xs):
+        mamba_group, mstate, ck, cv = xs
+        h = runtime.shard_activation(h)
+
+        def one_mamba(carry, xs2):
+            hh = carry
+            p, st = xs2
+            out, st = S.mamba2_step(p, hh, st, cfg)
+            return hh + out, st
+        h, msts = jax.lax.scan(one_mamba, h, (mamba_group, mstate))
+        hn = L.rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.decode_attention(shared["attn"], hn, ck, cv, pos, cfg,
+                                       window=window or cfg.sliding_window)
+        h = h + a
+        h = h + L.mlp_block(shared["mlp"], L.rmsnorm(h, shared["mlp_norm"], cfg.norm_eps),
+                            cfg.mlp_activation)
+        return h, (msts, ck, cv)
+
+    h, (msts, ks, vs) = jax.lax.scan(
+        group, h, (params["mamba"], cache["mamba"], cache["k"], cache["v"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], h[:, 0, :])
+    return logits, {"mamba": msts, "k": ks, "v": vs, "pos": pos + 1}

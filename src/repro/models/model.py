@@ -1,0 +1,184 @@
+"""Unified model API over all architecture families.
+
+    m = Model(cfg)
+    params = m.init(rng)
+    logits, aux = m.forward(params, batch)          # teacher-forced
+    loss = m.loss(params, batch)
+    logits, cache = m.prefill(params, batch)
+    logits, cache = m.decode_step(params, token, cache)
+
+``batch`` is a dict: {"tokens", "labels"?, "frames"? (encdec stub),
+"embeds"? (vlm stub)}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer, xlstm
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """logits (B,S,V) f32; labels (B,S) int32. Mean over non-ignored."""
+    mask = (labels != ignore)
+    lab = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.init_params(rng, cfg)
+        if cfg.family == "ssm":
+            return xlstm.init_params(rng, cfg)
+        if cfg.family == "hybrid":
+            return hybrid.init_params(rng, cfg)
+        if cfg.family == "encdec":
+            return encdec.init_params(rng, cfg)
+        raise ValueError(cfg.family)
+
+    # ---------------------------------------------------------------- fwd
+    def forward(self, params, batch: Dict, *, window: int = 0,
+                remat: bool = False, collect_hidden: bool = False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family in ("dense", "moe"):
+            return transformer.forward(params, tokens, cfg, window=window,
+                                       remat=remat, collect_hidden=collect_hidden)
+        if cfg.family == "vlm":
+            return transformer.forward(params, tokens, cfg, embeds=batch["embeds"],
+                                       window=window, remat=remat,
+                                       collect_hidden=collect_hidden)
+        if cfg.family == "ssm":
+            return xlstm.forward(params, tokens, cfg, remat=remat,
+                                 collect_hidden=collect_hidden)
+        if cfg.family == "hybrid":
+            return hybrid.forward(params, tokens, cfg, window=window, remat=remat,
+                                  collect_hidden=collect_hidden)
+        if cfg.family == "encdec":
+            return encdec.forward(params, tokens, cfg, frames=batch["frames"],
+                                  remat=remat, collect_hidden=collect_hidden)
+        raise ValueError(cfg.family)
+
+    def loss(self, params, batch: Dict, *, window: int = 0, remat: bool = False):
+        out = self.forward(params, batch, window=window, remat=remat)
+        logits, aux = out[0], out[1]
+        labels = batch["labels"]
+        if self.cfg.family == "vlm":
+            # image-prefix positions carry no next-token loss
+            P = batch["embeds"].shape[1]
+            logits = logits[:, P:, :]
+        return cross_entropy(logits[:, :-1, :], labels[:, 1:]) + aux
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_seq: int):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.init_cache(cfg, batch_size, max_seq)
+        if cfg.family == "ssm":
+            return xlstm.init_cache(cfg, batch_size)
+        if cfg.family == "hybrid":
+            return hybrid.init_cache(cfg, batch_size, max_seq)
+        if cfg.family == "encdec":
+            return encdec.init_cache(cfg, batch_size, max_seq)
+        raise ValueError(cfg.family)
+
+    def prefill(self, params, batch: Dict, *, max_seq: Optional[int] = None,
+                window: int = 0):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family in ("dense", "moe"):
+            return transformer.prefill(params, tokens, cfg, max_seq=max_seq,
+                                       window=window)
+        if cfg.family == "vlm":
+            return transformer.prefill(params, tokens, cfg, max_seq=max_seq,
+                                       embeds=batch["embeds"], window=window)
+        if cfg.family == "ssm":
+            return xlstm.prefill(params, tokens, cfg)
+        if cfg.family == "hybrid":
+            return hybrid.prefill(params, tokens, cfg, max_seq=max_seq,
+                                  window=window)
+        if cfg.family == "encdec":
+            return encdec.prefill(params, tokens, cfg, frames=batch["frames"],
+                                  max_seq=max_seq)
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, token, cache, *, window: int = 0):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.decode_step(params, token, cache, cfg, window=window)
+        if cfg.family == "ssm":
+            return xlstm.decode_step(params, token, cache, cfg)
+        if cfg.family == "hybrid":
+            return hybrid.decode_step(params, token, cache, cfg, window=window)
+        if cfg.family == "encdec":
+            return encdec.decode_step(params, token, cache, cfg)
+        raise ValueError(cfg.family)
+
+    def extend_step(self, params, tokens, cache, *, window: int = 0,
+                    block_mask=None, q_positions=None):
+        """Multi-token cached decode (chunked prefill, speculative verify).
+        tokens (B,T) -> (logits (B,T,V), cache).  ``block_mask`` is only
+        supported for attention-based decoders (token trees); SSM/hybrid
+        recurrences are inherently linear-order (see DESIGN.md)."""
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.extend_step(params, tokens, cache, cfg,
+                                           window=window, block_mask=block_mask,
+                                           q_positions=q_positions)
+        if block_mask is not None or q_positions is not None:
+            raise ValueError(f"block_mask unsupported for family {cfg.family}")
+        if cfg.family == "ssm":
+            return xlstm.extend_step(params, tokens, cache, cfg)
+        if cfg.family == "hybrid":
+            return hybrid.extend_step(params, tokens, cache, cfg, window=window)
+        if cfg.family == "encdec":
+            return encdec.extend_step(params, tokens, cache, cfg)
+        raise ValueError(cfg.family)
+
+    @property
+    def rewindable_cache(self) -> bool:
+        """True if the cache can be rolled back by resetting ``pos`` (KV
+        caches); False for recurrent state (SSM/hybrid), which needs
+        snapshot + replay on speculative rejection."""
+        return self.cfg.family in ("dense", "moe", "vlm", "encdec")
+
+    def rewind(self, cache, new_pos):
+        assert self.rewindable_cache
+        return {**cache, "pos": jnp.asarray(new_pos, jnp.int32)}
+
+
+# ---------------------------------------------------------------- batches
+def example_batch(cfg: ModelConfig, batch: int, seq: int, rng=None,
+                  with_labels: bool = True) -> Dict:
+    """Concrete random batch matching input_specs layout (smoke tests)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    out: Dict = {}
+    s_text = seq
+    if cfg.family == "vlm":
+        s_text = max(seq - cfg.num_image_tokens, 8)
+        out["embeds"] = jax.random.normal(
+            r2, (batch, cfg.num_image_tokens, cfg.d_model),
+            dtype=jnp.dtype(cfg.activ_dtype))
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            r2, (batch, cfg.encoder_seq, cfg.d_model),
+            dtype=jnp.dtype(cfg.activ_dtype))
+    out["tokens"] = jax.random.randint(r1, (batch, s_text), 0, cfg.vocab_size,
+                                       dtype=jnp.int32)
+    if with_labels:
+        out["labels"] = jax.random.randint(r3, (batch, s_text), 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+    return out

@@ -1,0 +1,284 @@
+"""xLSTM (arXiv:2405.04517): alternating mLSTM and sLSTM blocks.
+
+* mLSTM: matrix-memory LSTM with exponential input gating — mathematically a
+  gated linear attention; we reuse the stabilized chunked GLA engine from
+  ``ssm.py`` (parallel/chunked form for train+prefill, O(1)-state recurrent
+  form for decode).
+* sLSTM: scalar-memory LSTM with memory mixing (recurrent matrices) —
+  inherently sequential; implemented with ``lax.scan`` over time.
+
+d_ff = 0 in the assigned config: blocks carry their own up/down projections
+(mLSTM proj factor 2, sLSTM GLU factor 4/3), so there is no separate MLP.
+The model has only 12 layers, so layers are a Python loop (no param
+stacking needed; HLO stays small because each block is compact).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (dense_init, embed, groupnorm_heads, rmsnorm,
+                                 split, unembed)
+from repro.models.ssm import (GLAState, gla_chunked, gla_step, init_gla_state)
+from repro import runtime
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def is_slstm(cfg, layer: int) -> bool:
+    k = cfg.xlstm_slstm_every
+    return bool(k) and (layer % k == k - 1)
+
+
+# ----------------------------------------------------------------- mLSTM
+def _mlstm_dims(cfg):
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    return di, H, hd
+
+
+def init_mlstm(rng, cfg, dtype):
+    d = cfg.d_model
+    di, H, hd = _mlstm_dims(cfg)
+    r = split(rng, 8)
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        "w_up": dense_init(r[0], (d, 2 * di), dtype=dtype),
+        "w_q": dense_init(r[1], (di, di), dtype=dtype),
+        "w_k": dense_init(r[2], (di, di), dtype=dtype),
+        "w_v": dense_init(r[3], (di, di), dtype=dtype),
+        "w_i": dense_init(r[4], (di, H), dtype=jnp.float32),
+        "w_f": dense_init(r[5], (di, H), dtype=jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "out_norm": jnp.ones((H, hd), jnp.float32),
+        "w_down": dense_init(r[6], (di, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkvif(p, xi, cfg):
+    B, S, di = xi.shape
+    _, H, hd = _mlstm_dims(cfg)
+    q = (xi @ p["w_q"]).reshape(B, S, H, hd) / np.sqrt(hd)
+    k = (xi @ p["w_k"]).reshape(B, S, H, hd)
+    v = (xi @ p["w_v"]).reshape(B, S, H, hd)
+    log_i = xi.astype(jnp.float32) @ p["w_i"]                        # exp gate
+    log_f = jax.nn.log_sigmoid(xi.astype(jnp.float32) @ p["w_f"] + p["f_bias"])
+    return q, k, v, log_i, log_f
+
+
+def mlstm_forward(p, x, cfg, *, chunk: int = 0, state: GLAState = None):
+    """x: (B,S,d) -> (y, final GLAState)."""
+    B, S, d = x.shape
+    di, H, hd = _mlstm_dims(cfg)
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, xi, cfg)
+    ck = chunk or cfg.ssm_chunk
+    y, den, m, st = gla_chunked(q, k, v, log_f, log_i, chunk=ck, state=state)
+    y = y / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]        # mLSTM denom
+    y = groupnorm_heads(y, p["out_norm"], cfg.norm_eps)
+    y = y.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
+    return x + y @ p["w_down"], st
+
+
+def mlstm_init_cache(cfg, batch: int):
+    di, H, hd = _mlstm_dims(cfg)
+    return init_gla_state(batch, H, hd, hd)
+
+
+def mlstm_step(p, x, state: GLAState, cfg):
+    """x: (B,1,d)."""
+    B, _, d = x.shape
+    di, H, hd = _mlstm_dims(cfg)
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, xi, cfg)
+    y, den, m, st = gla_step(q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], log_i[:, 0], state)
+    y = y / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+    y = groupnorm_heads(y, p["out_norm"], cfg.norm_eps)
+    y = y.reshape(B, 1, di).astype(x.dtype) * jax.nn.silu(z)
+    return x + y @ p["w_down"], st
+
+
+# ----------------------------------------------------------------- sLSTM
+def init_slstm(rng, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    f = int(d * 4 / 3) // 8 * 8
+    r = split(rng, 5)
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        "w_gates": dense_init(r[0], (d, 4 * d), dtype=jnp.float32),
+        "r_gates": dense_init(r[1], (H, hd, 4 * hd), scale=1.0, dtype=jnp.float32),
+        "g_bias": jnp.concatenate([
+            jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "out_norm": jnp.ones((H, hd), jnp.float32),
+        "w_up": dense_init(r[2], (d, 2 * f), dtype=dtype),
+        "w_down": dense_init(r[3], (f, d), dtype=dtype),
+    }
+
+
+def slstm_init_cache(cfg, batch: int):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, xg, st, cfg):
+    """One time step. xg: (B, 4d) pre-computed input gates; st: state dict."""
+    B = xg.shape[0]
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    rec = jnp.einsum("bhi,hij->bhj", st["h"], p["r_gates"])          # (B,H,4hd)
+    g = xg.reshape(B, H, 4 * hd) + rec + p["g_bias"].reshape(H, 4 * hd)
+    zt, ft, it, ot = jnp.split(g, 4, axis=-1)                        # (B,H,hd)
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + st["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(log_f + st["m"] - m_new)
+    c = f_p * st["c"] + i_p * zt
+    n = f_p * st["n"] + i_p
+    h = ot * c / jnp.maximum(jnp.abs(n), 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(p, x, cfg, state=None):
+    """x: (B,S,d) -> (y, final_state). Sequential scan over time."""
+    B, S, d = x.shape
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xg = xn.astype(jnp.float32) @ p["w_gates"]                        # (B,S,4d)
+    st = state or slstm_init_cache(cfg, B)
+
+    def body(st, xg_t):
+        st = _slstm_cell(p, xg_t, st, cfg)
+        return st, st["h"]
+
+    st, hs = jax.lax.scan(body, st, xg.swapaxes(0, 1))                # scan time
+    hs = hs.swapaxes(0, 1)                                            # (B,S,H,hd)
+    y = groupnorm_heads(hs, p["out_norm"], cfg.norm_eps).reshape(B, S, d)
+    y = y.astype(x.dtype)
+    g, u = jnp.split(y @ p["w_up"], 2, axis=-1)
+    y = (jax.nn.gelu(g) * u) @ p["w_down"]
+    return x + y, st
+
+
+def slstm_step(p, x, state, cfg):
+    B, _, d = x.shape
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xg = (xn.astype(jnp.float32) @ p["w_gates"])[:, 0]
+    st = _slstm_cell(p, xg, state, cfg)
+    H = cfg.num_heads
+    y = groupnorm_heads(st["h"], p["out_norm"], cfg.norm_eps).reshape(B, 1, d)
+    y = y.astype(x.dtype)
+    g, u = jnp.split(y @ p["w_up"], 2, axis=-1)
+    y = (jax.nn.gelu(g) * u) @ p["w_down"]
+    return x + y, st
+
+
+# ----------------------------------------------------------------- model
+def init_params(rng, cfg):
+    dtype = _dt(cfg)
+    r = split(rng, cfg.num_layers + 2)
+    blocks: List[dict] = []
+    for l in range(cfg.num_layers):
+        if is_slstm(cfg, l):
+            blocks.append(init_slstm(r[l], cfg, dtype))
+        else:
+            blocks.append(init_mlstm(r[l], cfg, dtype))
+    from repro.models.layers import init_embedding
+    return {
+        "embed": init_embedding(r[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def forward(params, tokens, cfg, *, remat: bool = False,
+            collect_hidden: bool = False):
+    h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    hiddens = []
+    for l, p in enumerate(params["blocks"]):
+        h = runtime.shard_activation(h)
+        if is_slstm(cfg, l):
+            fn = lambda pp, hh: slstm_forward(pp, hh, cfg)
+        else:
+            fn = lambda pp, hh: mlstm_forward(pp, hh, cfg)
+        if remat:
+            fn = jax.checkpoint(fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        h, _ = fn(p, h)
+        if collect_hidden:
+            hiddens.append(h)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h)
+    if collect_hidden:
+        return logits, jnp.float32(0.0), jnp.stack(hiddens)
+    return logits, jnp.float32(0.0)
+
+
+def init_cache(cfg, batch: int):
+    cache = []
+    for l in range(cfg.num_layers):
+        if is_slstm(cfg, l):
+            cache.append(slstm_init_cache(cfg, batch))
+        else:
+            cache.append(mlstm_init_cache(cfg, batch))
+    return {"layers": cache, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cfg):
+    """Returns (last-token logits (B,V), cache with final recurrent states)."""
+    h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    states = []
+    for l, p in enumerate(params["blocks"]):
+        h = runtime.shard_activation(h)
+        if is_slstm(cfg, l):
+            h, st = slstm_forward(p, h, cfg)
+        else:
+            h, st = mlstm_forward(p, h, cfg)
+        states.append(st)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, -1, :])
+    return logits, {"layers": states, "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def extend_step(params, tokens, cache, cfg):
+    """Multi-token cached decode: tokens (B,T). Returns (logits (B,T,V), cache)."""
+    h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+    states = []
+    for l, (p, st) in enumerate(zip(params["blocks"], cache["layers"])):
+        if is_slstm(cfg, l):
+            h, st = slstm_forward(p, h, cfg, state=st)
+        else:
+            h, st = mlstm_forward(p, h, cfg, state=st)
+        states.append(st)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h)
+    return logits, {"layers": states,
+                    "pos": cache["pos"] + jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg):
+    h = embed(params["embed"], token).astype(jnp.dtype(cfg.activ_dtype))
+    new_states = []
+    for l, (p, st) in enumerate(zip(params["blocks"], cache["layers"])):
+        if is_slstm(cfg, l):
+            h, st = slstm_step(p, h, st, cfg)
+        else:
+            h, st = mlstm_step(p, h, st, cfg)
+        new_states.append(st)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h[:, 0, :])
+    return logits, {"layers": new_states, "pos": cache["pos"] + 1}

@@ -1,0 +1,68 @@
+"""Runtime distribution context.
+
+Model code is mesh-agnostic by default; the launcher installs a mesh context
+so layers that need EXPLICIT distribution (shard_map expert parallelism)
+can find it at trace time.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+_state = threading.local()
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def data_axes() -> Tuple[str, ...]:
+    return getattr(_state, "data_axes", ("data",))
+
+
+def model_axis() -> str:
+    return getattr(_state, "model_axis", "model")
+
+
+def activation_sharding() -> bool:
+    return getattr(_state, "activation_sharding", True)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, *, data_axes_: Optional[Tuple[str, ...]] = None,
+                 model_axis_: str = "model", activation_sharding_: bool = True):
+    prev = (getattr(_state, "mesh", None), getattr(_state, "data_axes", None),
+            getattr(_state, "model_axis", None),
+            getattr(_state, "activation_sharding", True))
+    _state.mesh = mesh
+    _state.data_axes = data_axes_ or tuple(
+        a for a in mesh.axis_names if a != model_axis_)
+    _state.model_axis = model_axis_
+    _state.activation_sharding = activation_sharding_
+    try:
+        yield
+    finally:
+        (_state.mesh, _state.data_axes, _state.model_axis,
+         _state.activation_sharding) = prev
+
+
+def shard_activation(x):
+    """Constrain a (B, ...) activation to batch-sharding over the data axes
+    (replicated over 'model').  No-op outside a mesh context or when the
+    batch does not divide.  Perf iteration #1 (EXPERIMENTS.md §Perf): without
+    this, XLA's SPMD resolves the FSDP-params x DP-batch conflict by
+    replicating attention compute over the model axis."""
+    mesh = current_mesh()
+    if mesh is None or not activation_sharding():
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = data_axes()
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if x.ndim == 0 or x.shape[0] % n_dp != 0:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamW, cosine_schedule  # noqa: F401
+from repro.training.trainer import make_train_step, train  # noqa: F401

@@ -1,0 +1,60 @@
+"""Checkpointing: flat-key npz save/restore for arbitrary param pytrees."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        items = tree.items()
+    elif isinstance(tree, (list, tuple)):
+        items = ((str(i), v) for i, v in enumerate(tree))
+    elif hasattr(tree, "_fields"):          # NamedTuple
+        items = zip(tree._fields, tree)
+    else:
+        return {prefix: tree}
+    for k, v in items:
+        path = f"{prefix}/{k}" if prefix else str(k)
+        out.update(_flatten(v, path))
+    return out
+
+
+def save(path: str, params: Any, step: int = 0):
+    flat = _flatten(params)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    arrays["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def _jax_paths(like):
+    """Keys in jax's own flatten order, named consistently with _flatten."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    keys = []
+    for path, _leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            else:
+                parts.append(str(p))
+        keys.append("/".join(parts))
+    return keys
+
+
+def restore(path: str, like: Any):
+    """Restore into the structure of ``like`` (same treedef)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    _, treedef = jax.tree.flatten(like)
+    ordered = [jnp.asarray(data[k]) for k in _jax_paths(like)]
+    return jax.tree.unflatten(treedef, ordered), int(data["__step__"])

@@ -1,0 +1,104 @@
+"""Collaborative training: distillation family (survey §3.2, §3.5).
+
+* ``kd_loss`` — forward KD (cloud LLM teaches edge SLM): CE + T^2·KL(p_t‖p_s).
+* ``reverse_kd_loss`` — mode-seeking KL(p_s‖p_t) (MiniLLM-style).
+* ``distillspec_data`` — DistillSpec: self-sampled target sequences as the
+  distillation corpus, which provably raises speculative acceptance
+  (acceptance = 1 - TV(p, q), and KD on on-policy data minimizes it).
+* ``logit_delta`` — SLM-guided LLM adaptation (Mitchell et al. emulator,
+  survey §3.5.2): apply (logits_slm_ft - logits_slm_base) to the LLM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import cross_entropy
+
+
+def _ce_mask(labels, ignore=-1):
+    return labels != ignore
+
+
+def kl_divergence(teacher_logits, student_logits, temperature: float = 1.0):
+    """KL(teacher || student), mean over positions. Inputs (..., V)."""
+    t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / temperature, -1)
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temperature, -1)
+    return jnp.mean(jnp.sum(jnp.exp(t) * (t - s), axis=-1))
+
+
+def kd_loss(student_model, student_params, batch, teacher_logits, *,
+            alpha: float = 0.5, temperature: float = 2.0):
+    """alpha·CE(labels) + (1-alpha)·T²·KL(teacher‖student)."""
+    logits, aux = student_model.forward(student_params, batch)[:2]
+    if student_model.cfg.family == "vlm":
+        logits = logits[:, batch["embeds"].shape[1]:, :]
+    ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    kl = kl_divergence(teacher_logits[:, :-1], logits[:, :-1], temperature)
+    return alpha * ce + (1 - alpha) * (temperature ** 2) * kl + aux
+
+
+def reverse_kd_loss(student_model, student_params, batch, teacher_logits, *,
+                    temperature: float = 1.0):
+    """KL(student || teacher): mode-seeking; better for generative students
+    (MiniLLM).  Gradient flows through the student distribution."""
+    logits, aux = student_model.forward(student_params, batch)[:2]
+    if student_model.cfg.family == "vlm":
+        logits = logits[:, batch["embeds"].shape[1]:, :]
+    s = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32) / temperature, -1)
+    t = jax.nn.log_softmax(teacher_logits[:, :-1].astype(jnp.float32) / temperature, -1)
+    return jnp.mean(jnp.sum(jnp.exp(s) * (s - t), axis=-1)) + aux
+
+
+def distillspec_data(target_model, target_params, prompts, max_new: int,
+                     rng, temperature: float = 1.0):
+    """Sample on-policy sequences from the TARGET (the DistillSpec corpus).
+    prompts: (B, S) int32. Returns (B, S+max_new) token arrays."""
+    tokens = jnp.asarray(prompts, jnp.int32)
+    B = tokens.shape[0]
+    _, cache = target_model.prefill(target_params, {"tokens": tokens[:, :-1]},
+                                    max_seq=tokens.shape[1] + max_new + 2)
+    step = jax.jit(lambda p, t, c: target_model.decode_step(p, t, c))
+    tok = tokens[:, -1:]
+    outs = [tokens]
+    for _ in range(max_new):
+        lg, cache = step(target_params, tok, cache)
+        rng, rr = jax.random.split(rng)
+        if temperature == 0.0:
+            nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(rr, lg / temperature, -1).astype(jnp.int32)
+        tok = nxt[:, None]
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)
+
+
+def teacher_logits_fn(teacher_model, teacher_params):
+    """Jitted teacher forward for KD (teacher is frozen — lax.stop_gradient)."""
+    @jax.jit
+    def fn(batch):
+        logits, _ = teacher_model.forward(teacher_params, batch)[:2]
+        if teacher_model.cfg.family == "vlm":
+            logits = logits[:, batch["embeds"].shape[1]:, :]
+        return jax.lax.stop_gradient(logits)
+    return fn
+
+
+def logit_delta_guidance(llm_logits, slm_ft_logits, slm_base_logits,
+                         beta: float = 1.0):
+    """Emulated fine-tuning (survey §3.5.2): LLM + beta·(SLM_ft - SLM_base).
+    The tiny models carry the domain adaptation; the big model supplies
+    capability.  All inputs (..., V) over a shared vocab."""
+    return llm_logits.astype(jnp.float32) + beta * (
+        slm_ft_logits.astype(jnp.float32) - slm_base_logits.astype(jnp.float32))
+
+
+def acceptance_estimate(draft_logits, target_logits, temperature: float = 1.0):
+    """Expected speculative acceptance 1 - TV(p,q) per position — the metric
+    DistillSpec optimizes. Inputs (..., V)."""
+    p = jax.nn.softmax(target_logits.astype(jnp.float32) / temperature, -1)
+    q = jax.nn.softmax(draft_logits.astype(jnp.float32) / temperature, -1)
+    return jnp.mean(jnp.sum(jnp.minimum(p, q), axis=-1))

@@ -1,0 +1,73 @@
+"""AdamW + schedules in pure JAX (no optax in this container).
+
+State is a pytree mirroring params: {"m": ..., "v": ..., "step": ()}.
+Moments are f32 regardless of param dtype (bf16-safe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: Optional[Callable] = None     # step -> lr multiplier
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+            if self.grad_clip else 1.0
+        lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh = m / (1 - self.b1 ** step)
+            vh = v / (1 - self.b2 ** step)
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(new_m, new_v, step), gnorm
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn

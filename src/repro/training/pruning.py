@@ -1,0 +1,74 @@
+"""Pruning (survey §3.1, Fig. 8b): magnitude pruning with soft-mask
+reactivation (Li et al. [120]) and structured d_ff channel pruning
+(EfficientLLM-style)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def magnitude_masks(params, sparsity: float):
+    """Unstructured per-matrix magnitude masks (1 = keep)."""
+    def mask(w):
+        if not (hasattr(w, "ndim") and w.ndim >= 2):
+            return jnp.ones_like(w, dtype=bool)
+        k = int(w.size * sparsity)
+        if k == 0:
+            return jnp.ones(w.shape, bool)
+        thresh = jnp.sort(jnp.abs(w).reshape(-1))[k - 1]
+        return jnp.abs(w) > thresh
+    return jax.tree.map(mask, params)
+
+
+def apply_masks(params, masks):
+    return jax.tree.map(lambda w, m: w * m.astype(w.dtype), params, masks)
+
+
+def soft_mask_update(params, masks, reactivate_frac: float = 0.01, rng=None):
+    """Soft-mask mechanism: reactivate the largest masked-out weights
+    (they may have regrown during masked training)."""
+    def upd(w, m):
+        if not (hasattr(w, "ndim") and w.ndim >= 2):
+            return m
+        masked_vals = jnp.where(m, -jnp.inf, jnp.abs(w)).reshape(-1)
+        k = max(1, int(w.size * reactivate_frac))
+        thresh = jax.lax.top_k(masked_vals, k)[0][-1]
+        return m | (jnp.abs(w) >= jnp.maximum(thresh, 1e-12))
+    return jax.tree.map(upd, params, masks)
+
+
+def structured_ffn_prune(params, cfg, keep_frac: float):
+    """Structured pruning of d_ff channels by combined gate+up+down column
+    importance.  Returns a new params tree with physically smaller MLPs —
+    the edge-deployable artifact (dense/vlm families)."""
+    blocks = params["blocks"]
+    w_up = blocks["mlp"]["w_up"]                 # (L, d, f)
+    score = jnp.sum(jnp.abs(w_up), axis=1)       # (L, f)
+    if "w_gate" in blocks["mlp"]:
+        score = score + jnp.sum(jnp.abs(blocks["mlp"]["w_gate"]), axis=1)
+    score = score + jnp.sum(jnp.abs(blocks["mlp"]["w_down"]), axis=2)
+    keep = max(8, int(w_up.shape[-1] * keep_frac) // 8 * 8)
+    idx = jax.lax.top_k(score, keep)[1]          # (L, keep)
+    idx = jnp.sort(idx, axis=-1)
+
+    def take_cols(w):   # (L, d, f) -> (L, d, keep)
+        return jax.vmap(lambda wl, il: wl[:, il])(w, idx)
+
+    def take_rows(w):   # (L, f, d) -> (L, keep, d)
+        return jax.vmap(lambda wl, il: wl[il, :])(w, idx)
+
+    new_mlp = {"w_up": take_cols(blocks["mlp"]["w_up"]),
+               "w_down": take_rows(blocks["mlp"]["w_down"])}
+    if "w_gate" in blocks["mlp"]:
+        new_mlp["w_gate"] = take_cols(blocks["mlp"]["w_gate"])
+    new_blocks = dict(blocks, mlp=new_mlp)
+    return dict(params, blocks=new_blocks), keep
+
+
+def sparsity_report(masks) -> Dict[str, float]:
+    kept = sum(int(jnp.sum(m)) for m in jax.tree.leaves(masks))
+    total = sum(int(np.prod(m.shape)) for m in jax.tree.leaves(masks))
+    return {"kept_frac": kept / total, "pruned_frac": 1 - kept / total}

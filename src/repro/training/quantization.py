@@ -1,0 +1,71 @@
+"""Quantization for efficient edge deployment (survey §3.1, Fig. 8a).
+
+* ``quantize_params`` / ``dequantize_params`` — per-channel symmetric int8
+  PTQ of all >=2D weights (embeddings included), with size accounting.
+* ``fake_quant`` — straight-through-estimator QAT hook (LLM-QAT style).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _quant_leaf(w, bits: int = 8):
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequant_leaf(d, dtype):
+    return (d["q"].astype(jnp.float32) * d["scale"]).astype(dtype)
+
+
+def quantize_params(params, bits: int = 8):
+    """Returns (qtree, meta) where matrices are {"q", "scale"} dicts and
+    small vectors stay fp."""
+    def q(w):
+        if hasattr(w, "ndim") and w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            return _quant_leaf(w, bits)
+        return w
+    return jax.tree.map(q, params)
+
+
+def dequantize_params(qparams, dtype=jnp.float32):
+    def dq(node):
+        if isinstance(node, dict) and set(node) == {"q", "scale"}:
+            return _dequant_leaf(node, dtype)
+        return node
+    return jax.tree.map(dq, qparams,
+                        is_leaf=lambda n: isinstance(n, dict) and set(n) == {"q", "scale"})
+
+
+def quantized_bytes(qparams) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(qparams):
+        total += np.asarray(leaf).nbytes
+    return int(total)
+
+
+def fake_quant(w, bits: int = 8):
+    """Straight-through fake quantization (QAT): forward = quantized,
+    gradient = identity."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(w), axis=-1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    wq = jnp.round(w / scale) * scale
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+def quantization_error(params, qparams) -> Dict[str, float]:
+    deq = dequantize_params(qparams)
+    errs = []
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(deq)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        errs.append(np.linalg.norm(a - b) / (np.linalg.norm(a) + 1e-12))
+    return {"mean_rel_err": float(np.mean(errs)), "max_rel_err": float(np.max(errs))}

@@ -1,0 +1,50 @@
+"""Training loop substrate: jitted train_step builder + host loop."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def make_train_step(model, opt: AdamW, *, loss_fn: Optional[Callable] = None,
+                    remat: bool = False, donate: bool = True):
+    """Returns jitted step(params, opt_state, batch) -> (params, state, metrics).
+
+    loss_fn(params, batch) overrides the model's default CE loss (used for
+    distillation / LayerSkip objectives).
+    """
+    _loss = loss_fn or (lambda p, b: model.loss(p, b, remat=remat))
+
+    def step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(_loss)(params, batch)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def train(model, params, data_iter, *, steps: int, opt: Optional[AdamW] = None,
+          loss_fn=None, remat: bool = False, log_every: int = 10,
+          donate: bool = False, log: Callable = print) -> Dict:
+    """Host training loop.  ``donate=True`` donates param/opt buffers for
+    memory efficiency (the caller's params become invalid)."""
+    opt = opt or AdamW()
+    opt_state = opt.init(params)
+    step_fn = make_train_step(model, opt, loss_fn=loss_fn, remat=remat,
+                              donate=donate)
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((i, loss))
+            log(f"step {i:5d}  loss {loss:.4f}  "
+                f"gnorm {float(metrics['grad_norm']):.3f}  "
+                f"{(time.time()-t0):.1f}s")
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,105 @@
+"""Communication optimization (§2.2.4) and split inference (§2.2.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.compression import (Int4Quantizer, Int8Quantizer, TopKLogits,
+                                    TopKSparsifier, entropy_bits_estimate,
+                                    relative_error)
+from repro.core.partition import SplitCostModel, split_inference
+from repro.models import Model, example_batch
+
+
+@pytest.fixture(scope="module")
+def act():
+    return jax.random.normal(jax.random.PRNGKey(0), (4, 32, 64))
+
+
+def test_int8_roundtrip(act):
+    c = Int8Quantizer().compress(act)
+    out = Int8Quantizer().decompress(c)
+    assert relative_error(out, act) < 0.01
+    assert c.wire_bytes < act.size * 4 / 3.5      # ~4x smaller
+
+
+def test_int4_tradeoff(act):
+    c8 = Int8Quantizer().compress(act)
+    c4 = Int4Quantizer().compress(act)
+    assert c4.wire_bytes < c8.wire_bytes
+    e8 = relative_error(Int8Quantizer().decompress(c8), act)
+    e4 = relative_error(Int4Quantizer().decompress(c4), act)
+    assert e4 > e8                                 # fidelity/bytes trade-off
+
+
+def test_topk_sparsifier(act):
+    sp = TopKSparsifier(frac=0.1)
+    c = sp.compress(act)
+    out = sp.decompress(c)
+    nz = int(jnp.sum(out != 0))
+    assert nz <= int(act.size * 0.1) + 1
+    # keeping the top-10% by magnitude retains the largest energy share
+    assert relative_error(act, out) < 0.9
+
+
+def test_topk_error_feedback_reduces_bias():
+    sp_no = TopKSparsifier(frac=0.2, error_feedback=False)
+    sp_ef = TopKSparsifier(frac=0.2, error_feedback=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    acc_no = np.zeros(256)
+    acc_ef = np.zeros(256)
+    for _ in range(20):
+        acc_no += np.asarray(sp_no.decompress(sp_no.compress(x)))
+        acc_ef += np.asarray(sp_ef.decompress(sp_ef.compress(x)))
+    # with error feedback, the accumulated signal approaches 20*x
+    err_no = np.linalg.norm(acc_no - 20 * np.asarray(x))
+    err_ef = np.linalg.norm(acc_ef - 20 * np.asarray(x))
+    assert err_ef < err_no
+
+
+def test_topk_logits_roundtrip():
+    logits = jax.random.normal(jax.random.PRNGKey(2), (3, 100))
+    tk = TopKLogits(k=10)
+    rec = tk.decompress(tk.compress(logits))
+    # top-1 is preserved exactly
+    assert jnp.array_equal(jnp.argmax(rec, -1), jnp.argmax(logits, -1))
+
+
+def test_entropy_estimate_bounds(act):
+    q = np.round(np.asarray(act) * 10)
+    bits = entropy_bits_estimate(q)
+    assert 0 < bits <= np.log2(256)
+
+
+def test_split_inference_identity_exact():
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = example_batch(cfg, 2, 12, with_labels=False)
+    full, _ = m.forward(params, batch)
+    lg, wire = split_inference(m, params, batch, k=1)
+    assert float(jnp.max(jnp.abs(lg - full))) < 2e-3
+    assert wire > 0
+
+
+def test_split_int8_close():
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = example_batch(cfg, 2, 12, with_labels=False)
+    full, _ = m.forward(params, batch)
+    lg, wire8 = split_inference(m, params, batch, k=1,
+                                compressor=Int8Quantizer())
+    _, wire32 = split_inference(m, params, batch, k=1)
+    assert relative_error(lg, full) < 0.05
+    assert wire8 < wire32 / 3
+
+
+def test_cost_model_prefers_cloud_for_heavy_models():
+    cm = SplitCostModel()
+    cfg = get_config("granite-8b")
+    k, ts = cm.best_split(cfg, tokens=128)
+    assert 0 <= k <= cfg.num_layers
+    # a phone should not run all 36 layers of an 8B model
+    assert k < cfg.num_layers

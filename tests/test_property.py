@@ -1,0 +1,80 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import Int8Quantizer, relative_error
+from repro.core.speculative import acceptance_rate_bound, speculative_sample
+from repro.models.moe import capacity
+from repro.models.ssm import gla_chunked, gla_step, init_gla_state
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@_settings
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(2, 50))
+def test_spec_sample_invariants(seed, gamma, V):
+    """n_acc in [0, gamma]; next token always a valid vocab index."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    tl = jax.random.normal(k1, (gamma + 1, V)) * 3
+    dl = jax.random.normal(k2, (gamma, V)) * 3
+    toks = jax.random.randint(k3, (gamma,), 0, V)
+    n, t = speculative_sample(k4, tl, dl, toks, temperature=1.0)
+    assert 0 <= int(n) <= gamma
+    assert 0 <= int(t) < V
+
+
+@_settings
+@given(st.integers(0, 10_000), st.integers(2, 30))
+def test_acceptance_bound_is_probability(seed, V):
+    key = jax.random.PRNGKey(seed)
+    p = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 0), (V,)))
+    q = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (V,)))
+    a = float(acceptance_rate_bound(p, q))
+    assert 0.0 <= a <= 1.0 + 1e-6
+    assert float(acceptance_rate_bound(p, p)) > 0.999
+
+
+@_settings
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 4, 8, 16]))
+def test_gla_chunk_size_invariance(seed, chunk):
+    """The chunked GLA recurrence gives identical (un-stabilized) outputs
+    for ANY chunk size — the core numerical invariant under Mamba2/mLSTM."""
+    B, S, H, N, P = 1, 16, 1, 4, 4
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    li = jax.random.normal(ks[4], (B, S, H))
+    y1, d1, m1, _ = gla_chunked(q, k, v, la, li, chunk=chunk)
+    y2, d2, m2, _ = gla_chunked(q, k, v, la, li, chunk=S)
+    np.testing.assert_allclose(np.asarray(y1 * jnp.exp(m1)[..., None]),
+                               np.asarray(y2 * jnp.exp(m2)[..., None]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(d1 * jnp.exp(m1)),
+                               np.asarray(d2 * jnp.exp(m2)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@_settings
+@given(st.integers(0, 1000))
+def test_int8_roundtrip_error_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64)) * \
+        (1 + 10 * jax.random.uniform(jax.random.PRNGKey(seed + 1), ()))
+    q = Int8Quantizer()
+    err = relative_error(q.decompress(q.compress(x)), x)
+    assert err < 0.02      # 1/127 per-channel worst case is ~0.8%
+
+
+@_settings
+@given(st.integers(1, 4096), st.integers(1, 8))
+def test_moe_capacity_dropless_small(tokens, k):
+    # top-k experts are distinct per token, so an expert receives at most
+    # `tokens` assignments — capacity >= tokens is the dropless bound.
+    from repro.configs import get_config
+    cfg = get_config("olmoe-1b-7b").replace(top_k=k)
+    assert capacity(tokens, cfg) >= tokens

@@ -1,0 +1,90 @@
+"""Task assignment (§2.1): uncertainty estimators and routers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.routing import (CascadeRouter, ConfidenceRouter, LinUCBRouter,
+                                UCBRouter, capability_vector)
+from repro.core.uncertainty import (ESTIMATORS, dirichlet_evidence, entropy,
+                                    get_estimator, margin, max_prob)
+
+PEAKED = jnp.array([10.0, 0.0, 0.0, 0.0])
+FLAT = jnp.zeros(4)
+
+
+@pytest.mark.parametrize("name", sorted(ESTIMATORS))
+def test_estimators_order_peaked_below_flat(name):
+    est = get_estimator(name)
+    assert float(est(PEAKED)) < float(est(FLAT))
+
+
+def test_entropy_normalized_range():
+    assert abs(float(entropy(FLAT)) - 1.0) < 1e-6
+    assert float(entropy(PEAKED)) < 0.01
+
+
+def test_dirichlet_components():
+    d_flat = dirichlet_evidence(FLAT)
+    d_peak = dirichlet_evidence(PEAKED)
+    # strong single evidence lowers epistemic (more total evidence) AND
+    # aleatoric (less conflict)
+    assert float(d_peak["epistemic"]) < float(d_flat["epistemic"])
+    assert float(d_peak["aleatoric"]) < float(d_flat["aleatoric"])
+    # scaled-down logits = weak evidence: epistemic rises vs the peaked case
+    d_weak = dirichlet_evidence(PEAKED * 0.01)
+    assert float(d_weak["epistemic"]) > float(d_peak["epistemic"])
+
+
+def test_confidence_router():
+    r = ConfidenceRouter(threshold=0.5)
+    assert r(PEAKED[None]).model_idx == 0        # confident -> edge
+    assert r(FLAT[None]).model_idx == 1          # uncertain -> cloud
+
+
+def test_cascade_lazy_escalation():
+    calls = []
+
+    def mk(logits, i):
+        def fn():
+            calls.append(i)
+            return logits
+        return fn
+
+    r = CascadeRouter(costs=[1, 10], thresholds=[0.3, 1.0],
+                      estimator="max_prob")
+    route = r.run([mk(PEAKED[None], 0), mk(FLAT[None], 1)])
+    assert route.model_idx == 0 and calls == [0]   # never calls the cloud
+    calls.clear()
+    route = r.run([mk(FLAT[None], 0), mk(PEAKED[None], 1)])
+    assert route.model_idx == 1 and calls == [0, 1]
+    assert route.cost == 11
+
+
+def test_ucb_converges_to_best_arm():
+    rng = np.random.default_rng(0)
+    r = UCBRouter(3, cost_weight=0.0)
+    means = [0.2, 0.8, 0.5]
+    for _ in range(500):
+        a = r.select()
+        r.update(a, rng.normal(means[a], 0.1))
+    assert np.argmax(r.n) == 1                    # pulls the best arm most
+
+
+def test_linucb_uses_context():
+    rng = np.random.default_rng(0)
+    r = LinUCBRouter(2, dim=2, alpha=0.3, cost_weight=0.0)
+    # context [1,0] -> model 0 good; [0,1] -> model 1 good
+    for _ in range(400):
+        x = np.array([1.0, 0.0]) if rng.uniform() < 0.5 else np.array([0.0, 1.0])
+        a = r.select(x)
+        good = 0 if x[0] > 0 else 1
+        r.update(a, x, 1.0 if a == good else 0.0)
+    assert r.select(np.array([1.0, 0.0])) == 0
+    assert r.select(np.array([0.0, 1.0])) == 1
+
+
+def test_capability_vector_shape():
+    ls = [np.random.randn(4, 16) for _ in range(3)]
+    v = capability_vector(ls)
+    assert v.shape == (4,)

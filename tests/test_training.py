@@ -1,0 +1,208 @@
+"""Collaborative training (survey §3): optimizer, distillation, LoRA,
+quantization, pruning, early-exit training, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.early_exit import early_exit_decision, exit_logits, layerskip_loss
+from repro.data import SyntheticLM, batches, dirichlet_clients
+from repro.data.pipeline import client_divergence
+from repro.models import Model, example_batch
+from repro.training import AdamW, cosine_schedule, make_train_step, train
+from repro.training.checkpoint import restore, save
+from repro.training.distillation import (acceptance_estimate, kd_loss,
+                                         kl_divergence, logit_delta_guidance,
+                                         reverse_kd_loss, teacher_logits_fn)
+from repro.training.lora import (hetlora_aggregate, init_lora, lora_loss_fn,
+                                 lora_param_count, merge_lora)
+from repro.training.pruning import (apply_masks, magnitude_masks,
+                                    sparsity_report, structured_ffn_prune)
+from repro.training.quantization import (dequantize_params, fake_quant,
+                                         quantization_error, quantize_params)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def test_train_loss_decreases(setup):
+    cfg, m, params = setup
+    it = batches(cfg, 8, 32)
+    res = train(m, params, it, steps=25, opt=AdamW(lr=1e-3), log_every=1000,
+                log=lambda *_: None)
+    hist = res["history"]
+    assert hist[-1][1] < hist[0][1] - 0.2
+
+
+def test_cosine_schedule():
+    s = cosine_schedule(10, 100)
+    assert float(s(0)) < 0.11
+    assert abs(float(s(10)) - 1.0) < 1e-5
+    assert float(s(100)) <= 0.11
+
+
+def test_kd_better_than_far_teacher(setup):
+    cfg, m, params = setup
+    batch = example_batch(cfg, 2, 16)
+    tlf = teacher_logits_fn(m, params)
+    tl = tlf(batch)
+    # KL(self, self) = 0
+    logits, _ = m.forward(params, batch)
+    assert float(kl_divergence(tl, logits)) < 1e-4
+    loss = kd_loss(m, params, batch, tl, alpha=0.5)
+    assert float(loss) > 0
+
+
+def test_reverse_kd(setup):
+    cfg, m, params = setup
+    batch = example_batch(cfg, 2, 16)
+    tl = teacher_logits_fn(m, params)(batch)
+    assert float(reverse_kd_loss(m, params, batch, tl)) < 1e-4
+
+
+def test_acceptance_estimate_ordering(setup):
+    cfg, m, params = setup
+    p2 = m.init(jax.random.PRNGKey(5))
+    batch = example_batch(cfg, 2, 16)
+    t = teacher_logits_fn(m, params)(batch)
+    d_same = t
+    d_diff = teacher_logits_fn(m, p2)(batch)
+    assert float(acceptance_estimate(d_same, t)) > \
+        float(acceptance_estimate(d_diff, t))
+
+
+def test_distillation_raises_acceptance(setup):
+    """DistillSpec's premise: KD on target outputs raises 1-TV acceptance."""
+    cfg, m, params = setup
+    student = m.init(jax.random.PRNGKey(7))
+    batch = example_batch(cfg, 8, 24)
+    tlf = teacher_logits_fn(m, params)
+    before = float(acceptance_estimate(tlf(batch), m.forward(student, batch)[0]))
+    opt = AdamW(lr=2e-3)
+    step = make_train_step(
+        m, opt, loss_fn=lambda p, b: kd_loss(m, p, b, tlf(b), alpha=0.0),
+        donate=False)
+    st = opt.init(student)
+    for _ in range(30):
+        student, st, _ = step(student, st, batch)
+    after = float(acceptance_estimate(tlf(batch), m.forward(student, batch)[0]))
+    assert after > before + 0.02
+
+
+def test_logit_delta_guidance():
+    llm = jnp.zeros((2, 5))
+    ft = jnp.array([[1.0, 0, 0, 0, 0]] * 2)
+    base = jnp.zeros((2, 5))
+    out = logit_delta_guidance(llm, ft, base, beta=2.0)
+    assert float(out[0, 0]) == 2.0
+
+
+def test_lora_zero_init_and_train(setup):
+    cfg, m, params = setup
+    ad = init_lora(jax.random.PRNGKey(1), params, rank=4)
+    batch = example_batch(cfg, 2, 16)
+    base, _ = m.forward(params, batch)
+    merged, _ = m.forward(merge_lora(params, ad), batch)
+    assert float(jnp.max(jnp.abs(base - merged))) == 0.0   # B=0 at init
+    # adapters train: loss decreases while base stays frozen
+    loss_fn = lora_loss_fn(m, params)
+    g = jax.grad(loss_fn)(ad, batch)
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in jax.tree.leaves(g))
+    assert lora_param_count(ad) < sum(x.size for x in jax.tree.leaves(params)) / 50
+
+
+def test_hetlora_rank_padding(setup):
+    cfg, m, params = setup
+    clients = [init_lora(jax.random.PRNGKey(i), params, rank=r)
+               for i, r in enumerate([2, 4, 8])]
+    agg = hetlora_aggregate(clients, max_rank=8)
+    first = agg[next(iter(agg))]
+    assert first["A"].shape[-2] == 8
+
+
+def test_quantization(setup):
+    cfg, m, params = setup
+    qp = quantize_params(params)
+    err = quantization_error(params, qp)
+    assert err["mean_rel_err"] < 0.01
+    batch = example_batch(cfg, 2, 16)
+    base, _ = m.forward(params, batch)
+    deq, _ = m.forward(dequantize_params(qp), batch)
+    rel = float(jnp.linalg.norm(deq - base) / jnp.linalg.norm(base))
+    assert rel < 0.1
+
+
+def test_fake_quant_gradient_passthrough():
+    w = jnp.linspace(-1, 1, 32).reshape(4, 8)
+    g = jax.grad(lambda w: jnp.sum(fake_quant(w) ** 2))(w)
+    assert g.shape == w.shape
+    assert not bool(jnp.any(jnp.isnan(g)))
+
+
+def test_pruning(setup):
+    cfg, m, params = setup
+    masks = magnitude_masks(params, 0.5)
+    rep = sparsity_report(masks)
+    assert 0.4 < rep["pruned_frac"] < 0.6
+    pruned = apply_masks(params, masks)
+    batch = example_batch(cfg, 2, 16)
+    logits, _ = m.forward(pruned, batch)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+def test_structured_prune_runs(setup):
+    cfg, m, params = setup
+    pruned, keep = structured_ffn_prune(params, cfg, 0.5)
+    assert keep <= cfg.d_ff
+    batch = example_batch(cfg, 2, 16)
+    logits, _ = m.forward(pruned, batch)
+    assert logits.shape[-1] == cfg.vocab_size
+
+
+def test_layerskip_and_exit_decision(setup):
+    cfg, m, params = setup
+    batch = example_batch(cfg, 2, 16)
+    loss, ces = layerskip_loss(m, params, batch, exit_layers=[0])
+    assert float(loss) > float(m.loss(params, batch)) - 1e-6
+    _, _, hs = m.forward(params, batch, collect_hidden=True)
+    ex = exit_logits(m, params, hs, [0, 1])
+    idx, chosen = early_exit_decision(ex[:, :, -1, :], threshold=-1.0)
+    assert int(idx[0]) == 1                       # impossible threshold -> last
+    idx2, _ = early_exit_decision(ex[:, :, -1, :], threshold=2.0)
+    assert int(idx2[0]) == 0                      # trivial threshold -> first
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, m, params = setup
+    p = str(tmp_path / "ck.npz")
+    save(p, params, step=7)
+    restored, step = restore(p, params)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert jnp.array_equal(a, b)
+
+
+def test_dirichlet_clients_skew():
+    tight = dirichlet_clients(8, 4, alpha=100.0)
+    skewed = dirichlet_clients(8, 4, alpha=0.1)
+    assert client_divergence(skewed) > client_divergence(tight)
+
+
+def test_synthetic_lm_learnable():
+    synth = SyntheticLM(128, n_domains=2, order_vocab=32)
+    rng = np.random.default_rng(0)
+    s = synth.sample(rng, 0, 1000)
+    assert s.min() >= 0 and s.max() < 128
+    # markov structure: bigram entropy < unigram entropy
+    uni, _ = np.histogram(s, bins=128)
+    pu = uni / uni.sum()
+    hu = -(pu[pu > 0] * np.log(pu[pu > 0])).sum()
+    assert hu < np.log(64)                        # concentrated sub-vocab

@@ -1,0 +1,60 @@
+"""Token-tree speculation (§2.4.4) and self-speculative decoding (§2.4.2)."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.self_speculative import SelfSpecDecoder
+from repro.core.speculative import autoregressive_baseline
+from repro.core.tree_speculation import TokenTree, TreeSpecDecoder
+import numpy as np
+
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = get_config("smollm-135m").reduced()
+    m = Model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_token_tree_structure():
+    #      0
+    #    1   2
+    #   3
+    t = TokenTree(np.array([5, 6, 7, 8], np.int32),
+                  np.array([-1, 0, 0, 1], np.int32),
+                  np.zeros((4, 10), np.float32))
+    assert t.ancestors(3) == [0, 1, 3]
+    m = t.attention_mask()
+    assert m[3, 1] and m[3, 0] and not m[3, 2]
+    assert list(t.depths()) == [0, 1, 1, 2]
+
+
+def test_tree_spec_greedy_lossless(small):
+    cfg, m, params = small
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, cfg.vocab_size)
+    base = autoregressive_baseline(m, params, prompt, 12, temperature=0.0)
+    dec = TreeSpecDecoder(m, m, branching=(2, 2), temperature=0.0)
+    toks, stats = dec.generate(params, params, prompt, 12)
+    assert toks == base
+    # identical draft: the greedy path is always accepted to the leaf
+    assert all(a == 2 for a in stats["accepted_per_round"])
+
+
+def test_tree_spec_rejects_ssm_target():
+    cfg = get_config("xlstm-125m").reduced()
+    m = Model(cfg)
+    with pytest.raises(ValueError):
+        TreeSpecDecoder(m, m)
+
+
+@pytest.mark.parametrize("gamma", [1, 3])
+def test_self_spec_greedy_lossless(small, gamma):
+    cfg, m, params = small
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (8,), 0, cfg.vocab_size)
+    base = autoregressive_baseline(m, params, prompt, 12, temperature=0.0)
+    dec = SelfSpecDecoder(m, exit_layer=1, gamma=gamma, temperature=0.0)
+    toks, stats = dec.generate(params, prompt, 12)
+    assert toks == base
+    assert stats.target_passes == stats.rounds
