@@ -1,0 +1,102 @@
+"""Serving-scheduler benchmark: per-request vs batched continuous batching.
+
+The ROADMAP's throughput claim lives or dies on the serving loop, not the
+kernels: the per-request engine pays a host round-trip per decoded token,
+the batched scheduler pays one per ``tick_tokens`` x ``batch_size`` tokens.
+This bench measures requests/sec and tokens/sec for both schedulers over
+mixed-uncertainty traffic on reduced configs, across three regimes:
+
+  * edge        — every request confident (escalation never fires)
+  * mixed       — threshold at the median request uncertainty (~half the
+                  slots retire into a grouped escalation each drain)
+  * escalate    — every request escalates (speculative)
+
+Emits ``serving_<regime>,<scheduler>,<req/s>`` rows plus a
+``serving_speedup_<regime>`` row (batched / per-request).  Acceptance
+target: >= 3x req/s for the batched scheduler at batch size 16 on the edge
+regime.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import CollaborativeEngine
+from repro.core.scheduler import BatchedEngine
+from repro.data import SyntheticLM
+from repro.models import Model
+
+REQUESTS = 32
+PROMPT_LEN = 16
+MAX_NEW = 24
+BATCH = 16
+
+
+def _setup():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    ep = edge.init(jax.random.PRNGKey(0))
+    cp = cloud.init(jax.random.PRNGKey(1))
+    synth = SyntheticLM(e_cfg.vocab_size)
+    rng = np.random.default_rng(0)
+    prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+               for i in range(REQUESTS)]
+    return edge, ep, cloud, cp, prompts
+
+
+def _per_request(edge, cloud, ep, cp, prompts, threshold):
+    eng = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              escalate_threshold=threshold, use_cache=False)
+    eng.serve_reference(ep, cp, prompts[0], MAX_NEW)      # warm the jits
+    t0 = time.time()
+    traces = [eng.serve_reference(ep, cp, p, MAX_NEW) for p in prompts]
+    return time.time() - t0, traces
+
+
+def _batched(edge, cloud, ep, cp, prompts, threshold):
+    eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
+                        escalate_threshold=threshold, use_cache=False)
+    eng.serve_batch(ep, cp, prompts[:BATCH], MAX_NEW)     # warm the jits
+    t0 = time.time()
+    traces = eng.serve_batch(ep, cp, prompts, MAX_NEW)
+    return time.time() - t0, traces
+
+
+def run(csv=print):
+    edge, ep, cloud, cp, prompts = _setup()
+
+    # probe per-request uncertainties once to place the mixed threshold
+    probe = CollaborativeEngine(edge, cloud, temperature=0.0,
+                                escalate_threshold=1.1, use_cache=False)
+    uncs = [probe.serve_reference(ep, cp, p, MAX_NEW).uncertainty
+            for p in prompts]
+    regimes = {
+        "edge": 1.1,
+        "mixed": float(np.median(uncs)),
+        "escalate": -1.0,
+    }
+
+    for regime, threshold in regimes.items():
+        dt_ref, tr_ref = _per_request(edge, cloud, ep, cp, prompts, threshold)
+        dt_bat, tr_bat = _batched(edge, cloud, ep, cp, prompts, threshold)
+        esc = sum(t.path != "edge" for t in tr_bat)
+        assert [t.path for t in tr_bat] == [t.path for t in tr_ref]
+        csv(f"serving_{regime},per_request_req_s,{REQUESTS / dt_ref:.3f}")
+        csv(f"serving_{regime},batched{BATCH}_req_s,{REQUESTS / dt_bat:.3f}")
+        csv(f"serving_{regime},per_request_tok_s,"
+            f"{REQUESTS * MAX_NEW / dt_ref:.1f}")
+        csv(f"serving_{regime},batched{BATCH}_tok_s,"
+            f"{REQUESTS * MAX_NEW / dt_bat:.1f}")
+        csv(f"serving_speedup_{regime},batched{BATCH}_vs_per_request,"
+            f"{dt_ref / dt_bat:.2f}")
+        csv(f"serving_{regime},escalated,{esc}")
+
+
+if __name__ == "__main__":
+    print("name,case,value")
+    run()

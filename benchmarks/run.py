@@ -12,9 +12,10 @@ import time
 
 from benchmarks import (bench_collab_training, bench_early_exit,
                         bench_partition_comm, bench_routing,
-                        bench_speculative, roofline)
+                        bench_serving, bench_speculative, roofline)
 
 SUITES = {
+    "serving": bench_serving.run,                # survey §2.3 at throughput
     "speculative": bench_speculative.run,        # survey §2.4 / Table 2
     "routing": bench_routing.run,                # survey §2.1 / Table 4
     "early_exit": bench_early_exit.run,          # survey §2.2.3 / Table 4

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify (see ROADMAP.md). Extra pytest args pass through, e.g.:
+#   scripts/tier1.sh -m "not slow"
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

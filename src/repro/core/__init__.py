@@ -3,7 +3,10 @@
 Inference (survey §2): routing, uncertainty, early_exit, partition,
 compression, cache, speculative, self_speculative, tree_speculation, engine.
 """
-from repro.core.speculative import (SpecDecoder, SpecStats,  # noqa: F401
+from repro.core.scheduler import BatchedEngine, RequestTrace  # noqa: F401
+from repro.core.speculative import (BatchedSpecDecoder,  # noqa: F401
+                                    SpecDecoder, SpecStats,
                                     autoregressive_baseline,
                                     speculative_sample)
-from repro.core.uncertainty import get_estimator  # noqa: F401
+from repro.core.uncertainty import (get_batched_estimator,  # noqa: F401
+                                    get_estimator)

@@ -35,18 +35,33 @@ class SemanticCache:
         return v / (np.linalg.norm(v) + 1e-12)
 
     def lookup(self, key: np.ndarray) -> Optional[Any]:
-        self.lookups += 1
+        return self.lookup_batch(np.asarray(key, np.float32).reshape(1, -1))[0]
+
+    def lookup_batch(self, keys: np.ndarray) -> List[Optional[Any]]:
+        """Vectorized lookup: one (N, D) @ (D, E) similarity matmul for N
+        query keys against all E entries (the scheduler admits a whole batch
+        of requests per tick, so per-key matmuls would scale as N*E)."""
+        keys = np.asarray(keys, np.float32)
+        if keys.ndim == 1:
+            keys = keys.reshape(1, -1)
+        n = keys.shape[0]
+        self.lookups += n
         if not self.entries:
-            return None
-        k = self._norm(key)
-        mat = np.stack([e.key for e in self.entries])
-        sims = mat @ k
-        i = int(np.argmax(sims))
-        if sims[i] >= self.threshold:
-            self.hits += 1
-            self.entries[i].hits += 1
-            return self.entries[i].value
-        return None
+            return [None] * n
+        norms = np.linalg.norm(keys, axis=1, keepdims=True) + 1e-12
+        q = keys / norms                                   # (N, D)
+        mat = np.stack([e.key for e in self.entries])      # (E, D)
+        sims = q @ mat.T                                   # (N, E)
+        best = np.argmax(sims, axis=1)
+        out: List[Optional[Any]] = []
+        for row, i in enumerate(best):
+            if sims[row, i] >= self.threshold:
+                self.hits += 1
+                self.entries[int(i)].hits += 1
+                out.append(self.entries[int(i)].value)
+            else:
+                out.append(None)
+        return out
 
     def insert(self, key: np.ndarray, value: Any):
         if len(self.entries) >= self.capacity:

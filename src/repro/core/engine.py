@@ -9,33 +9,45 @@ engine that composes the taxonomy's mechanisms per request:
        c. "skeleton"     — cloud drafts a skeleton prefix, edge completes
                            (cloud-to-edge skeleton, §2.4.3/PICE)
 
-The engine is a host-side control loop around jitted model steps, with
-per-request traces for the benchmarks (edge/cloud calls, wire bytes).
+Serving architecture
+--------------------
+The serving path is the batched continuous-batching scheduler in
+``core/scheduler.py``: slot-based admission into padded per-slot KV caches,
+one jitted multi-token ``lax.scan`` per tick over the whole batch (with
+uncertainty accumulated on device — no per-token host sync), and grouped
+batched escalation.  ``CollaborativeEngine`` keeps the original
+single-request API as a thin wrapper over a ``batch_size=1``
+``BatchedEngine``; multi-request callers should construct ``BatchedEngine``
+directly (or via ``launch/serve.py --scheduler batched``).
+
+``serve_reference`` preserves the original host-side Python loop (one jitted
+model step per decoded token).  It is the executable spec: parity tests in
+``tests/test_scheduler.py`` check the scheduler against it token for token,
+and ``benchmarks/bench_serving.py`` uses it as the per-request baseline.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import SemanticCache, embed_tokens_mean
+from repro.core.cache import embed_tokens_mean
+from repro.core.scheduler import BatchedEngine, RequestTrace  # noqa: F401
 from repro.core.speculative import SpecDecoder, autoregressive_baseline
 from repro.core.uncertainty import get_estimator
 
 
-@dataclasses.dataclass
-class RequestTrace:
-    path: str                       # cache | edge | speculative | cloud | skeleton
-    edge_calls: int = 0
-    cloud_passes: int = 0
-    uncertainty: float = 0.0
-    tokens: Optional[List[int]] = None
-
-
 class CollaborativeEngine:
+    """Single-request facade over the batched scheduler.
+
+    ``serve`` routes through a one-slot ``BatchedEngine`` (same decision
+    semantics, same jitted decode path as production batched serving);
+    ``serve_reference`` is the legacy per-token host loop kept as the
+    reference implementation.
+    """
+
     def __init__(self, edge_model, cloud_model, *, gamma: int = 4,
                  temperature: float = 0.0, escalate_threshold: float = 0.6,
                  estimator: str = "entropy", escalation: str = "speculative",
@@ -50,8 +62,21 @@ class CollaborativeEngine:
         self.skeleton_len = skeleton_len
         self.spec = SpecDecoder(edge_model, cloud_model, gamma=gamma,
                                 temperature=temperature)
-        self.cache = SemanticCache(threshold=cache_threshold) if use_cache else None
+        self.batched = BatchedEngine(
+            edge_model, cloud_model, batch_size=1, gamma=gamma,
+            temperature=temperature, escalate_threshold=escalate_threshold,
+            estimator=estimator, escalation=escalation, use_cache=use_cache,
+            cache_threshold=cache_threshold, skeleton_len=skeleton_len)
+        # single shared semantic cache: reference and scheduler paths hit
+        # (and warm) the same entries
+        self.cache = self.batched.cache
         self._edge_step = jax.jit(lambda p, t, c: edge_model.decode_step(p, t, c))
+
+    # ----------------------------------------------------------------
+    def serve(self, edge_params, cloud_params, prompt, max_new: int
+              ) -> RequestTrace:
+        return self.batched.serve_batch(edge_params, cloud_params, [prompt],
+                                        max_new)[0]
 
     # ----------------------------------------------------------------
     def _edge_generate(self, params, prompt, max_new):
@@ -76,8 +101,10 @@ class CollaborativeEngine:
         return out, float(np.mean(us)), max_new
 
     # ----------------------------------------------------------------
-    def serve(self, edge_params, cloud_params, prompt, max_new: int
-              ) -> RequestTrace:
+    def serve_reference(self, edge_params, cloud_params, prompt, max_new: int
+                        ) -> RequestTrace:
+        """Legacy per-request loop (host round-trip per token) — the
+        reference the batched scheduler is tested against."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
 
         if self.cache is not None:

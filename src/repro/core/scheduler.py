@@ -1,0 +1,437 @@
+"""Batched continuous-batching serving scheduler (survey §2.3 at throughput).
+
+The original ``CollaborativeEngine`` serves one request at a time with a
+host round-trip per decoded token — fine for tracing the taxonomy, hopeless
+for the ROADMAP's "heavy traffic" north star.  ``BatchedEngine`` keeps the
+same per-request semantics (cache -> edge -> escalation, identical greedy
+tokens) but executes them slot-based and batched:
+
+  * SLOTS — ``batch_size`` slots, each holding one in-flight request.  All
+    per-slot device state is a stacked pytree with a leading slot axis; the
+    KV cache is padded to a common ``slot_len`` and each slot carries its
+    own scalar ``pos`` (vmapped ``decode_step`` turns the cache update into
+    a per-slot scatter).
+  * PREFILL on admission: the exact-length prompt is prefilled once
+    (jit-cached per prompt length) and the resulting padded cache is
+    written into the slot wholesale — which also wipes whatever a retired
+    occupant left behind.
+  * DECODE — one jitted ``lax.scan`` of up to ``tick_tokens`` steps over
+    the whole batch, with per-slot uncertainty accumulated ON DEVICE
+    (``uncertainty.get_batched_estimator``).  One host sync per tick, not
+    per token.  Slots that run out of budget mid-tick keep decoding
+    garbage behind an ``active`` mask; their emissions are dropped and the
+    slot cache is overwritten on the next admission.
+  * RETIRE / ADMIT each tick: finished slots are classified by mean
+    uncertainty (edge-confident vs escalate) and freed; queued requests are
+    admitted into the freed slots.
+  * ESCALATION runs GROUPED: all slots retired-uncertain in a tick share
+    one batched cloud decode ("cloud"), one batched skeleton + batched edge
+    completion ("skeleton"), or one ``BatchedSpecDecoder`` group
+    ("speculative").  Groups are padded to ``batch_size`` so every jitted
+    shape is compiled once.
+
+Remaining gaps (see ROADMAP "Serving architecture"): the per-slot cache is
+padded, not paged — long-prompt slots reserve ``slot_len`` everywhere —
+and scheduling is single-host/single-device.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import SemanticCache, embed_tokens_mean
+from repro.core.speculative import BatchedSpecDecoder, SpecDecoder
+from repro.core.uncertainty import get_batched_estimator
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    path: str                       # cache | edge | speculative | cloud | skeleton
+    edge_calls: int = 0
+    cloud_passes: int = 0
+    uncertainty: float = 0.0
+    tokens: Optional[List[int]] = None
+
+
+# ---------------------------------------------------------------- slot utils
+def stack_slot_caches(model, batch: int, slot_len: int):
+    """Zero-initialized stacked per-slot caches: each leaf of the model's
+    single-sequence cache gains a leading slot axis."""
+    one = model.init_cache(1, slot_len)
+    return jax.tree.map(lambda x: jnp.zeros((batch,) + x.shape, x.dtype), one)
+
+
+def write_slots(slots, bs: List[int], caches: List):
+    """Overwrite slots ``bs`` with freshly prefilled single-sequence caches
+    in ONE scatter per leaf (k separate ``.at[b].set`` writes would copy the
+    whole stacked cache k times).  Also wipes any garbage a retired occupant
+    decoded past its budget."""
+    idx = jnp.asarray(bs, jnp.int32)
+    return jax.tree.map(
+        lambda big, *smalls: big.at[idx].set(jnp.stack(smalls)),
+        slots, *caches)
+
+
+def write_slot(slots, b: int, cache):
+    """Single-slot convenience wrapper over ``write_slots``."""
+    return write_slots(slots, [b], [cache])
+
+
+def _pow2_steps(n: int, cap: int) -> int:
+    """Round a residual step count up to a power of two (capped): the decode
+    scan is jit-compiled per static ``n_steps``, so bucketing keeps the
+    compile set at O(log cap) while the active mask absorbs the overshoot."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
+
+class _Lane:
+    """Jitted batched machinery for ONE model: a vmapped decode step, a
+    per-prompt-length prefill, and the multi-token decode scan."""
+
+    def __init__(self, model, estimator: str, temperature: float):
+        self.model = model
+        est = get_batched_estimator(estimator)
+        vstep = jax.vmap(lambda p, t, c: model.decode_step(p, t, c),
+                         in_axes=(None, 0, 0))
+        self._jit_prefill = jax.jit(
+            lambda p, toks, max_seq: model.prefill(
+                p, {"tokens": toks}, max_seq=max_seq),
+            static_argnames=("max_seq",))
+
+        def chunk(params, caches, tok, steps_left, unc_sum, rng,
+                  n_steps: int):
+            """n_steps decode steps over all slots in one scan.  Returns the
+            advanced state plus per-step (token, active) for the host."""
+            def body(carry, r):
+                caches, tok, steps_left, unc_sum = carry
+                lg, caches = vstep(params, tok, caches)      # (B, 1, V)
+                lg = lg.reshape(lg.shape[0], -1)
+                active = steps_left > 0
+                if temperature == 0.0:
+                    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                else:
+                    nxt = jax.random.categorical(
+                        r, lg / temperature, axis=-1).astype(jnp.int32)
+                unc_sum = unc_sum + jnp.where(active, est(lg), 0.0)
+                steps_left = steps_left - active.astype(jnp.int32)
+                return (caches, nxt[:, None, None], steps_left, unc_sum), \
+                    (nxt, active)
+
+            (caches, tok, steps_left, unc_sum), (toks, actives) = \
+                jax.lax.scan(body, (caches, tok, steps_left, unc_sum),
+                             jax.random.split(rng, n_steps))
+            return caches, tok, steps_left, unc_sum, toks, actives
+
+        self._chunk = jax.jit(chunk, static_argnames=("n_steps",))
+
+    def prefill(self, params, prompt, slot_len: int):
+        """Prefill ``prompt[:-1]`` into a fresh cache padded to slot_len.
+        Recompiles per distinct prompt length; the jit cache makes repeats
+        free."""
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :-1])
+        return self._jit_prefill(params, toks, max_seq=slot_len)
+
+
+# ---------------------------------------------------------------- requests
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    key: Optional[np.ndarray] = None    # semantic-cache key (set at admit)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[_Request] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+
+class BatchedEngine:
+    """Slot-based collaborative serving engine (see module docstring).
+
+    Mirrors ``CollaborativeEngine``'s decision semantics exactly — same
+    estimator, threshold, escalation modes, semantic cache — so greedy
+    traces match the per-request engine token for token.
+    """
+
+    def __init__(self, edge_model, cloud_model, *, batch_size: int = 8,
+                 gamma: int = 4, temperature: float = 0.0,
+                 escalate_threshold: float = 0.6, estimator: str = "entropy",
+                 escalation: str = "speculative", use_cache: bool = True,
+                 cache_threshold: float = 0.95, skeleton_len: int = 8,
+                 tick_tokens: int = 16, seed: int = 0):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if tick_tokens < 1:
+            raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
+        if escalation not in ("speculative", "cloud", "skeleton"):
+            raise ValueError(f"unknown escalation mode {escalation!r}; "
+                             "known: speculative | cloud | skeleton")
+        self.edge_model = edge_model
+        self.cloud_model = cloud_model
+        self.batch_size = batch_size
+        self.gamma = gamma
+        self.temperature = temperature
+        self.threshold = escalate_threshold
+        self.escalation = escalation
+        self.skeleton_len = skeleton_len
+        self.tick_tokens = tick_tokens
+        self.seed = seed
+        self.edge = _Lane(edge_model, estimator, temperature)
+        self.cloud = _Lane(cloud_model, estimator, temperature)
+        self.cache = SemanticCache(threshold=cache_threshold) if use_cache \
+            else None
+        if edge_model.rewindable_cache and cloud_model.rewindable_cache:
+            self.spec: Optional[BatchedSpecDecoder] = BatchedSpecDecoder(
+                edge_model, cloud_model, gamma=gamma, temperature=temperature)
+            self._spec_fallback = None
+        else:       # recurrent-state caches: per-request snapshot/replay
+            self.spec = None
+            self._spec_fallback = SpecDecoder(edge_model, cloud_model,
+                                              gamma=gamma,
+                                              temperature=temperature)
+        self._queue: collections.deque = collections.deque()
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ submit
+    def submit(self, prompt, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size >= 2, "scheduler needs >= 2 prompt tokens"
+        assert max_new >= 1
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Request(rid, prompt, max_new))
+        return rid
+
+    # ------------------------------------------------------------ run
+    def run(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
+        """Drain the queue; returns {rid: RequestTrace} for this drain."""
+        if not self._queue:
+            return {}
+        B = self.batch_size
+        # slot capacity: prompt + generation + speculative overdraft margin
+        # (matches SpecDecoder's max_seq so escalation reuses the same pads)
+        self._slot_len = max(r.prompt.size + r.max_new for r in self._queue) \
+            + 2 * max(self.gamma, 16) + 8
+        slots_cache = stack_slot_caches(self.edge_model, B, self._slot_len)
+        tok = jnp.zeros((B, 1, 1), jnp.int32)
+        steps = jnp.zeros((B,), jnp.int32)
+        unc = jnp.zeros((B,), jnp.float32)
+        slots = [_Slot() for _ in range(B)]
+        rng = jax.random.PRNGKey(self.seed)
+        results: Dict[int, RequestTrace] = {}
+
+        while self._queue or any(s.req is not None for s in slots):
+            # ---- admit queued requests into free slots (batched cache probe)
+            free = [b for b in range(B) if slots[b].req is None]
+            if free and self._queue:
+                cands = [self._queue.popleft()
+                         for _ in range(min(len(free), len(self._queue)))]
+                hits: List[Optional[Any]] = [None] * len(cands)
+                if self.cache is not None:
+                    for r in cands:
+                        r.key = embed_tokens_mean(self.edge_model,
+                                                  edge_params, r.prompt)
+                    hits = self.cache.lookup_batch(
+                        np.stack([r.key for r in cands]))
+                bs, caches = [], []
+                for r, hit in zip(cands, hits):
+                    if hit is not None:
+                        results[r.rid] = RequestTrace("cache",
+                                                      tokens=list(hit))
+                        continue
+                    b = free.pop(0)
+                    _, c1 = self.edge.prefill(edge_params, r.prompt,
+                                              self._slot_len)
+                    bs.append(b)
+                    caches.append(c1)
+                    slots[b] = _Slot(req=r)
+                if bs:      # one scatter for the whole admission wave
+                    slots_cache = write_slots(slots_cache, bs, caches)
+                    idx = jnp.asarray(bs, jnp.int32)
+                    lasts = jnp.asarray(
+                        [[[int(slots[b].req.prompt[-1])]] for b in bs],
+                        jnp.int32)
+                    tok = tok.at[idx].set(lasts)
+                    steps = steps.at[idx].set(jnp.asarray(
+                        [slots[b].req.max_new for b in bs], jnp.int32))
+                    unc = unc.at[idx].set(0.0)
+
+            occupied = [b for b in range(B) if slots[b].req is not None]
+            if not occupied:
+                continue            # this round was all cache hits
+
+            # ---- one batched decode tick (pow2-bucketed step count: the
+            # scan recompiles per static n_steps, so bucketing bounds the
+            # compile set; overshoot decodes masked garbage)
+            steps_h = np.asarray(steps)
+            n = _pow2_steps(int(min(self.tick_tokens,
+                                    steps_h[occupied].max())),
+                            self.tick_tokens)
+            rng, r = jax.random.split(rng)
+            slots_cache, tok, steps, unc, toks, actives = self.edge._chunk(
+                edge_params, slots_cache, tok, steps, unc, r, n_steps=n)
+            toks_h, act_h = np.asarray(toks), np.asarray(actives)
+            for b in occupied:
+                slots[b].tokens.extend(
+                    int(t) for t, a in zip(toks_h[:, b], act_h[:, b]) if a)
+
+            # ---- retire finished slots; group the uncertain ones
+            steps_h, unc_h = np.asarray(steps), np.asarray(unc)
+            group: List[Tuple[_Request, float]] = []
+            for b in occupied:
+                if steps_h[b] > 0:
+                    continue
+                req = slots[b].req
+                u = float(unc_h[b]) / req.max_new
+                if u <= self.threshold:
+                    self._finish(results, req, RequestTrace(
+                        "edge", edge_calls=req.max_new, uncertainty=u,
+                        tokens=slots[b].tokens[:req.max_new]))
+                else:
+                    # edge tokens are discarded — escalation regenerates
+                    # with cloud involvement (same as the reference engine)
+                    group.append((req, u))
+                slots[b] = _Slot()
+
+            if group:
+                rng, r = jax.random.split(rng)
+                for req, tr in self._escalate(edge_params, cloud_params,
+                                              group, r):
+                    self._finish(results, req, tr)
+
+        return results
+
+    def serve_batch(self, edge_params, cloud_params, prompts,
+                    max_new) -> List[RequestTrace]:
+        """Convenience: submit ``prompts``, drain, return traces in order.
+        ``max_new`` may be an int or a per-request sequence."""
+        if isinstance(max_new, int):
+            max_new = [max_new] * len(prompts)
+        if len(max_new) != len(prompts):
+            raise ValueError(f"{len(prompts)} prompts but {len(max_new)} "
+                             "max_new budgets")
+        rids = [self.submit(p, m) for p, m in zip(prompts, max_new)]
+        results = self.run(edge_params, cloud_params)
+        return [results[rid] for rid in rids]
+
+    # ------------------------------------------------------------ internals
+    def _finish(self, results, req: _Request, tr: RequestTrace):
+        if self.cache is not None and tr.tokens is not None \
+                and req.key is not None:
+            self.cache.insert(req.key, tr.tokens)
+        results[req.rid] = tr
+
+    def _group_generate(self, lane: _Lane, params, prompts,
+                        max_news: List[int], rng) -> List[List[int]]:
+        """Batched greedy/sampled generation for an escalation group: per-
+        request prefill, then ONE decode scan over the padded group."""
+        if max(max_news) == 0:
+            return [[] for _ in prompts]
+        n = _pow2_steps(max(max_news), 1 << 30)     # bound scan compiles
+        G = self.batch_size                         # pad: stable jit shapes
+        caches = stack_slot_caches(lane.model, G, self._slot_len)
+        tok = jnp.zeros((G, 1, 1), jnp.int32)
+        steps = jnp.zeros((G,), jnp.int32)
+        bs, c1s = [], []
+        for i, (p, m) in enumerate(zip(prompts, max_news)):
+            if m <= 0:
+                continue
+            _, c1 = lane.prefill(params, p, self._slot_len)
+            bs.append(i)
+            c1s.append(c1)
+            tok = tok.at[i, 0, 0].set(int(p[-1]))
+            steps = steps.at[i].set(m)
+        caches = write_slots(caches, bs, c1s)
+        _, _, _, _, toks, actives = lane._chunk(
+            params, caches, tok, steps, jnp.zeros((G,), jnp.float32), rng,
+            n_steps=n)
+        toks_h, act_h = np.asarray(toks), np.asarray(actives)
+        return [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i]) if a]
+                for i in range(len(prompts))]
+
+    def _escalate(self, edge_params, cloud_params, group, rng):
+        """Batched escalation of the slots retired-uncertain this tick.
+        group: list of (request, mean uncertainty)."""
+        reqs = [g[0] for g in group]
+        uncs = [g[1] for g in group]
+        out: List[Tuple[_Request, RequestTrace]] = []
+
+        if self.escalation == "cloud":
+            toks = self._group_generate(self.cloud, cloud_params,
+                                        [r.prompt for r in reqs],
+                                        [r.max_new for r in reqs], rng)
+            for r, u, t in zip(reqs, uncs, toks):
+                out.append((r, RequestTrace(
+                    "cloud", edge_calls=r.max_new, cloud_passes=r.max_new,
+                    uncertainty=u, tokens=t)))
+
+        elif self.escalation == "skeleton":
+            r1, r2 = jax.random.split(rng)
+            ks = [min(self.skeleton_len, r.max_new) for r in reqs]
+            skels = self._group_generate(self.cloud, cloud_params,
+                                         [r.prompt for r in reqs], ks, r1)
+            exts = [np.concatenate([r.prompt, np.asarray(s, np.int32)])
+                    for r, s in zip(reqs, skels)]
+            rests = self._group_generate(
+                self.edge, edge_params, exts,
+                [r.max_new - k for r, k in zip(reqs, ks)], r2)
+            for r, u, k, s, rest in zip(reqs, uncs, ks, skels, rests):
+                out.append((r, RequestTrace(
+                    "skeleton", edge_calls=r.max_new + (r.max_new - k),
+                    cloud_passes=k, uncertainty=u, tokens=s + rest)))
+
+        else:   # speculative
+            if self.spec is not None:
+                out.extend(self._spec_escalate(edge_params, cloud_params,
+                                               reqs, uncs, rng))
+            else:   # recurrent caches: per-request snapshot/replay path
+                for r, u in zip(reqs, uncs):
+                    toks, st = self._spec_fallback.generate(
+                        edge_params, cloud_params, r.prompt, r.max_new)
+                    out.append((r, RequestTrace(
+                        "speculative",
+                        edge_calls=r.max_new + st.draft_calls,
+                        cloud_passes=st.target_passes + st.replay_passes,
+                        uncertainty=u, tokens=toks)))
+        return out
+
+    def _spec_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
+        """One BatchedSpecDecoder group over all escalated requests."""
+        G = self.batch_size
+        d_slots = stack_slot_caches(self.edge_model, G, self._slot_len)
+        t_slots = stack_slot_caches(self.cloud_model, G, self._slot_len)
+        last = jnp.zeros((G, 1, 1), jnp.int32)
+        dcs, tcs = [], []
+        for i, r in enumerate(reqs):
+            dcs.append(self.edge.prefill(edge_params, r.prompt,
+                                         self._slot_len)[1])
+            tcs.append(self.cloud.prefill(cloud_params, r.prompt,
+                                          self._slot_len)[1])
+            last = last.at[i, 0, 0].set(int(r.prompt[-1]))
+        d_slots = write_slots(d_slots, list(range(len(reqs))), dcs)
+        t_slots = write_slots(t_slots, list(range(len(reqs))), tcs)
+        max_news = [r.max_new for r in reqs] + [0] * (G - len(reqs))
+        outs, stats = self.spec.generate_group(
+            edge_params, cloud_params, d_slots, t_slots, last, max_news, rng)
+        res = []
+        for i, (r, u) in enumerate(zip(reqs, uncs)):
+            st = stats[i]
+            res.append((r, RequestTrace(
+                "speculative",
+                edge_calls=r.max_new + st["rounds"] * (self.gamma + 1),
+                cloud_passes=st["rounds"], uncertainty=u, tokens=outs[i])))
+        return res
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, Any]:
+        return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0}

@@ -248,6 +248,129 @@ class SpecDecoder:
         return out[:max_new], stats
 
 
+class BatchedSpecDecoder:
+    """Grouped edge-draft / cloud-verify decoding for the serving scheduler.
+
+    Where ``SpecDecoder`` runs one request with a host round-trip per draft
+    token, this operates on a padded GROUP of requests with stacked per-slot
+    caches (leading slot axis, per-slot scalar ``pos``):
+
+      * drafting is ONE jitted ``lax.scan`` of gamma+1 steps over the whole
+        group (vmapped ``decode_step``);
+      * verification is ONE batched target ``extend_step`` over all slots;
+      * acceptance (vmapped ``speculative_sample``) and the per-slot cache
+        rewind both happen on device — one host sync per ROUND, per group.
+
+    Requires rewindable (KV) caches for both models: per-slot rewind is a
+    ``pos`` write.  Recurrent-state families (ssm/hybrid) need snapshot +
+    replay of per-slot accepted prefixes of DIFFERENT lengths, which does
+    not batch — the scheduler falls back to per-request ``SpecDecoder``.
+
+    The caller owns admission: ``generate_group`` takes already-prefilled
+    stacked caches (see ``core.scheduler.stack_slot_caches`` /
+    ``write_slot``) so the scheduler can reuse its slot machinery.
+    """
+
+    def __init__(self, draft_model, target_model, *, gamma: int = 4,
+                 temperature: float = 0.0):
+        if not (draft_model.rewindable_cache and target_model.rewindable_cache):
+            raise ValueError("BatchedSpecDecoder requires rewindable (KV) "
+                             "caches for both models; use SpecDecoder for "
+                             "recurrent-state families")
+        self.gamma = gamma
+        self.temperature = temperature
+        self._vdraft = jax.vmap(
+            lambda p, t, c: draft_model.decode_step(p, t, c),
+            in_axes=(None, 0, 0))
+        self._vverify = jax.vmap(
+            lambda p, t, c: target_model.extend_step(p, t, c),
+            in_axes=(None, 0, 0))
+        self._round = jax.jit(self._round_impl)
+
+    def _round_impl(self, draft_params, target_params, d_slots, t_slots,
+                    last, active, rng):
+        """One draft/verify/commit round over the whole group.
+
+        last: (G, 1, 1) pending tokens; active: (G,) bool — frozen slots
+        keep their cache position and pending token.  Both caches satisfy
+        the SpecDecoder invariant (contain sequence[:-1]) on entry and exit.
+        """
+        gamma = self.gamma
+        G = last.shape[0]
+        d_snap = d_slots["pos"]                      # (G,)
+        t_snap = t_slots["pos"]
+        r_draft, r_ver = jax.random.split(rng)
+
+        # ---- draft gamma tokens (+1 step so a fully-accepted draft's last
+        # token is already in the cache when we rewind to snap+gamma+1)
+        def body(carry, r):
+            caches, tok = carry
+            lg, caches = self._vdraft(draft_params, tok, caches)
+            lg = lg.reshape(G, -1)
+            if self.temperature == 0.0:
+                nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+            else:
+                nxt = jax.random.categorical(
+                    r, lg / self.temperature, axis=-1).astype(jnp.int32)
+            return (caches, nxt[:, None, None]), (nxt, lg)
+
+        (d_slots, _), (toks, lgs) = jax.lax.scan(
+            body, (d_slots, last), jax.random.split(r_draft, gamma + 1))
+        draft_toks = toks[:gamma].T                  # (G, gamma)
+        draft_lgs = jnp.moveaxis(lgs[:gamma], 0, 1)  # (G, gamma, V)
+
+        # ---- verify in one batched target pass over [last, d_0..d_{g-1}]
+        ver_in = jnp.concatenate([last[:, :, 0], draft_toks], axis=1)[:, None, :]
+        t_logits, t_slots = self._vverify(target_params, ver_in, t_slots)
+
+        n_acc, next_tok = jax.vmap(
+            functools.partial(speculative_sample,
+                              temperature=self.temperature)
+        )(jax.random.split(r_ver, G), t_logits[:, 0], draft_lgs, draft_toks)
+
+        # ---- per-slot rewind: caches now hold sequence + accepted draft;
+        # frozen slots restore their snapshot (their writes were garbage
+        # past pos, masked out and overwritten on the next real round).
+        d_slots = {**d_slots,
+                   "pos": jnp.where(active, d_snap + n_acc + 1, d_snap)}
+        t_slots = {**t_slots,
+                   "pos": jnp.where(active, t_snap + n_acc + 1, t_snap)}
+        last = jnp.where(active[:, None, None], next_tok[:, None, None], last)
+        return d_slots, t_slots, last, draft_toks, n_acc, next_tok
+
+    def generate_group(self, draft_params, target_params, d_slots, t_slots,
+                       last, max_news, rng=None):
+        """Decode a prefilled group until every member has its tokens.
+
+        max_news: per-slot budget (0 for padding slots).  Returns
+        (token lists, per-member stats dicts with rounds/accepted).
+        """
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        G = last.shape[0]
+        remaining = np.asarray(max_news, np.int64).copy()
+        out: List[List[int]] = [[] for _ in range(G)]
+        member_stats = [{"rounds": 0, "accepted": []} for _ in range(G)]
+
+        while (remaining > 0).any():
+            active = jnp.asarray(remaining > 0)
+            rng, r = jax.random.split(rng)
+            d_slots, t_slots, last, draft_toks, n_acc, next_tok = self._round(
+                draft_params, target_params, d_slots, t_slots, last, active, r)
+            dt = np.asarray(draft_toks)
+            na = np.asarray(n_acc)
+            nt = np.asarray(next_tok)
+            for i in range(G):
+                if remaining[i] <= 0:
+                    continue
+                emitted = [int(t) for t in dt[i, :int(na[i])]] + [int(nt[i])]
+                take = min(len(emitted), int(remaining[i]))
+                out[i].extend(emitted[:take])
+                remaining[i] -= take
+                member_stats[i]["rounds"] += 1
+                member_stats[i]["accepted"].append(int(na[i]))
+        return out, member_stats
+
+
 def autoregressive_baseline(model, params, prompt, max_new: int, rng=None,
                             temperature: float = 1.0):
     """Plain target-only decoding — the survey's cloud-only baseline."""

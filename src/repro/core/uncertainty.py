@@ -79,3 +79,21 @@ def get_estimator(name: str):
     if name not in ESTIMATORS:
         raise KeyError(f"unknown estimator {name!r}; known: {sorted(ESTIMATORS)}")
     return ESTIMATORS[name]
+
+
+def get_batched_estimator(name: str):
+    """Batched per-slot estimator for the serving scheduler.
+
+    Returns ``fn: logits (B, ..., V) -> (B,) float32`` — one scalar per
+    batch slot, computed entirely on device so the scheduler's decode scan
+    can accumulate uncertainty without a per-token host sync.  Singleton
+    middle axes (e.g. the (B, 1, V) shape produced by a vmapped
+    ``decode_step``) are squeezed into the per-slot scalar.
+    """
+    est = get_estimator(name)
+
+    def batched(logits):
+        u = est(logits.astype(jnp.float32))
+        return jnp.reshape(u, (logits.shape[0],)).astype(jnp.float32)
+
+    return batched

@@ -1,0 +1,13 @@
+"""Pallas-TPU API compatibility shims.
+
+JAX has renamed the TPU compiler-params dataclass across releases
+(``pltpu.CompilerParams`` <-> ``pltpu.TPUCompilerParams``).  Kernels import
+the resolved name from here so they run against whichever the installed
+JAX provides.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "TPUCompilerParams", None) \
+    or getattr(pltpu, "CompilerParams")

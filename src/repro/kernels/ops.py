@@ -13,6 +13,7 @@ import jax
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.spec_verify import spec_verify as _verify
+from repro.kernels.spec_verify import spec_verify_batched as _verify_batched
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd
 
 
@@ -33,6 +34,14 @@ def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,
                 temperature=1.0):
     return _verify(rng, target_logits, draft_logits, draft_tokens,
                    temperature=temperature, interpret=on_cpu())
+
+
+def spec_verify_batched(rngs, target_logits, draft_logits, draft_tokens, *,
+                        temperature=1.0):
+    """Grouped verification (leading group axis on every operand) — the
+    fused TPU twin of BatchedSpecDecoder's vmapped speculative_sample."""
+    return _verify_batched(rngs, target_logits, draft_logits, draft_tokens,
+                           temperature=temperature, interpret=on_cpu())
 
 
 def ssd_chunk_scan(q, k, v, log_a, log_i, *, chunk=128):

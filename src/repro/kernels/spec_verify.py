@@ -100,3 +100,23 @@ def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,
     n_acc = jnp.sum(jnp.cumprod(accept[:gamma]))
     next_token = resid_tok[n_acc]
     return n_acc, next_token
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "interpret"))
+def spec_verify_batched(rngs, target_logits, draft_logits, draft_tokens, *,
+                        temperature: float = 1.0, interpret: bool = False):
+    """Grouped fused verification (kernel counterpart of the pure-jnp
+    ``vmap(speculative_sample)`` inside ``core.speculative
+    .BatchedSpecDecoder``, which is what the engine runs on CPU — like the
+    single-row ``spec_verify``, this is the TPU-targeted twin, validated
+    against the reference path in tests).
+
+    rngs: (G, 2) keys; target_logits: (G, gamma+1, V); draft_logits:
+    (G, gamma, V); draft_tokens: (G, gamma).  Pallas lifts the vmapped
+    kernel into an extra grid dimension, so the whole group verifies in one
+    launch.  Returns (n_accepted (G,), next_token (G,)).
+    """
+    return jax.vmap(
+        functools.partial(spec_verify, temperature=temperature,
+                          interpret=interpret)
+    )(rngs, target_logits, draft_logits, draft_tokens)

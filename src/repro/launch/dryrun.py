@@ -209,12 +209,12 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, verbose: bool = True
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     # trip-count-aware re-analysis (XLA counts while bodies once; our models
     # are scan-over-layers, so this correction is essential — see hlo_cost.py)
-    from repro.launch.hlo_cost import analyze_hlo
+    from repro.launch.hlo_cost import analyze_hlo, cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     hc = analyze_hlo(hlo_text)
 
     rec = {

@@ -27,6 +27,15 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Version-compatible ``compiled.cost_analysis()``: older JAX returns a
+    one-element list of per-device dicts, newer returns the dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _CALLED_SINGLE_RE = re.compile(

@@ -1,8 +1,14 @@
-"""Collaborative serving launcher: edge SLM + cloud LLM behind the
-CollaborativeEngine (task-level mixture) with speculative escalation.
+"""Collaborative serving launcher: edge SLM + cloud LLM behind the batched
+continuous-batching scheduler (task-level mixture with speculative
+escalation).
 
     PYTHONPATH=src python -m repro.launch.serve --edge smollm-135m \
-        --cloud granite-8b --requests 16 --reduced
+        --cloud granite-8b --requests 32 --reduced \
+        --scheduler batched --batch-size 8
+
+``--scheduler per-request`` runs the legacy one-at-a-time reference loop
+(useful for tracing and as the baseline the batched numbers are quoted
+against).
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engine import CollaborativeEngine
+from repro.core.scheduler import BatchedEngine
 from repro.data import SyntheticLM
 from repro.models import Model
 
@@ -29,6 +36,14 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.6)
     ap.add_argument("--escalation", default="speculative",
                     choices=["speculative", "cloud", "skeleton"])
+    ap.add_argument("--scheduler", default="batched",
+                    choices=["batched", "per-request"],
+                    help="batched continuous-batching scheduler vs the "
+                         "legacy one-request-at-a-time reference loop")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="scheduler slots (batched scheduler only)")
+    ap.add_argument("--tick-tokens", type=int, default=16,
+                    help="decode steps per jitted scheduler tick")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -43,23 +58,45 @@ def main():
     edge, cloud = Model(e_cfg), Model(c_cfg)
     ep = edge.init(jax.random.PRNGKey(0))
     cp = cloud.init(jax.random.PRNGKey(1))
-    eng = CollaborativeEngine(edge, cloud, gamma=args.gamma, temperature=0.0,
-                              escalate_threshold=args.threshold,
-                              escalation=args.escalation)
 
     synth = SyntheticLM(v)
     rng = np.random.default_rng(0)
+    prompts = [synth.sample(rng, i % synth.n_domains, args.prompt_len)
+               for i in range(args.requests)]
     paths = {}
-    t0 = time.time()
-    for i in range(args.requests):
-        prompt = synth.sample(rng, i % synth.n_domains, args.prompt_len)
-        tr = eng.serve(ep, cp, prompt, args.max_new)
-        paths[tr.path] = paths.get(tr.path, 0) + 1
-        print(f"req {i:3d} path={tr.path:12s} unc={tr.uncertainty:.3f} "
-              f"edge_calls={tr.edge_calls} cloud_passes={tr.cloud_passes}")
-    print(f"\n{args.requests} requests in {time.time()-t0:.1f}s; "
-          f"paths: {paths}; cache hit rate "
-          f"{eng.stats()['cache_hit_rate']:.2f}")
+
+    if args.scheduler == "batched":
+        eng = BatchedEngine(edge, cloud, batch_size=args.batch_size,
+                            gamma=args.gamma, temperature=0.0,
+                            escalate_threshold=args.threshold,
+                            escalation=args.escalation,
+                            tick_tokens=args.tick_tokens)
+        t0 = time.time()
+        traces = eng.serve_batch(ep, cp, prompts, args.max_new)
+        dt = time.time() - t0
+        for i, tr in enumerate(traces):
+            paths[tr.path] = paths.get(tr.path, 0) + 1
+            print(f"req {i:3d} path={tr.path:12s} unc={tr.uncertainty:.3f} "
+                  f"edge_calls={tr.edge_calls} cloud_passes={tr.cloud_passes}")
+        stats = eng.stats()
+    else:
+        eng = CollaborativeEngine(edge, cloud, gamma=args.gamma,
+                                  temperature=0.0,
+                                  escalate_threshold=args.threshold,
+                                  escalation=args.escalation)
+        t0 = time.time()
+        for i, prompt in enumerate(prompts):
+            tr = eng.serve_reference(ep, cp, prompt, args.max_new)
+            paths[tr.path] = paths.get(tr.path, 0) + 1
+            print(f"req {i:3d} path={tr.path:12s} unc={tr.uncertainty:.3f} "
+                  f"edge_calls={tr.edge_calls} cloud_passes={tr.cloud_passes}")
+        dt = time.time() - t0
+        stats = eng.stats()
+
+    toks = args.requests * args.max_new
+    print(f"\n{args.requests} requests in {dt:.1f}s "
+          f"({args.requests / dt:.2f} req/s, {toks / dt:.1f} tok/s); "
+          f"paths: {paths}; cache hit rate {stats['cache_hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

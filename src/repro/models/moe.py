@@ -98,7 +98,8 @@ def moe_block_sharded(p, x, cfg, mesh, dp_axes, ep_axis: str):
     survey's edge<->cloud MoE transfers correspond to.
     """
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+
+    from repro.runtime import shard_map
 
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.top_k

@@ -7,10 +7,40 @@ can find it at trace time.
 from __future__ import annotations
 
 import contextlib
+import inspect
 import threading
 from typing import Optional, Tuple
 
 _state = threading.local()
+
+
+# ---------------------------------------------------------------- shard_map
+def _resolve_shard_map():
+    """Locate shard_map across JAX versions: newest exports it from the
+    top-level ``jax`` namespace, older releases from
+    ``jax.experimental.shard_map``."""
+    import jax
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn
+    return fn
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compatible ``shard_map`` wrapper.
+
+    Newer JAX calls the replication-checking flag ``check_vma``; older
+    releases call it ``check_rep``.  Model code imports this shim so the
+    explicitly-distributed layers (MoE expert parallelism) run on either.
+    """
+    fn = _resolve_shard_map()
+    params = inspect.signature(fn).parameters
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in params:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in params:
+        kw["check_rep"] = check_vma
+    return fn(f, **kw)
 
 
 def current_mesh():

@@ -89,6 +89,23 @@ def test_spec_verify_all_accept_identical():
     assert int(n) == 4
 
 
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_spec_verify_batched_matches_per_row(temperature):
+    """The grouped entry point equals per-member spec_verify calls."""
+    G, gamma, V = 3, 4, 256
+    rngs = jax.random.split(jax.random.PRNGKey(7), G)
+    tl = _rand(0, (G, gamma + 1, V), jnp.float32) * 2
+    dl = tl[:, :gamma] + _rand(1, (G, gamma, V), jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (G, gamma), 0, V)
+    n_b, t_b = ops.spec_verify_batched(rngs, tl, dl, toks,
+                                       temperature=temperature)
+    for g in range(G):
+        n1, t1 = ops.spec_verify(rngs[g], tl[g], dl[g], toks[g],
+                                 temperature=temperature)
+        assert int(n_b[g]) == int(n1)
+        assert int(t_b[g]) == int(t1)
+
+
 # ------------------------------------------------------------ ssd scan
 @pytest.mark.parametrize("B,S,H,N,P,Q", [(1, 128, 2, 16, 32, 32),
                                          (2, 256, 3, 32, 64, 64),

@@ -1,0 +1,182 @@
+"""Batched continuous-batching scheduler vs the per-request reference.
+
+The contract: ``BatchedEngine`` changes the EXECUTION (slots, one jitted
+scan per tick, grouped escalation) but not the SEMANTICS — greedy traces
+must match ``CollaborativeEngine.serve_reference`` token for token, on
+every path of the taxonomy (cache / edge / speculative / skeleton / cloud),
+under staggered prompt lengths and generation budgets.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cache import SemanticCache
+from repro.core.engine import CollaborativeEngine
+from repro.core.scheduler import BatchedEngine, stack_slot_caches, write_slot
+from repro.core.speculative import autoregressive_baseline
+from repro.core.uncertainty import get_batched_estimator
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, specs):
+    """specs: list of (length, offset) -> deterministic distinct prompts."""
+    return [((np.arange(n) * 7 + off) % vocab).astype(np.int32)
+            for n, off in specs]
+
+
+# ---------------------------------------------------------------- edge path
+def test_edge_token_parity_with_reference(pair):
+    """Greedy tokens AND accumulated uncertainty match the per-request
+    reference loop exactly, with a batch smaller than the request count so
+    slots admit/retire mid-run."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              escalate_threshold=1.1, use_cache=False)
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=1.1, use_cache=False,
+                       tick_tokens=4)
+    rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for rt, bt in zip(rts, bts):
+        assert bt.path == rt.path == "edge"
+        assert bt.tokens == rt.tokens
+        assert bt.edge_calls == rt.edge_calls
+        assert abs(bt.uncertainty - rt.uncertainty) < 1e-5
+
+
+def test_staggered_budgets_admit_retire(pair):
+    """Requests with different max_new retire at different ticks; freed
+    slots are re-admitted and every request still matches the reference."""
+    edge, ep, cloud, cp = pair
+    specs = [(8, 0), (6, 3), (9, 7), (5, 2), (10, 9)]
+    prompts = _prompts(edge.cfg.vocab_size, specs)
+    budgets = [3, 11, 6, 9, 4]
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              escalate_threshold=1.1, use_cache=False)
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=1.1, use_cache=False,
+                       tick_tokens=4)
+    bts = be.serve_batch(ep, cp, prompts, budgets)
+    for p, m, bt in zip(prompts, budgets, bts):
+        rt = ref.serve_reference(ep, cp, p, m)
+        assert bt.tokens == rt.tokens
+        assert len(bt.tokens) == m
+
+
+# ---------------------------------------------------------------- escalation
+@pytest.mark.parametrize("esc", ["speculative", "cloud", "skeleton"])
+def test_escalation_parity_with_reference(pair, esc):
+    """Grouped batched escalation selects the same path and emits the same
+    greedy tokens as the single-request trace, per mode."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5)])
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              escalate_threshold=-1.0, escalation=esc,
+                              use_cache=False, skeleton_len=4)
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=-1.0, escalation=esc,
+                       use_cache=False, skeleton_len=4, tick_tokens=4)
+    rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for rt, bt in zip(rts, bts):
+        assert bt.path == rt.path == esc
+        assert bt.tokens == rt.tokens
+
+
+def test_speculative_escalation_lossless_batched(pair):
+    """Greedy speculative escalation equals cloud-only greedy decoding
+    (losslessness survives batching)."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3)])
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=-1.0, use_cache=False)
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for p, bt in zip(prompts, bts):
+        base = autoregressive_baseline(cloud, cp, p, 8, temperature=0.0)
+        assert bt.tokens == base
+
+
+def test_mixed_paths_one_batch(pair):
+    """Path selection is per-request even inside one batch: an engine serving
+    requests under a mid threshold classifies each by ITS OWN uncertainty,
+    matching the reference decisions."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              escalate_threshold=0.9915, use_cache=False)
+    be = BatchedEngine(edge, cloud, batch_size=4, temperature=0.0,
+                       escalate_threshold=0.9915, use_cache=False)
+    rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    assert [bt.path for bt in bts] == [rt.path for rt in rts]
+    for rt, bt in zip(rts, bts):
+        assert bt.tokens == rt.tokens
+
+
+# ---------------------------------------------------------------- cache
+def test_cache_hit_path(pair):
+    edge, ep, cloud, cp = pair
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=1.1, cache_threshold=0.99)
+    p = _prompts(edge.cfg.vocab_size, [(8, 0)])[0]
+    t1 = be.serve_batch(ep, cp, [p], 8)[0]
+    t2 = be.serve_batch(ep, cp, [p], 8)[0]
+    assert t1.path == "edge" and t2.path == "cache"
+    assert t2.tokens == t1.tokens
+
+
+def test_semantic_cache_batch_lookup():
+    cache = SemanticCache(threshold=0.9)
+    rng = np.random.default_rng(0)
+    keys = rng.normal(size=(4, 16)).astype(np.float32)
+    for i, k in enumerate(keys):
+        cache.insert(k, f"v{i}")
+    # cosine similarity is scale-invariant: scaled copies must hit; fresh
+    # random 16-d keys are (overwhelmingly) below a 0.9 threshold
+    queries = np.concatenate([keys[:2] * 3.0,
+                              rng.normal(size=(2, 16)).astype(np.float32)])
+    batch = cache.lookup_batch(queries)
+    assert batch[:2] == ["v0", "v1"]
+    assert batch[2:] == [None, None]
+    assert cache.lookups == 4 and cache.hits == 2
+    # scalar lookup is the N=1 special case of the batched path
+    assert cache.lookup(keys[3] * 0.5) == "v3"
+
+
+# ---------------------------------------------------------------- device API
+def test_batched_estimator_per_slot_scalars():
+    est = get_batched_estimator("entropy")
+    lg = jax.random.normal(jax.random.PRNGKey(0), (5, 1, 33))
+    u = est(lg)
+    assert u.shape == (5,) and u.dtype == jnp.float32
+    ref = get_batched_estimator("entropy")(lg.reshape(5, 33))
+    np.testing.assert_allclose(np.asarray(u), np.asarray(ref), rtol=1e-6)
+
+
+def test_slot_write_isolation(pair):
+    """Writing one slot's prefilled cache leaves the other slots' state
+    untouched (leading-axis isolation of the stacked pytree)."""
+    edge, ep, _, _ = pair
+    slots = stack_slot_caches(edge, 3, 32)
+    _, c1 = jax.jit(lambda p, t: edge.prefill(p, {"tokens": t}, max_seq=32)
+                    )(ep, jnp.arange(8, dtype=jnp.int32)[None, :])
+    written = write_slot(slots, 1, c1)
+    for leaf_w, leaf_0 in zip(jax.tree.leaves(written),
+                              jax.tree.leaves(slots)):
+        np.testing.assert_array_equal(np.asarray(leaf_w[0]),
+                                      np.asarray(leaf_0[0]))
+        np.testing.assert_array_equal(np.asarray(leaf_w[2]),
+                                      np.asarray(leaf_0[2]))

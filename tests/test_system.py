@@ -110,7 +110,8 @@ b_sh = SH.batch_shardings(batch, mesh)
 with runtime.mesh_context(mesh):
     compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
         params, opt_state, batch).compile()
-print("COMPILED_OK", compiled.cost_analysis().get("flops", 0) > 0)
+from repro.launch.hlo_cost import cost_analysis_dict
+print("COMPILED_OK", cost_analysis_dict(compiled).get("flops", 0) > 0)
 """
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", script], env=env,
