@@ -1,4 +1,5 @@
-"""Serving-scheduler benchmark: per-request vs batched continuous batching.
+"""Serving-scheduler benchmark: per-request vs batched continuous batching,
+and dense vs paged KV layout.
 
 The ROADMAP's throughput claim lives or dies on the serving loop, not the
 kernels: the per-request engine pays a host round-trip per decoded token,
@@ -11,13 +12,28 @@ mixed-uncertainty traffic on reduced configs, across three regimes:
                   slots retire into a grouped escalation each drain)
   * escalate    — every request escalates (speculative)
 
-Emits ``serving_<regime>,<scheduler>,<req/s>`` rows plus a
-``serving_speedup_<regime>`` row (batched / per-request).  Acceptance
-target: >= 3x req/s for the batched scheduler at batch size 16 on the edge
-regime.
+The PAGED-vs-DENSE arm runs the batched scheduler over a skewed
+prompt-length mix (one 4x-length outlier per batch): dense pads every slot
+to the outlier, the paged layout (``core/paged_cache.py``) backs each
+request with exactly the blocks it touches.  It reports req/s and PEAK KV
+CACHE BYTES for both layouts, asserts token-for-token parity, and asserts
+the paged peak is strictly below dense.
+
+Emits ``name,case,value`` CSV rows on stdout and writes the full result
+set as JSON (``--out``, default ``BENCH_serving.json``) — the artifact the
+CI ``bench-smoke`` job uploads per-commit so the perf trajectory is
+trackable.  ``--smoke`` shrinks the workload to a CI-sized config and
+skips the slow per-request baseline regimes (the paged-vs-dense arm always
+runs).
+
+Acceptance targets: >= 3x req/s for the batched scheduler at batch 16 on
+the edge regime (full mode); paged peak KV bytes strictly below dense with
+req/s within 10% on the skewed mix.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -58,18 +74,17 @@ def _per_request(edge, cloud, ep, cp, prompts, threshold):
     return time.time() - t0, traces
 
 
-def _batched(edge, cloud, ep, cp, prompts, threshold):
+def _batched(edge, cloud, ep, cp, prompts, threshold, **kw):
     eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
-                        escalate_threshold=threshold, use_cache=False)
+                        escalate_threshold=threshold, use_cache=False, **kw)
     eng.serve_batch(ep, cp, prompts[:BATCH], MAX_NEW)     # warm the jits
     t0 = time.time()
     traces = eng.serve_batch(ep, cp, prompts, MAX_NEW)
-    return time.time() - t0, traces
+    return time.time() - t0, traces, eng.stats()
 
 
-def run(csv=print):
-    edge, ep, cloud, cp, prompts = _setup()
-
+def _scheduler_regimes(edge, ep, cloud, cp, prompts, csv, rows):
+    """Per-request vs batched req/s across the three uncertainty regimes."""
     # probe per-request uncertainties once to place the mixed threshold
     probe = CollaborativeEngine(edge, cloud, temperature=0.0,
                                 escalate_threshold=1.1, use_cache=False)
@@ -83,20 +98,84 @@ def run(csv=print):
 
     for regime, threshold in regimes.items():
         dt_ref, tr_ref = _per_request(edge, cloud, ep, cp, prompts, threshold)
-        dt_bat, tr_bat = _batched(edge, cloud, ep, cp, prompts, threshold)
+        dt_bat, tr_bat, _ = _batched(edge, cloud, ep, cp, prompts, threshold)
         esc = sum(t.path != "edge" for t in tr_bat)
         assert [t.path for t in tr_bat] == [t.path for t in tr_ref]
-        csv(f"serving_{regime},per_request_req_s,{REQUESTS / dt_ref:.3f}")
-        csv(f"serving_{regime},batched{BATCH}_req_s,{REQUESTS / dt_bat:.3f}")
-        csv(f"serving_{regime},per_request_tok_s,"
-            f"{REQUESTS * MAX_NEW / dt_ref:.1f}")
-        csv(f"serving_{regime},batched{BATCH}_tok_s,"
-            f"{REQUESTS * MAX_NEW / dt_bat:.1f}")
+        n = len(prompts)
+        rows[f"serving_{regime}"] = {
+            "per_request_req_s": n / dt_ref,
+            f"batched{BATCH}_req_s": n / dt_bat,
+            "speedup": dt_ref / dt_bat,
+            "escalated": esc,
+        }
+        csv(f"serving_{regime},per_request_req_s,{n / dt_ref:.3f}")
+        csv(f"serving_{regime},batched{BATCH}_req_s,{n / dt_bat:.3f}")
+        csv(f"serving_{regime},per_request_tok_s,{n * MAX_NEW / dt_ref:.1f}")
+        csv(f"serving_{regime},batched{BATCH}_tok_s,{n * MAX_NEW / dt_bat:.1f}")
         csv(f"serving_speedup_{regime},batched{BATCH}_vs_per_request,"
             f"{dt_ref / dt_bat:.2f}")
         csv(f"serving_{regime},escalated,{esc}")
 
 
+def _paged_vs_dense(edge, ep, cloud, cp, csv, rows):
+    """Skewed prompt-length mix (one 4x outlier per batch): paged must
+    match dense token-for-token at a strictly smaller peak KV footprint."""
+    synth = SyntheticLM(edge.cfg.vocab_size)
+    rng = np.random.default_rng(1)
+    prompts = [synth.sample(rng, i % synth.n_domains,
+                            4 * PROMPT_LEN if i % BATCH == 0 else PROMPT_LEN)
+               for i in range(REQUESTS)]
+    arms = {}
+    for layout in ("dense", "paged"):
+        dt, traces, stats = _batched(edge, cloud, ep, cp, prompts, 1.1,
+                                     kv_layout=layout)
+        arms[layout] = (traces, stats)
+        rows.setdefault("paged_vs_dense", {})[layout] = {
+            "req_s": len(prompts) / dt,
+            "kv_peak_bytes": stats["kv_peak_bytes"],
+            "kv_capacity_bytes": stats["kv_capacity_bytes"],
+        }
+        csv(f"serving_skewed,{layout}_req_s,{len(prompts) / dt:.3f}")
+        csv(f"serving_skewed,{layout}_kv_peak_mb,"
+            f"{stats['kv_peak_bytes'] / 1e6:.3f}")
+    (d_tr, d_stats), (p_tr, p_stats) = arms["dense"], arms["paged"]
+    assert all(dt.tokens == pt.tokens for dt, pt in zip(d_tr, p_tr)), \
+        "paged layout diverged from the dense parity oracle"
+    assert p_stats["kv_peak_bytes"] < d_stats["kv_peak_bytes"], \
+        (p_stats["kv_peak_bytes"], d_stats["kv_peak_bytes"])
+    ratio = d_stats["kv_peak_bytes"] / p_stats["kv_peak_bytes"]
+    rows["paged_vs_dense"]["kv_savings_x"] = ratio
+    csv(f"serving_skewed,paged_kv_savings_x,{ratio:.2f}")
+
+
+def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
+    global REQUESTS, MAX_NEW, BATCH
+    saved = (REQUESTS, MAX_NEW, BATCH)
+    if smoke:
+        REQUESTS, MAX_NEW, BATCH = 8, 8, 4
+    try:
+        edge, ep, cloud, cp, prompts = _setup()
+        rows: dict = {"config": {"requests": REQUESTS,
+                                 "prompt_len": PROMPT_LEN,
+                                 "max_new": MAX_NEW, "batch": BATCH,
+                                 "smoke": smoke}}
+        if not smoke:
+            _scheduler_regimes(edge, ep, cloud, cp, prompts, csv, rows)
+        _paged_vs_dense(edge, ep, cloud, cp, csv, rows)
+    finally:
+        REQUESTS, MAX_NEW, BATCH = saved
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2)
+    return rows
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: paged-vs-dense arm only")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON results path ('' to skip)")
+    args = ap.parse_args()
     print("name,case,value")
-    run()
+    run(smoke=args.smoke, out=args.out)

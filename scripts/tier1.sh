@@ -1,6 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md). Extra pytest args pass through, e.g.:
 #   scripts/tier1.sh -m "not slow"
+#   scripts/tier1.sh -m "not slow" --junitxml=test-report.xml
+# Set TIER1_NO_FAILFAST=1 to drop the default -x so report files cover the
+# whole suite (CI artifact mode).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+args=(-q)
+[[ -n "${TIER1_NO_FAILFAST:-}" ]] || args+=(-x)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest "${args[@]}" "$@"

@@ -12,11 +12,13 @@ engine that composes the taxonomy's mechanisms per request:
 Serving architecture
 --------------------
 The serving path is the batched continuous-batching scheduler in
-``core/scheduler.py``: slot-based admission into padded per-slot KV caches,
-one jitted multi-token ``lax.scan`` per tick over the whole batch (with
-uncertainty accumulated on device — no per-token host sync), and grouped
-batched escalation.  ``CollaborativeEngine`` keeps the original
-single-request API as a thin wrapper over a ``batch_size=1``
+``core/scheduler.py``: slot-based admission into per-slot KV caches — by
+default PAGED (a shared block pool plus per-slot block tables,
+``core/paged_cache.py``; ``kv_layout="dense"`` keeps the padded-slab
+parity oracle) — one jitted multi-token ``lax.scan`` per tick over the
+whole batch (with uncertainty accumulated on device — no per-token host
+sync), and grouped batched escalation.  ``CollaborativeEngine`` keeps the
+original single-request API as a thin wrapper over a ``batch_size=1``
 ``BatchedEngine``; multi-request callers should construct ``BatchedEngine``
 directly (or via ``launch/serve.py --scheduler batched``).
 
@@ -52,7 +54,8 @@ class CollaborativeEngine:
                  temperature: float = 0.0, escalate_threshold: float = 0.6,
                  estimator: str = "entropy", escalation: str = "speculative",
                  use_cache: bool = True, cache_threshold: float = 0.95,
-                 skeleton_len: int = 8):
+                 skeleton_len: int = 8, kv_layout: str = "auto",
+                 kv_block_size: int = 32, kv_blocks=None):
         self.edge = edge_model
         self.cloud = cloud_model
         self.temperature = temperature
@@ -66,7 +69,9 @@ class CollaborativeEngine:
             edge_model, cloud_model, batch_size=1, gamma=gamma,
             temperature=temperature, escalate_threshold=escalate_threshold,
             estimator=estimator, escalation=escalation, use_cache=use_cache,
-            cache_threshold=cache_threshold, skeleton_len=skeleton_len)
+            cache_threshold=cache_threshold, skeleton_len=skeleton_len,
+            kv_layout=kv_layout, kv_block_size=kv_block_size,
+            kv_blocks=kv_blocks)
         # single shared semantic cache: reference and scheduler paths hit
         # (and warm) the same entries
         self.cache = self.batched.cache

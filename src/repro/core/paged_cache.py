@@ -1,0 +1,131 @@
+"""Paged (block) KV-cache allocation for the serving scheduler.
+
+The dense scheduler pads every slot's KV cache to a common ``slot_len``, so
+one long-prompt outlier inflates every slot (ROADMAP "Paged KV" gap).  This
+module is the memory half of the fix — the vLLM-style block pool:
+
+  * the device cache is ONE pool of ``num_blocks`` fixed-size token blocks
+    per layer (``models/transformer.init_paged_cache``), shared by all
+    slots;
+  * each slot owns a list of block ids; the device sees them as a padded
+    int32 BLOCK TABLE row ``(max_blocks,)`` — logical position ``p`` of
+    slot ``b`` lives in block ``table[b, p // block_size]`` at offset
+    ``p % block_size``;
+  * blocks are allocated at admission (prompt prefill), GROWN on demand at
+    decode time (one tick's worth at a time), and freed at retirement —
+    per-slot capacity is decoupled from the batch's worst request.
+
+Block 0 is the TRAP block: it is never allocated, and every unused table
+entry points at it.  Retired slots keep garbage-decoding behind the
+scheduler's ``active`` mask until re-admission; redirecting their table
+rows to the trap confines those masked writes so freed blocks can be
+reallocated immediately without corruption.
+
+``BlockPool`` is the host-side allocator (pure Python bookkeeping — block
+ids only, no device arrays); ``write_pool_blocks`` is the jitted scatter
+that lands a prefilled prompt's K/V blocks in the pool.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+
+TRAP_BLOCK = 0
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` cache entries (0 tokens -> 0)."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // block_size)
+
+
+class BlockPool:
+    """Host-side fixed-size block allocator over a device KV pool.
+
+    Tracks only block IDS — the device arrays live in the scheduler's
+    cache pytree.  Block 0 (``TRAP_BLOCK``) is reserved and never handed
+    out.  ``peak_used`` is the high-water mark of live blocks, which the
+    benchmark converts to peak cache bytes.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is the trap), got "
+                             f"{num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # stack: low ids handed out first (deterministic layouts in tests)
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._owned: Dict[Any, List[int]] = {}
+        self.peak_used = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def used(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    def can_alloc(self, n_blocks: int) -> bool:
+        return len(self._free) >= n_blocks
+
+    def owned(self, owner) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    # ------------------------------------------------------------ alloc
+    def alloc(self, owner, n_blocks: int) -> List[int]:
+        """Take ``n_blocks`` for ``owner``; raises when the pool is
+        exhausted (the scheduler checks ``can_alloc`` first and defers
+        admission instead)."""
+        if n_blocks > len(self._free):
+            raise RuntimeError(
+                f"KV block pool exhausted: want {n_blocks}, have "
+                f"{len(self._free)} free of {self.num_blocks - 1} "
+                f"(raise --kv-blocks or shrink the batch)")
+        got = [self._free.pop() for _ in range(n_blocks)]
+        self._owned.setdefault(owner, []).extend(got)
+        self.peak_used = max(self.peak_used, self.used)
+        return got
+
+    def grow_to(self, owner, n_tokens: int) -> List[int]:
+        """Extend ``owner`` so its blocks cover ``n_tokens`` cache entries;
+        returns only the NEW block ids (possibly empty)."""
+        have = len(self._owned.get(owner, ()))
+        need = self.blocks_for(n_tokens) - have
+        if need <= 0:
+            return []
+        return self.alloc(owner, need)
+
+    def free(self, owner):
+        """Return all of ``owner``'s blocks to the pool (idempotent)."""
+        for blk in self._owned.pop(owner, ()):
+            self._free.append(blk)
+
+
+# ---------------------------------------------------------------- device
+@jax.jit
+def write_pool_blocks(k_pool, v_pool, block_ids, k_blocks, v_blocks):
+    """Scatter one prompt's prefilled K/V into its allocated pool blocks.
+
+    k_pool/v_pool: (L, NB, bs, Kv, hd); block_ids: (nb,) int32;
+    k_blocks/v_blocks: (L, nb, bs, Kv, hd).  One fused scatter per side —
+    jit-cached per distinct nb (prompt-length bucket).
+    """
+    return (k_pool.at[:, block_ids].set(k_blocks.astype(k_pool.dtype)),
+            v_pool.at[:, block_ids].set(v_blocks.astype(v_pool.dtype)))
+
+
+def prompt_cache_to_blocks(cache, block_size: int):
+    """Reshape a single-sequence prefilled cache (padded to a multiple of
+    ``block_size``) into per-block K/V: (L, 1, nb*bs, Kv, hd) ->
+    (L, nb, bs, Kv, hd)."""
+    k, v = cache["k"], cache["v"]
+    L, _, spad, kv_heads, hd = k.shape
+    nb = spad // block_size
+    shape = (L, nb, block_size, kv_heads, hd)
+    return k[:, 0].reshape(shape), v[:, 0].reshape(shape)

@@ -7,44 +7,58 @@ same per-request semantics (cache -> edge -> escalation, identical greedy
 tokens) but executes them slot-based and batched:
 
   * SLOTS — ``batch_size`` slots, each holding one in-flight request.  All
-    per-slot device state is a stacked pytree with a leading slot axis; the
-    KV cache is padded to a common ``slot_len`` and each slot carries its
-    own scalar ``pos`` (vmapped ``decode_step`` turns the cache update into
-    a per-slot scatter).
+    per-slot device state is a stacked pytree with a leading slot axis and
+    a per-slot scalar ``pos``.
+  * KV LAYOUT — ``kv_layout="paged"`` (default where the families allow)
+    backs the slots with ONE shared pool of fixed-size token blocks plus
+    per-slot int32 block tables (``core/paged_cache.py``): blocks are
+    allocated at admission, grown on demand each decode tick, and freed at
+    retirement, so slot capacity follows each request instead of the batch
+    maximum and admission is deferred (not over-reserved) when the pool is
+    full.  ``kv_layout="dense"`` keeps the original common-``slot_len``
+    padded slabs and serves as the parity oracle.
   * PREFILL on admission: the exact-length prompt is prefilled once
-    (jit-cached per prompt length) and the resulting padded cache is
-    written into the slot wholesale — which also wipes whatever a retired
-    occupant left behind.
+    (jit-cached per prompt length) and written into the slot — dense: one
+    stacked-slab scatter per admission wave; paged: one block scatter per
+    prompt plus a block-table row write.
   * DECODE — one jitted ``lax.scan`` of up to ``tick_tokens`` steps over
     the whole batch, with per-slot uncertainty accumulated ON DEVICE
     (``uncertainty.get_batched_estimator``).  One host sync per tick, not
     per token.  Slots that run out of budget mid-tick keep decoding
-    garbage behind an ``active`` mask; their emissions are dropped and the
-    slot cache is overwritten on the next admission.
+    garbage behind an ``active`` mask; their emissions are dropped, and on
+    the paged layout those masked writes land in the reserved TRAP block
+    so freed blocks can be re-allocated immediately.
   * RETIRE / ADMIT each tick: finished slots are classified by mean
     uncertainty (edge-confident vs escalate) and freed; queued requests are
-    admitted into the freed slots.
+    admitted into the freed slots.  Identical prompts admitted in the same
+    tick (or while a matching request is still in flight) are COALESCED:
+    one leader decodes, the rest are served from its result through the
+    semantic cache — restoring the sequential engine's behavior.
   * ESCALATION runs GROUPED: all slots retired-uncertain in a tick share
     one batched cloud decode ("cloud"), one batched skeleton + batched edge
     completion ("skeleton"), or one ``BatchedSpecDecoder`` group
     ("speculative").  Groups are padded to ``batch_size`` so every jitted
-    shape is compiled once.
+    shape is compiled once; on the paged layout each group brings its own
+    exactly-sized block pool and the speculative rewind is still a ``pos``
+    write against the group's block tables.
 
-Remaining gaps (see ROADMAP "Serving architecture"): the per-slot cache is
-padded, not paged — long-prompt slots reserve ``slot_len`` everywhere —
-and scheduling is single-host/single-device.
+Remaining gaps (see ROADMAP "Serving architecture"): scheduling is
+single-host/single-device, and recurrent-family (ssm/hybrid) speculation
+still falls back to per-request snapshot+replay.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import SemanticCache, embed_tokens_mean
+from repro.core.paged_cache import (BlockPool, blocks_for,
+                                    prompt_cache_to_blocks, write_pool_blocks)
 from repro.core.speculative import BatchedSpecDecoder, SpecDecoder
 from repro.core.uncertainty import get_batched_estimator
 
@@ -93,14 +107,23 @@ def _pow2_steps(n: int, cap: int) -> int:
 
 
 class _Lane:
-    """Jitted batched machinery for ONE model: a vmapped decode step, a
-    per-prompt-length prefill, and the multi-token decode scan."""
+    """Jitted batched machinery for ONE model: a batched decode step (dense:
+    vmapped per-slot ``decode_step``; paged: the natively batched
+    ``paged_decode_step``), a per-prompt-length prefill, and the multi-token
+    decode scan shared by both layouts."""
 
-    def __init__(self, model, estimator: str, temperature: float):
+    def __init__(self, model, estimator: str, temperature: float,
+                 kv_layout: str = "dense"):
         self.model = model
+        self.kv_layout = kv_layout
         est = get_batched_estimator(estimator)
-        vstep = jax.vmap(lambda p, t, c: model.decode_step(p, t, c),
-                         in_axes=(None, 0, 0))
+        if kv_layout == "paged":
+            # tok rides through the scan as (B,1,1); the paged step is
+            # batched over the leading axis and returns (B, V) logits.
+            step = lambda p, t, c: model.paged_decode_step(p, t[:, :, 0], c)
+        else:
+            step = jax.vmap(lambda p, t, c: model.decode_step(p, t, c),
+                            in_axes=(None, 0, 0))
         self._jit_prefill = jax.jit(
             lambda p, toks, max_seq: model.prefill(
                 p, {"tokens": toks}, max_seq=max_seq),
@@ -112,7 +135,7 @@ class _Lane:
             advanced state plus per-step (token, active) for the host."""
             def body(carry, r):
                 caches, tok, steps_left, unc_sum = carry
-                lg, caches = vstep(params, tok, caches)      # (B, 1, V)
+                lg, caches = step(params, tok, caches)   # (B,1,V) | (B,V)
                 lg = lg.reshape(lg.shape[0], -1)
                 active = steps_left > 0
                 if temperature == 0.0:
@@ -132,12 +155,168 @@ class _Lane:
 
         self._chunk = jax.jit(chunk, static_argnames=("n_steps",))
 
-    def prefill(self, params, prompt, slot_len: int):
-        """Prefill ``prompt[:-1]`` into a fresh cache padded to slot_len.
+    def prefill(self, params, prompt, max_seq: int):
+        """Prefill ``prompt[:-1]`` into a fresh cache padded to ``max_seq``.
         Recompiles per distinct prompt length; the jit cache makes repeats
         free."""
         toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :-1])
-        return self._jit_prefill(params, toks, max_seq=slot_len)
+        return self._jit_prefill(params, toks, max_seq=max_seq)
+
+
+# ---------------------------------------------------------------- kv states
+class _DenseKV:
+    """Dense stacked slot caches: every slot padded to a common
+    ``slot_len`` (the original layout, kept as the parity oracle)."""
+
+    def __init__(self, lane: _Lane, params, batch: int, slot_len: int):
+        self.lane = lane
+        self.params = params
+        self.slot_len = slot_len
+        self.caches = stack_slot_caches(lane.model, batch, slot_len)
+        self._pend_bs: List[int] = []
+        self._pend_caches: List[Any] = []
+
+    def admit(self, b: int, prompt, need_tokens: int) -> bool:
+        _, c1 = self.lane.prefill(self.params, prompt, self.slot_len)
+        self._pend_bs.append(b)
+        self._pend_caches.append(c1)
+        return True
+
+    def flush(self):
+        if self._pend_bs:   # one scatter for the whole admission wave
+            self.caches = write_slots(self.caches, self._pend_bs,
+                                      self._pend_caches)
+            self._pend_bs, self._pend_caches = [], []
+
+    def prepare_tick(self, occupied, steps_h, n: int):
+        pass                # every slot already owns slot_len entries
+
+    def retire(self, b: int):
+        pass                # slab is overwritten wholesale on re-admission
+
+    @property
+    def capacity_bytes(self) -> int:
+        return sum(x.nbytes for x in jax.tree.leaves(self.caches))
+
+    peak_bytes = capacity_bytes
+
+
+class _PagedKV:
+    """Paged slot caches: one shared block pool + per-slot block tables.
+
+    Host side this owns a ``BlockPool`` (block ids only) and mirrors each
+    slot's real content length; device side it owns the cache pytree
+    ``{k, v, table, pos}``.  Writes are batched: admissions/retirements
+    accumulate and land in ``flush`` (block scatters + ONE table-row/pos
+    scatter), per-tick growth lands in ``prepare_tick`` (one table-entry
+    scatter).  Retired slots' rows are redirected to the trap block so
+    their masked garbage decode cannot corrupt re-allocated blocks.
+    """
+
+    def __init__(self, lane: _Lane, params, batch: int, slot_len: int,
+                 block_size: int, num_blocks: Optional[int] = None):
+        self.lane = lane
+        self.params = params
+        self.block_size = block_size
+        self.max_blocks = blocks_for(slot_len, block_size)
+        if num_blocks is None:      # worst-case-safe default: dense capacity
+            num_blocks = batch * self.max_blocks + 1
+        num_blocks = max(num_blocks, 2)
+        self.pool = BlockPool(num_blocks, block_size)
+        self.caches = lane.model.init_paged_cache(
+            num_blocks, block_size, batch, self.max_blocks)
+        self._block_bytes = (self.caches["k"].nbytes +
+                             self.caches["v"].nbytes) // num_blocks
+        self._len = [0] * batch     # real cache entries written per slot
+        self._commit = [0] * batch  # blocks reserved for future growth
+        self._stale: set = set()    # retired slots awaiting a trap row
+        self._pend: List[Tuple[int, np.ndarray, int]] = []  # (b, row, pos)
+
+    def admit(self, b: int, prompt, need_tokens: int) -> bool:
+        """Allocate the prompt's blocks and stage the prefill; returns
+        False (admission deferred) when the pool cannot back the request.
+
+        Admission is reservation-based: the request's WORST-CASE block need
+        (``need_tokens`` = prompt + budget [+ overdraft]) is committed up
+        front so on-demand growth can never fail mid-flight, but blocks are
+        only physically allocated as decode reaches them — the reservation
+        is per-request, not the batch maximum, which is where the paged
+        layout beats the dense slabs."""
+        S = int(np.asarray(prompt).size)
+        nb = self.pool.blocks_for(S - 1)
+        total = self.pool.blocks_for(need_tokens)
+        if not self.pool.can_alloc(total + sum(self._commit)):
+            return False
+        blocks = self.pool.alloc(b, nb)
+        self._commit[b] = total - nb
+        _, c1 = self.lane.prefill(self.params, prompt, nb * self.block_size)
+        kb, vb = prompt_cache_to_blocks(c1, self.block_size)
+        self.caches["k"], self.caches["v"] = write_pool_blocks(
+            self.caches["k"], self.caches["v"],
+            jnp.asarray(blocks, jnp.int32), kb, vb)
+        row = np.zeros((self.max_blocks,), np.int32)    # pad = trap block
+        row[:nb] = blocks
+        self._pend.append((b, row, S - 1))
+        self._len[b] = S - 1
+        self._stale.discard(b)
+        return True
+
+    def flush(self):
+        if not (self._pend or self._stale):
+            return
+        idx, rows, poss = [], [], []
+        for b, row, p in self._pend:
+            idx.append(b)
+            rows.append(row)
+            poss.append(p)
+        for b in self._stale:       # retired, not re-admitted: trap row
+            idx.append(b)
+            rows.append(np.zeros((self.max_blocks,), np.int32))
+            poss.append(0)
+        ii = jnp.asarray(idx, jnp.int32)
+        self.caches["table"] = self.caches["table"].at[ii].set(
+            jnp.asarray(np.stack(rows)))
+        self.caches["pos"] = self.caches["pos"].at[ii].set(
+            jnp.asarray(poss, jnp.int32))
+        self._pend, self._stale = [], set()
+
+    def prepare_tick(self, occupied, steps_h, n: int):
+        """Grow every occupied slot to cover this tick's REAL decode steps
+        (``min(steps_left, n)``); the masked garbage tail past a slot's
+        budget clamps into the trap.  Growth draws down the slot's
+        admission-time reservation, so it cannot fail."""
+        upd_b, upd_i, upd_blk = [], [], []
+        for b in occupied:
+            target = self._len[b] + min(int(steps_h[b]), n)
+            new = self.pool.grow_to(b, target)
+            self._commit[b] = max(self._commit[b] - len(new), 0)
+            base = len(self.pool.owned(b)) - len(new)
+            for j, blk in enumerate(new):
+                upd_b.append(b)
+                upd_i.append(base + j)
+                upd_blk.append(blk)
+            self._len[b] = target
+        if upd_b:
+            self.caches["table"] = self.caches["table"].at[
+                jnp.asarray(upd_b, jnp.int32),
+                jnp.asarray(upd_i, jnp.int32)].set(
+                jnp.asarray(upd_blk, jnp.int32))
+
+    def retire(self, b: int):
+        self.pool.free(b)
+        self._len[b] = 0
+        self._commit[b] = 0
+        self._stale.add(b)
+
+    @property
+    def peak_bytes(self) -> int:
+        """High-water mark of LIVE block bytes — what a right-sized pool
+        would have to hold (the benchmark's headline number)."""
+        return self.pool.peak_used * self._block_bytes
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.caches["k"].nbytes + self.caches["v"].nbytes
 
 
 # ---------------------------------------------------------------- requests
@@ -160,7 +339,16 @@ class BatchedEngine:
 
     Mirrors ``CollaborativeEngine``'s decision semantics exactly — same
     estimator, threshold, escalation modes, semantic cache — so greedy
-    traces match the per-request engine token for token.
+    traces match the per-request engine token for token, on BOTH KV
+    layouts.
+
+    KV layout knobs:
+      * ``kv_layout``: "auto" (paged where both models' cache families
+        support it, else dense), "paged", or "dense".
+      * ``kv_block_size``: tokens per block (paged).
+      * ``kv_blocks``: total pool blocks incl. the trap (paged).  Default
+        sizes the pool to the dense worst case; give a smaller pool to cap
+        KV memory — admission is deferred when it runs full.
     """
 
     def __init__(self, edge_model, cloud_model, *, batch_size: int = 8,
@@ -168,7 +356,9 @@ class BatchedEngine:
                  escalate_threshold: float = 0.6, estimator: str = "entropy",
                  escalation: str = "speculative", use_cache: bool = True,
                  cache_threshold: float = 0.95, skeleton_len: int = 8,
-                 tick_tokens: int = 16, seed: int = 0):
+                 tick_tokens: int = 16, seed: int = 0,
+                 kv_layout: str = "auto", kv_block_size: int = 32,
+                 kv_blocks: Optional[int] = None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if tick_tokens < 1:
@@ -176,6 +366,22 @@ class BatchedEngine:
         if escalation not in ("speculative", "cloud", "skeleton"):
             raise ValueError(f"unknown escalation mode {escalation!r}; "
                              "known: speculative | cloud | skeleton")
+        if kv_layout not in ("auto", "paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                             "known: auto | paged | dense")
+        if kv_block_size < 1:
+            raise ValueError(f"kv_block_size must be >= 1, got "
+                             f"{kv_block_size}")
+        paged_ok = edge_model.paged_kv and cloud_model.paged_kv
+        if kv_layout == "paged" and not paged_ok:
+            raise ValueError(
+                "kv_layout='paged' needs KV-cache transformer families on "
+                f"both models, got {edge_model.cfg.family!r} / "
+                f"{cloud_model.cfg.family!r}")
+        self.kv_layout = ("paged" if paged_ok else "dense") \
+            if kv_layout == "auto" else kv_layout
+        self.kv_block_size = kv_block_size
+        self.kv_blocks = kv_blocks
         self.edge_model = edge_model
         self.cloud_model = cloud_model
         self.batch_size = batch_size
@@ -186,13 +392,16 @@ class BatchedEngine:
         self.skeleton_len = skeleton_len
         self.tick_tokens = tick_tokens
         self.seed = seed
-        self.edge = _Lane(edge_model, estimator, temperature)
-        self.cloud = _Lane(cloud_model, estimator, temperature)
+        self.edge = _Lane(edge_model, estimator, temperature,
+                          kv_layout=self.kv_layout)
+        self.cloud = _Lane(cloud_model, estimator, temperature,
+                           kv_layout=self.kv_layout)
         self.cache = SemanticCache(threshold=cache_threshold) if use_cache \
             else None
         if edge_model.rewindable_cache and cloud_model.rewindable_cache:
             self.spec: Optional[BatchedSpecDecoder] = BatchedSpecDecoder(
-                edge_model, cloud_model, gamma=gamma, temperature=temperature)
+                edge_model, cloud_model, gamma=gamma, temperature=temperature,
+                kv_layout=self.kv_layout)
             self._spec_fallback = None
         else:       # recurrent-state caches: per-request snapshot/replay
             self.spec = None
@@ -201,6 +410,10 @@ class BatchedEngine:
                                               temperature=temperature)
         self._queue: collections.deque = collections.deque()
         self._next_rid = 0
+        # intra-batch dedup: in-flight leaders and their coalesced followers
+        self._leaders: List[Tuple[np.ndarray, int]] = []
+        self._followers: Dict[int, List[_Request]] = {}
+        self._kv_stats: Dict[str, Any] = {}
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new: int) -> int:
@@ -212,6 +425,42 @@ class BatchedEngine:
         self._queue.append(_Request(rid, prompt, max_new))
         return rid
 
+    # ------------------------------------------------------------ kv state
+    def _make_kv(self, lane: _Lane, params, batch: int,
+                 need_tokens: Optional[Sequence[int]] = None,
+                 num_blocks: Optional[int] = None):
+        """Build the decode-cache owner for ``lane`` in the engine's
+        layout.  ``need_tokens`` (escalation groups) sizes a paged pool to
+        exactly the group's residency instead of the worst case."""
+        if self.kv_layout == "dense":
+            return _DenseKV(lane, params, batch, self._slot_len)
+        if num_blocks is None and need_tokens is not None:
+            needed = sum(blocks_for(t, self.kv_block_size)
+                         for t in need_tokens)
+            # pow2-bucket the pool so escalation groups with different
+            # residencies reuse one compiled scan/spec-round shape (the
+            # peak-bytes stat tracks LIVE blocks, not this capacity)
+            num_blocks = 1 + _pow2_steps(needed, 1 << 30)
+        return _PagedKV(lane, params, batch, self._slot_len,
+                        self.kv_block_size, num_blocks)
+
+    def _note_group(self, *states):
+        live = sum(s.peak_bytes for s in states)
+        self._kv_stats["kv_group_peak_bytes"] = max(
+            self._kv_stats.get("kv_group_peak_bytes", 0), live)
+
+    # ------------------------------------------------------------ dedup
+    def _match_leader(self, key: np.ndarray) -> Optional[int]:
+        """rid of an in-flight request whose cache key matches ``key`` at
+        the semantic-cache threshold (cosine), else None."""
+        if not self._leaders:
+            return None
+        u = SemanticCache._norm(key)
+        for lk, rid in self._leaders:
+            if float(u @ lk) >= self.cache.threshold:
+                return rid
+        return None
+
     # ------------------------------------------------------------ run
     def run(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
         """Drain the queue; returns {rid: RequestTrace} for this drain."""
@@ -222,17 +471,21 @@ class BatchedEngine:
         # (matches SpecDecoder's max_seq so escalation reuses the same pads)
         self._slot_len = max(r.prompt.size + r.max_new for r in self._queue) \
             + 2 * max(self.gamma, 16) + 8
-        slots_cache = stack_slot_caches(self.edge_model, B, self._slot_len)
+        self._kv_stats = {"kv_layout": self.kv_layout}
+        state = self._make_kv(self.edge, edge_params, B,
+                              num_blocks=self.kv_blocks)
         tok = jnp.zeros((B, 1, 1), jnp.int32)
         steps = jnp.zeros((B,), jnp.int32)
         unc = jnp.zeros((B,), jnp.float32)
         slots = [_Slot() for _ in range(B)]
         rng = jax.random.PRNGKey(self.seed)
         results: Dict[int, RequestTrace] = {}
+        self._leaders, self._followers = [], {}
 
         while self._queue or any(s.req is not None for s in slots):
             # ---- admit queued requests into free slots (batched cache probe)
             free = [b for b in range(B) if slots[b].req is None]
+            deferred = False
             if free and self._queue:
                 cands = [self._queue.popleft()
                          for _ in range(min(len(free), len(self._queue)))]
@@ -243,32 +496,51 @@ class BatchedEngine:
                                                   edge_params, r.prompt)
                     hits = self.cache.lookup_batch(
                         np.stack([r.key for r in cands]))
-                bs, caches = [], []
-                for r, hit in zip(cands, hits):
+                bs, lasts, news = [], [], []
+                for i, (r, hit) in enumerate(zip(cands, hits)):
                     if hit is not None:
                         results[r.rid] = RequestTrace("cache",
                                                       tokens=list(hit))
                         continue
+                    if self.cache is not None:
+                        # coalesce with an identical in-flight request: the
+                        # sequential engine's later twin would hit the
+                        # semantic cache the leader is about to warm
+                        lid = self._match_leader(r.key)
+                        if lid is not None:
+                            self._followers.setdefault(lid, []).append(r)
+                            self.cache.hits += 1
+                            continue
                     b = free.pop(0)
-                    _, c1 = self.edge.prefill(edge_params, r.prompt,
-                                              self._slot_len)
-                    bs.append(b)
-                    caches.append(c1)
+                    if not state.admit(b, r.prompt,
+                                       r.prompt.size - 1 + r.max_new):
+                        # pool full: defer this and the rest, keep order
+                        free.insert(0, b)
+                        for rr in reversed(cands[i:]):
+                            self._queue.appendleft(rr)
+                        deferred = True
+                        break
                     slots[b] = _Slot(req=r)
-                if bs:      # one scatter for the whole admission wave
-                    slots_cache = write_slots(slots_cache, bs, caches)
+                    bs.append(b)
+                    lasts.append([[int(r.prompt[-1])]])
+                    news.append(r.max_new)
+                    if self.cache is not None:
+                        self._leaders.append((SemanticCache._norm(r.key),
+                                              r.rid))
+                if bs:
                     idx = jnp.asarray(bs, jnp.int32)
-                    lasts = jnp.asarray(
-                        [[[int(slots[b].req.prompt[-1])]] for b in bs],
-                        jnp.int32)
-                    tok = tok.at[idx].set(lasts)
-                    steps = steps.at[idx].set(jnp.asarray(
-                        [slots[b].req.max_new for b in bs], jnp.int32))
+                    tok = tok.at[idx].set(jnp.asarray(lasts, jnp.int32))
+                    steps = steps.at[idx].set(jnp.asarray(news, jnp.int32))
                     unc = unc.at[idx].set(0.0)
 
             occupied = [b for b in range(B) if slots[b].req is not None]
             if not occupied:
+                if deferred:
+                    raise RuntimeError(
+                        "paged KV pool too small for the queued request "
+                        "even with an empty batch; raise kv_blocks")
                 continue            # this round was all cache hits
+            state.flush()
 
             # ---- one batched decode tick (pow2-bucketed step count: the
             # scan recompiles per static n_steps, so bucketing bounds the
@@ -277,9 +549,10 @@ class BatchedEngine:
             n = _pow2_steps(int(min(self.tick_tokens,
                                     steps_h[occupied].max())),
                             self.tick_tokens)
+            state.prepare_tick(occupied, steps_h, n)
             rng, r = jax.random.split(rng)
-            slots_cache, tok, steps, unc, toks, actives = self.edge._chunk(
-                edge_params, slots_cache, tok, steps, unc, r, n_steps=n)
+            state.caches, tok, steps, unc, toks, actives = self.edge._chunk(
+                edge_params, state.caches, tok, steps, unc, r, n_steps=n)
             toks_h, act_h = np.asarray(toks), np.asarray(actives)
             for b in occupied:
                 slots[b].tokens.extend(
@@ -302,6 +575,7 @@ class BatchedEngine:
                     # with cloud involvement (same as the reference engine)
                     group.append((req, u))
                 slots[b] = _Slot()
+                state.retire(b)
 
             if group:
                 rng, r = jax.random.split(rng)
@@ -309,6 +583,11 @@ class BatchedEngine:
                                               group, r):
                     self._finish(results, req, tr)
 
+        self._kv_stats["kv_peak_bytes"] = state.peak_bytes
+        self._kv_stats["kv_capacity_bytes"] = state.capacity_bytes
+        if isinstance(state, _PagedKV):
+            self._kv_stats["kv_blocks_peak"] = state.pool.peak_used
+            self._kv_stats["kv_block_size"] = state.block_size
         return results
 
     def serve_batch(self, edge_params, cloud_params, prompts,
@@ -330,6 +609,13 @@ class BatchedEngine:
                 and req.key is not None:
             self.cache.insert(req.key, tr.tokens)
         results[req.rid] = tr
+        # resolve coalesced followers from the leader's result (the
+        # sequential engine would serve them from the just-warmed cache)
+        self._leaders = [(k, rid) for k, rid in self._leaders
+                         if rid != req.rid]
+        for f in self._followers.pop(req.rid, []):
+            results[f.rid] = RequestTrace(
+                "cache", tokens=list(tr.tokens) if tr.tokens else None)
 
     def _group_generate(self, lane: _Lane, params, prompts,
                         max_news: List[int], rng) -> List[List[int]]:
@@ -339,22 +625,24 @@ class BatchedEngine:
             return [[] for _ in prompts]
         n = _pow2_steps(max(max_news), 1 << 30)     # bound scan compiles
         G = self.batch_size                         # pad: stable jit shapes
-        caches = stack_slot_caches(lane.model, G, self._slot_len)
+        need = [len(p) - 1 + m for p, m in zip(prompts, max_news) if m > 0]
+        state = self._make_kv(lane, params, G, need_tokens=need)
         tok = jnp.zeros((G, 1, 1), jnp.int32)
         steps = jnp.zeros((G,), jnp.int32)
-        bs, c1s = [], []
+        members = []
         for i, (p, m) in enumerate(zip(prompts, max_news)):
             if m <= 0:
                 continue
-            _, c1 = lane.prefill(params, p, self._slot_len)
-            bs.append(i)
-            c1s.append(c1)
+            state.admit(i, p, len(p) - 1 + m)
+            members.append(i)
             tok = tok.at[i, 0, 0].set(int(p[-1]))
             steps = steps.at[i].set(m)
-        caches = write_slots(caches, bs, c1s)
+        state.flush()
+        state.prepare_tick(members, np.asarray(steps), n)
         _, _, _, _, toks, actives = lane._chunk(
-            params, caches, tok, steps, jnp.zeros((G,), jnp.float32), rng,
-            n_steps=n)
+            params, state.caches, tok, steps, jnp.zeros((G,), jnp.float32),
+            rng, n_steps=n)
+        self._note_group(state)
         toks_h, act_h = np.asarray(toks), np.asarray(actives)
         return [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i]) if a]
                 for i in range(len(prompts))]
@@ -406,23 +694,29 @@ class BatchedEngine:
         return out
 
     def _spec_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
-        """One BatchedSpecDecoder group over all escalated requests."""
+        """One BatchedSpecDecoder group over all escalated requests.  Paged
+        groups pre-grow each slot to prompt + budget + one round of draft
+        overdraft — spec rewinds only move ``pos``, never reallocate."""
         G = self.batch_size
-        d_slots = stack_slot_caches(self.edge_model, G, self._slot_len)
-        t_slots = stack_slot_caches(self.cloud_model, G, self._slot_len)
+        need = [r.prompt.size - 1 + r.max_new + self.gamma + 2 for r in reqs]
+        d_state = self._make_kv(self.edge, edge_params, G, need_tokens=need)
+        t_state = self._make_kv(self.cloud, cloud_params, G, need_tokens=need)
         last = jnp.zeros((G, 1, 1), jnp.int32)
-        dcs, tcs = [], []
-        for i, r in enumerate(reqs):
-            dcs.append(self.edge.prefill(edge_params, r.prompt,
-                                         self._slot_len)[1])
-            tcs.append(self.cloud.prefill(cloud_params, r.prompt,
-                                          self._slot_len)[1])
+        for i, (r, nd) in enumerate(zip(reqs, need)):
+            d_state.admit(i, r.prompt, nd)
+            t_state.admit(i, r.prompt, nd)
             last = last.at[i, 0, 0].set(int(r.prompt[-1]))
-        d_slots = write_slots(d_slots, list(range(len(reqs))), dcs)
-        t_slots = write_slots(t_slots, list(range(len(reqs))), tcs)
+        overdraft = np.zeros((G,), np.int32)
+        overdraft[:len(reqs)] = [n - (r.prompt.size - 1)
+                                 for n, r in zip(need, reqs)]
+        for st in (d_state, t_state):
+            st.flush()
+            st.prepare_tick(list(range(len(reqs))), overdraft, 1 << 30)
         max_news = [r.max_new for r in reqs] + [0] * (G - len(reqs))
         outs, stats = self.spec.generate_group(
-            edge_params, cloud_params, d_slots, t_slots, last, max_news, rng)
+            edge_params, cloud_params, d_state.caches, t_state.caches, last,
+            max_news, rng)
+        self._note_group(d_state, t_state)
         res = []
         for i, (r, u) in enumerate(zip(reqs, uncs)):
             st = stats[i]
@@ -434,4 +728,5 @@ class BatchedEngine:
 
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, Any]:
-        return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0}
+        return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0,
+                **self._kv_stats}

@@ -269,22 +269,48 @@ class BatchedSpecDecoder:
     The caller owns admission: ``generate_group`` takes already-prefilled
     stacked caches (see ``core.scheduler.stack_slot_caches`` /
     ``write_slot``) so the scheduler can reuse its slot machinery.
+
+    ``kv_layout="paged"`` runs the same rounds over paged caches (shared
+    block pool + per-slot block tables, ``core/paged_cache.py``): drafting
+    and verification go through the models' batched ``paged_decode_step`` /
+    ``paged_extend_step``, and the per-slot rewind is STILL just the
+    ``pos`` write — rejected draft entries stay in their allocated blocks,
+    masked out and overwritten by the next round.  The caller must have
+    grown each slot's block table to cover prompt + budget + one round of
+    draft overdraft before calling ``generate_group``.
     """
 
     def __init__(self, draft_model, target_model, *, gamma: int = 4,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, kv_layout: str = "dense"):
         if not (draft_model.rewindable_cache and target_model.rewindable_cache):
             raise ValueError("BatchedSpecDecoder requires rewindable (KV) "
                              "caches for both models; use SpecDecoder for "
                              "recurrent-state families")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.gamma = gamma
         self.temperature = temperature
-        self._vdraft = jax.vmap(
-            lambda p, t, c: draft_model.decode_step(p, t, c),
-            in_axes=(None, 0, 0))
-        self._vverify = jax.vmap(
-            lambda p, t, c: target_model.extend_step(p, t, c),
-            in_axes=(None, 0, 0))
+        self.kv_layout = kv_layout
+        if kv_layout == "paged":
+            # batched paged steps: the block pool has no slot axis to vmap
+            # over, but the ops are natively batched. Adapters restore the
+            # vmapped shapes ((G,1,V) draft logits, (G,1,T,V) verify).
+            def _pdraft(p, t, c):
+                lg, c = draft_model.paged_decode_step(p, t[:, :, 0], c)
+                return lg[:, None], c
+
+            def _pverify(p, t, c):
+                lg, c = target_model.paged_extend_step(p, t[:, 0, :], c)
+                return lg[:, None], c
+
+            self._vdraft, self._vverify = _pdraft, _pverify
+        else:
+            self._vdraft = jax.vmap(
+                lambda p, t, c: draft_model.decode_step(p, t, c),
+                in_axes=(None, 0, 0))
+            self._vverify = jax.vmap(
+                lambda p, t, c: target_model.extend_step(p, t, c),
+                in_axes=(None, 0, 0))
         self._round = jax.jit(self._round_impl)
 
     def _round_impl(self, draft_params, target_params, d_slots, t_slots,

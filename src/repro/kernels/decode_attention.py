@@ -11,6 +11,14 @@ garbage/unwritten); window w restricts to the trailing w entries.
 
 Grid: (B, Kv, S//BS) — last axis sequential with running max/denominator in
 VMEM scratch.
+
+``paged_decode_attention`` is the paged-KV twin (vLLM-style): K/V live in
+ONE (NB, bs, Kv, hd) block pool shared by all sequences, and each
+sequence's logical block ``i`` is found through a scalar-prefetched block
+table — the BlockSpec index map reads ``table[b, i]`` to aim the next DMA,
+so the gather never materializes.  Same online-softmax accumulation; cache
+position ``i*bs + off`` masking is identical because block ``i`` holds
+logical positions [i*bs, (i+1)*bs).
 """
 from __future__ import annotations
 
@@ -98,3 +106,92 @@ def decode_attention(q, k, v, length, *, window: int = 0, bs: int = 512,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(length, q, k, v)
+
+
+# ---------------------------------------------------------------- paged
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, bs: int, ns: int, scale: float):
+    b = pl.program_id(0)
+    isb = pl.program_id(2)
+
+    @pl.when(isb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)          # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)          # (bs, hd)
+    s = (q @ k.T) * scale                            # (G, bs)
+
+    length = len_ref[b]
+    k_pos = isb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    s = jnp.where(k_pos < length, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(isb == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, table, length, *,
+                           interpret: bool = False):
+    """Decode attention through a paged KV pool.
+
+    q: (B, Kv, G, hd); k_pool/v_pool: (NB, bs, Kv, hd) — the shared block
+    pool; table: (B, MB) int32 block table (entry i holds the pool block
+    backing logical positions [i*bs, (i+1)*bs) of that sequence; unused
+    entries may point anywhere allocated-or-trap, their positions being
+    masked); length: (B,) int32 valid cache entries.  Returns
+    (B, Kv, G, hd).
+
+    The block table and lengths ride scalar prefetch: the k/v index maps
+    dereference ``table[b, i]`` so each grid step DMAs exactly the one
+    block it needs — the paged gather costs no extra HBM traffic over the
+    dense kernel.
+    """
+    B, Kv, G, hd = q.shape
+    NB, bs, Kv2, hd2 = k_pool.shape
+    assert (Kv2, hd2) == (Kv, hd), (k_pool.shape, q.shape)
+    MB = table.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+
+    kern = functools.partial(_paged_kernel, bs=bs, ns=MB, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, g, i, tbl, ln: (b, g, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, g, i, tbl, ln: (tbl[b, i], 0, g, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, g, i, tbl, ln: (tbl[b, i], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, g, i, tbl, ln: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        compiler_params=TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(table, length, q, k_pool, v_pool)

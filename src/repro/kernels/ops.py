@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import paged_decode_attention as _paged
 from repro.kernels.spec_verify import spec_verify as _verify
 from repro.kernels.spec_verify import spec_verify_batched as _verify_batched
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd
@@ -28,6 +29,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128):
 
 def decode_attention(q, k, v, length, *, window=0, bs=512):
     return _decode(q, k, v, length, window=window, bs=bs, interpret=on_cpu())
+
+
+def paged_decode_attention(q, k_pool, v_pool, table, length):
+    """Decode attention through a paged KV pool + block table (the serving
+    scheduler's --kv-layout=paged hot loop on TPU)."""
+    return _paged(q, k_pool, v_pool, table, length, interpret=on_cpu())
 
 
 def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,

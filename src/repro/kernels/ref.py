@@ -39,6 +39,18 @@ def decode_attention_ref(q, k, v, length, *, window: int = 0):
     return jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, table, length):
+    """Pure-jnp oracle for the paged decode kernel, and the CPU-CI
+    fallback: gather the block table into a contiguous (B, Kv, S, hd)
+    cache, then run dense decode attention.  q: (B,Kv,G,hd);
+    k_pool/v_pool: (NB, bs, Kv, hd); table: (B,MB) int32; length: (B,)."""
+    B = q.shape[0]
+    Kv, hd = k_pool.shape[2], k_pool.shape[3]
+    kk = jnp.moveaxis(k_pool[table].reshape(B, -1, Kv, hd), 2, 1)
+    vv = jnp.moveaxis(v_pool[table].reshape(B, -1, Kv, hd), 2, 1)
+    return decode_attention_ref(q, kk, vv, length)
+
+
 def spec_verify_ref(rng, target_logits, draft_logits, draft_tokens, *,
                     temperature: float = 1.0):
     """Mirrors kernels.spec_verify exactly (same rng stream / tie-breaks)."""

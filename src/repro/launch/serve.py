@@ -9,6 +9,14 @@ escalation).
 ``--scheduler per-request`` runs the legacy one-at-a-time reference loop
 (useful for tracing and as the baseline the batched numbers are quoted
 against).
+
+KV layout (batched scheduler): ``--kv-layout paged`` (the default via
+``auto`` on KV-cache transformer families) backs the slots with a shared
+pool of ``--kv-block-size``-token blocks and per-slot block tables
+(``core/paged_cache.py``) — per-request cache capacity instead of padding
+every slot to the longest request.  ``--kv-blocks`` caps the pool (admission
+defers when it runs full); the default sizes it to the dense worst case.
+``--kv-layout dense`` keeps the padded-slab layout as the parity oracle.
 """
 from __future__ import annotations
 
@@ -44,6 +52,19 @@ def main():
                     help="scheduler slots (batched scheduler only)")
     ap.add_argument("--tick-tokens", type=int, default=16,
                     help="decode steps per jitted scheduler tick")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=["auto", "paged", "dense"],
+                    help="KV cache layout (batched scheduler): paged = "
+                         "shared block pool + per-slot block tables; dense "
+                         "= slots padded to a common slot_len (the parity "
+                         "oracle); auto = paged where the model families "
+                         "support it")
+    ap.add_argument("--kv-block-size", type=int, default=32,
+                    help="tokens per KV block (paged layout)")
+    ap.add_argument("--kv-blocks", type=int, default=None,
+                    help="total KV pool blocks incl. the trap block (paged "
+                         "layout); admission is deferred when the pool runs "
+                         "full. Default: sized to the dense worst case")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -70,7 +91,10 @@ def main():
                             gamma=args.gamma, temperature=0.0,
                             escalate_threshold=args.threshold,
                             escalation=args.escalation,
-                            tick_tokens=args.tick_tokens)
+                            tick_tokens=args.tick_tokens,
+                            kv_layout=args.kv_layout,
+                            kv_block_size=args.kv_block_size,
+                            kv_blocks=args.kv_blocks)
         t0 = time.time()
         traces = eng.serve_batch(ep, cp, prompts, args.max_new)
         dt = time.time() - t0
@@ -97,6 +121,12 @@ def main():
     print(f"\n{args.requests} requests in {dt:.1f}s "
           f"({args.requests / dt:.2f} req/s, {toks / dt:.1f} tok/s); "
           f"paths: {paths}; cache hit rate {stats['cache_hit_rate']:.2f}")
+    if "kv_peak_bytes" in stats:
+        print(f"kv: layout={stats['kv_layout']} "
+              f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "
+              f"capacity={stats['kv_capacity_bytes'] / 1e6:.2f}MB"
+              + (f" blocks_peak={stats['kv_blocks_peak']}"
+                 if "kv_blocks_peak" in stats else ""))
 
 
 if __name__ == "__main__":

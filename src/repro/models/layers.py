@@ -244,6 +244,50 @@ def decode_attention(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0):
     return out.reshape(B, 1, H * hd) @ p["wo"], cache_k, cache_v
 
 
+def paged_extend_attention(p, x, k_pool, v_pool, table, pos, cfg):
+    """Cached decode through a paged KV pool (whole batch at once; T=1 is
+    the single-token decode step, T>1 the speculative verify).
+
+    x: (B,T,d); k_pool/v_pool: (NB, bs, Kv, hd) — ONE block pool shared by
+    all sequences; table: (B, MB) int32 block table (logical position ``t``
+    of sequence ``b`` lives in block ``table[b, t // bs]`` at offset
+    ``t % bs``); pos: (B,) per-sequence write position.
+
+    Unlike the dense paths (scalar ``pos``, vmapped per slot), this is
+    inherently batched: the pool has no leading batch axis, so the new K/V
+    land via one advanced-indexing scatter and the read is a (B, MB)
+    block-table gather.  Out-of-range positions (a retired slot
+    garbage-decoding past its table) clamp to the last table entry, which
+    the scheduler keeps pointed at the trap block.  Intra-block attention
+    is causal, windowed by ``cfg.sliding_window`` exactly like the dense
+    decode (block masks / token trees stay on the dense layout).
+    Returns (out (B,T,d), new_k_pool, new_v_pool).
+    """
+    B, T, d = x.shape
+    _, bs, Kv, hd = k_pool.shape
+    H = cfg.num_heads
+    q = (x @ p["wq"]).reshape(B, T, H, hd)
+    k = (x @ p["wk"]).reshape(B, T, Kv, hd)
+    v = (x @ p["wv"]).reshape(B, T, Kv, hd)
+    q_pos = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]   # (B, T)
+    if cfg.use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+    blk = jnp.take_along_axis(table, q_pos // bs, axis=1)            # (B, T)
+    off = q_pos % bs
+    k_pool = k_pool.at[blk, off].set(k.astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v.astype(v_pool.dtype))
+    kk = k_pool[table].reshape(B, -1, Kv, hd)
+    vv = v_pool[table].reshape(B, -1, Kv, hd)
+    k_pos = jnp.arange(kk.shape[1], dtype=jnp.int32)
+    mask = k_pos[None, None, :] <= q_pos[:, :, None]                 # (B,T,S)
+    if cfg.sliding_window:
+        mask = mask & (k_pos[None, None, :] >
+                       q_pos[:, :, None] - cfg.sliding_window)
+    out = mha(q, kk, vv, mask=mask[:, None, None, :, :])
+    return out.reshape(B, T, H * hd) @ p["wo"], k_pool, v_pool
+
+
 def extend_attention(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0,
                      block_mask=None, q_positions=None):
     """Multi-token cached decode (chunked prefill / speculative verify).

@@ -147,6 +147,40 @@ class Model:
             return encdec.extend_step(params, tokens, cache, cfg)
         raise ValueError(cfg.family)
 
+    # ------------------------------------------------------------ paged kv
+    @property
+    def paged_kv(self) -> bool:
+        """True if the family's cache is a pure self-attention KV cache that
+        the serving scheduler can lay out as a shared block pool + block
+        tables (see ``core/paged_cache.py``).  Recurrent state (ssm/hybrid)
+        has no sequence axis to page; encdec carries cross-attention K/V
+        pinned to the encoder length."""
+        return self.cfg.family in ("dense", "moe", "vlm")
+
+    def _require_paged(self):
+        if not self.paged_kv:
+            raise ValueError(f"paged KV cache unsupported for family "
+                             f"{self.cfg.family!r} (KV-cache transformer "
+                             "families only)")
+
+    def init_paged_cache(self, num_blocks: int, block_size: int, batch: int,
+                         max_blocks: int):
+        self._require_paged()
+        return transformer.init_paged_cache(self.cfg, num_blocks, block_size,
+                                            batch, max_blocks)
+
+    def paged_decode_step(self, params, token, cache):
+        """One decode step over a paged cache. token (B,1) -> (logits (B,V),
+        cache)."""
+        self._require_paged()
+        return transformer.paged_decode_step(params, token, cache, self.cfg)
+
+    def paged_extend_step(self, params, tokens, cache):
+        """Multi-token cached decode over a paged cache. tokens (B,T) ->
+        (logits (B,T,V), cache)."""
+        self._require_paged()
+        return transformer.paged_extend_step(params, tokens, cache, self.cfg)
+
     @property
     def rewindable_cache(self) -> bool:
         """True if the cache can be rolled back by resetting ``pos`` (KV

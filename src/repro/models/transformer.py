@@ -122,6 +122,66 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     }
 
 
+def init_paged_cache(cfg, num_blocks: int, block_size: int, batch: int,
+                     max_blocks: int, dtype=None):
+    """Paged twin of ``init_cache``: ONE (num_blocks, block_size) K/V pool
+    per layer shared by all ``batch`` sequences, a per-sequence block table
+    (padded with the trap block 0) and per-sequence write positions.  See
+    ``core/paged_cache.py`` for the allocation protocol."""
+    dtype = dtype or _dt(cfg)
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "table": jnp.zeros((batch, max_blocks), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def paged_decode_step(params, token, cache, cfg):
+    """One decode step over a paged cache. token: (B, 1) int32; cache as
+    built by ``init_paged_cache``.  Returns (logits (B, V), cache).
+
+    The batched counterpart of vmapping ``decode_step`` over stacked dense
+    slots: same math, but K/V are read and written through the block table
+    so per-sequence capacity is whatever the scheduler allocated.  This is
+    exactly the T=1 case of ``paged_extend_step``."""
+    logits, cache = paged_extend_step(params, token, cache, cfg)
+    return logits[:, 0], cache
+
+
+def paged_extend_step(params, tokens, cache, cfg):
+    """Multi-token cached decode over a paged cache (speculative verify).
+    tokens (B, T) -> (logits (B, T, V), cache)."""
+    h = L.embed(params["embed"], tokens).astype(_adt(cfg))
+    pos, table = cache["pos"], cache["table"]
+    T = tokens.shape[1]
+
+    def body(hh, xs):
+        p, ck, cv = xs
+        hh = runtime.shard_activation(hh)
+        hn = L.rmsnorm(hh, p["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.paged_extend_attention(p["attn"], hn, ck, cv, table,
+                                             pos, cfg)
+        hh = hh + a
+        hn = L.rmsnorm(hh, p["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = MOE.moe_apply(p["moe"], hn, cfg)
+        else:
+            m = L.mlp_block(p["mlp"], hn, cfg.mlp_activation)
+        return hh + m, (ck, cv)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(_head(params), h)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, {**cache, "k": ks, "v": vs,
+                    "pos": pos + jnp.asarray(T, jnp.int32)}
+
+
 def prefill(params, tokens, cfg, *, max_seq: Optional[int] = None,
             embeds=None, window: int = 0):
     """Run the prompt, build the KV cache. Returns (last-token logits, cache)."""

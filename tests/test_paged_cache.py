@@ -1,0 +1,255 @@
+"""Paged KV-cache allocation: allocator invariants, paged-vs-dense token
+parity through ``BatchedEngine`` (every escalation path incl. the
+speculative rewind), deferred admission under a capped pool, and the
+intra-batch semantic-cache dedup regression.
+
+The dense layout is the parity oracle: ``kv_layout="paged"`` changes WHERE
+K/V live (shared block pool + block tables) but not a single emitted token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import CollaborativeEngine
+from repro.core.paged_cache import TRAP_BLOCK, BlockPool, blocks_for
+from repro.core.scheduler import BatchedEngine
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, specs):
+    return [((np.arange(n) * 7 + off) % vocab).astype(np.int32)
+            for n, off in specs]
+
+
+def _engine(edge, cloud, layout, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("temperature", 0.0)
+    kw.setdefault("use_cache", False)
+    kw.setdefault("tick_tokens", 4)
+    return BatchedEngine(edge, cloud, kv_layout=layout, kv_block_size=8,
+                         **kw)
+
+
+# ---------------------------------------------------------------- allocator
+def test_block_pool_alloc_free_invariants():
+    pool = BlockPool(num_blocks=9, block_size=4)
+    assert pool.used == 0 and pool.can_alloc(8) and not pool.can_alloc(9)
+    a = pool.alloc("a", 3)
+    b = pool.alloc("b", 2)
+    assert TRAP_BLOCK not in a + b          # trap never handed out
+    assert len(set(a + b)) == 5 == pool.used
+    pool.free("a")
+    assert pool.used == 2 and sorted(pool.owned("a")) == []
+    c = pool.alloc("c", 6)                  # reuses a's blocks
+    assert pool.used == 8 and len(set(b + c)) == 8
+    with pytest.raises(RuntimeError):
+        pool.alloc("d", 1)
+    assert pool.peak_used == 8
+    pool.free("b")
+    pool.free("b")                          # idempotent
+    assert pool.used == 6
+
+
+def test_block_pool_growth():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    first = pool.alloc("s", pool.blocks_for(5))         # ceil(5/4) = 2
+    assert len(first) == 2
+    assert pool.grow_to("s", 8) == []                   # already covered
+    grown = pool.grow_to("s", 9)                        # needs a third
+    assert len(grown) == 1 and pool.owned("s") == first + grown
+    assert pool.peak_used == 3
+
+
+def test_blocks_for_rounding():
+    assert blocks_for(0, 8) == 0
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+
+
+# ---------------------------------------------------------------- parity
+def test_paged_edge_parity_staggered(pair):
+    """Greedy tokens, paths, and uncertainties match the dense layout under
+    staggered prompt lengths and budgets (slots admit/retire mid-run)."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size,
+                       [(8, 0), (6, 3), (10, 5), (7, 11), (5, 2)])
+    budgets = [3, 11, 6, 9, 4]
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dts = dense.serve_batch(ep, cp, prompts, budgets)
+    pts = paged.serve_batch(ep, cp, prompts, budgets)
+    for dt, pt in zip(dts, pts):
+        assert pt.path == dt.path == "edge"
+        assert pt.tokens == dt.tokens
+        assert abs(pt.uncertainty - dt.uncertainty) < 1e-5
+    assert paged.stats()["kv_layout"] == "paged"
+
+
+@pytest.mark.parametrize("esc", ["speculative", "cloud", "skeleton"])
+def test_paged_escalation_parity(pair, esc):
+    """Every grouped escalation mode emits identical greedy tokens on the
+    paged layout — including the speculative path, whose per-slot rewind
+    becomes a ``pos`` write against block tables."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5)])
+    dense = _engine(edge, cloud, "dense", escalate_threshold=-1.0,
+                    escalation=esc, skeleton_len=4)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=-1.0,
+                    escalation=esc, skeleton_len=4)
+    dts = dense.serve_batch(ep, cp, prompts, 8)
+    pts = paged.serve_batch(ep, cp, prompts, 8)
+    for dt, pt in zip(dts, pts):
+        assert pt.path == dt.path == esc
+        assert pt.tokens == dt.tokens
+
+
+def test_paged_mixed_paths_match_reference(pair):
+    """Per-request path selection under a mid threshold matches the
+    sequential reference engine on the paged layout."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              escalate_threshold=0.9915, use_cache=False,
+                              kv_layout="dense")
+    paged = _engine(edge, cloud, "paged", batch_size=4,
+                    escalate_threshold=0.9915, tick_tokens=16)
+    rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
+    pts = paged.serve_batch(ep, cp, prompts, 8)
+    assert [pt.path for pt in pts] == [rt.path for rt in rts]
+    for rt, pt in zip(rts, pts):
+        assert pt.tokens == rt.tokens
+
+
+def test_paged_deferred_admission_under_small_pool(pair):
+    """A pool far below the dense worst case forces admission deferral;
+    every request still completes with dense-identical tokens."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(24, 0), (6, 3), (6, 9), (8, 5)])
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+                    batch_size=3)
+    # enough for the long prompt + one short neighbour, not three slots
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=3, kv_blocks=8)
+    dts = dense.serve_batch(ep, cp, prompts, 6)
+    pts = paged.serve_batch(ep, cp, prompts, 6)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    stats = paged.stats()
+    assert stats["kv_blocks_peak"] <= 7     # never exceeded the cap
+
+
+def test_paged_pool_too_small_raises(pair):
+    edge, ep, cloud, cp = pair
+    (p,) = _prompts(edge.cfg.vocab_size, [(33, 0)])
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=1, kv_blocks=3)
+    with pytest.raises(RuntimeError, match="kv_blocks|pool"):
+        paged.serve_batch(ep, cp, [p], 4)
+
+
+def test_paged_rejects_recurrent_families():
+    cfg = get_config("xlstm-125m").reduced()
+    ssm = Model(cfg)
+    dense_cfg = get_config("smollm-135m").reduced().replace(
+        vocab_size=cfg.vocab_size)
+    dense = Model(dense_cfg)
+    with pytest.raises(ValueError, match="paged"):
+        BatchedEngine(ssm, dense, kv_layout="paged")
+    eng = BatchedEngine(ssm, dense, kv_layout="auto", use_cache=False)
+    assert eng.kv_layout == "dense"         # auto falls back
+
+
+def test_paged_sliding_window_parity():
+    """``cfg.sliding_window`` survives the paged layout: the block-table
+    read applies the same window mask the dense decode path does."""
+    e_cfg = get_config("smollm-135m").reduced().replace(sliding_window=4)
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size, sliding_window=4)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    ep = edge.init(jax.random.PRNGKey(0))
+    cp = cloud.init(jax.random.PRNGKey(1))
+    prompts = _prompts(e_cfg.vocab_size, [(10, 0), (6, 3)])
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dts = dense.serve_batch(ep, cp, prompts, 8)
+    pts = paged.serve_batch(ep, cp, prompts, 8)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+        assert abs(pt.uncertainty - dt.uncertainty) < 1e-5
+
+
+# ---------------------------------------------------------------- memory
+def test_paged_peak_bytes_below_dense_on_skewed_mix(pair):
+    """The point of paging: with one 4x-length outlier, dense pads every
+    slot to the outlier while the paged pool only backs what each request
+    actually uses — peak KV bytes strictly below dense."""
+    edge, ep, cloud, cp = pair
+    v = edge.cfg.vocab_size
+    prompts = _prompts(v, [(8, 0), (8, 3), (8, 6), (32, 1), (8, 9), (8, 4)])
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+                    batch_size=3)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=3)
+    dts = dense.serve_batch(ep, cp, prompts, 6)
+    pts = paged.serve_batch(ep, cp, prompts, 6)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    d, p = dense.stats(), paged.stats()
+    assert p["kv_peak_bytes"] < d["kv_peak_bytes"]
+
+
+# ---------------------------------------------------------------- dedup
+def test_intra_batch_dedup_regression(pair):
+    """Identical prompts admitted in the same tick are coalesced: one
+    leader decodes, the twin is served from its result as a cache hit —
+    the sequential engine's behavior (its second request hits the cache
+    the first just warmed)."""
+    edge, ep, cloud, cp = pair
+    (p,) = _prompts(edge.cfg.vocab_size, [(8, 0)])
+    be = BatchedEngine(edge, cloud, batch_size=4, temperature=0.0,
+                       escalate_threshold=1.1, cache_threshold=0.99,
+                       tick_tokens=4)
+    t1, t2, t3 = be.serve_batch(ep, cp, [p, p.copy(), p.copy()], 8)
+    assert t1.path == "edge"
+    assert t2.path == "cache" and t3.path == "cache"
+    assert t2.tokens == t1.tokens and t3.tokens == t1.tokens
+    # the twins count as cache hits, exactly like the sequential engine
+    assert be.cache.hits == 2 and be.cache.lookups == 3
+
+
+def test_dedup_distinct_prompts_not_coalesced(pair):
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (8, 11)])
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=1.1, cache_threshold=0.999,
+                       tick_tokens=4)
+    t1, t2 = be.serve_batch(ep, cp, prompts, 8)
+    assert t1.path == "edge" and t2.path == "edge"
+
+
+def test_dedup_follower_waits_for_inflight_leader(pair):
+    """A duplicate admitted in a LATER tick, while its leader is still
+    decoding (leader budget outlasts its neighbour's), also coalesces —
+    it gets the leader's full result once the leader finishes."""
+    edge, ep, cloud, cp = pair
+    (p,) = _prompts(edge.cfg.vocab_size, [(8, 0)])
+    q = _prompts(edge.cfg.vocab_size, [(6, 5)])[0]
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       escalate_threshold=1.1, cache_threshold=0.99,
+                       tick_tokens=2)
+    t1, t2, t3 = be.serve_batch(ep, cp, [p, q, p.copy()], [12, 2, 4])
+    assert t1.path == "edge" and t2.path == "edge"
+    assert t3.path == "cache" and t3.tokens == t1.tokens
