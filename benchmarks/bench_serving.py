@@ -1,5 +1,5 @@
 """Serving-scheduler benchmark: per-request vs batched continuous batching,
-and dense vs paged KV layout.
+dense vs paged KV layout, and recurrent/mixed-family batched speculation.
 
 The ROADMAP's throughput claim lives or dies on the serving loop, not the
 kernels: the per-request engine pays a host round-trip per decoded token,
@@ -18,6 +18,14 @@ to the outlier, the paged layout (``core/paged_cache.py``) backs each
 request with exactly the blocks it touches.  It reports req/s and PEAK KV
 CACHE BYTES for both layouts, asserts token-for-token parity, and asserts
 the paged peak is strictly below dense.
+
+The RECURRENT arm runs mixed-family speculative escalation — mamba2 (ssm)
+and zamba2 (hybrid) drafts against a granite (transformer) cloud — where
+the batched scheduler's rewind is a replayed state select
+(``Model.replay_step`` via ``core/seq_state.py``) instead of the reference
+engine's per-request snapshot+replay.  It asserts token parity against
+``serve_reference`` and reports the batched-vs-per-request speedup per
+draft family.
 
 Emits ``name,case,value`` CSV rows on stdout and writes the full result
 set as JSON (``--out``, default ``BENCH_serving.json``) — the artifact the
@@ -148,6 +156,46 @@ def _paged_vs_dense(edge, ep, cloud, cp, csv, rows):
     csv(f"serving_skewed,paged_kv_savings_x,{ratio:.2f}")
 
 
+def _recurrent_mix(cloud, cp, csv, rows):
+    """Mixed-family batched speculation: recurrent drafts (mamba2 ssm +
+    zamba2 hybrid) against the transformer cloud, every request escalating
+    (threshold -1).  Batched rewinds are pure state selects; the
+    per-request baseline pays host-side snapshot+replay per round."""
+    n_req = max(REQUESTS // 4, 4)
+    for arch in ("mamba2-370m", "zamba2-2.7b"):
+        e_cfg = get_config(arch).reduced().replace(
+            vocab_size=cloud.cfg.vocab_size)
+        edge = Model(e_cfg)
+        ep = edge.init(jax.random.PRNGKey(2))
+        synth = SyntheticLM(e_cfg.vocab_size)
+        rng = np.random.default_rng(2)
+        prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+                   for i in range(n_req)]
+        ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                                  escalate_threshold=-1.0, use_cache=False)
+        ref.serve_reference(ep, cp, prompts[0], MAX_NEW)      # warm the jits
+        t0 = time.time()
+        tr_ref = [ref.serve_reference(ep, cp, p, MAX_NEW) for p in prompts]
+        dt_ref = time.time() - t0
+        dt_bat, tr_bat, _ = _batched(edge, cloud, ep, cp, prompts, -1.0)
+        assert all(bt.path == rt.path == "speculative"
+                   for bt, rt in zip(tr_bat, tr_ref))
+        assert all(bt.tokens == rt.tokens
+                   for bt, rt in zip(tr_bat, tr_ref)), \
+            f"batched recurrent speculation diverged from reference ({arch})"
+        fam = edge.cfg.family
+        rows.setdefault("serving_recurrent", {})[arch] = {
+            "family": fam,
+            "per_request_req_s": n_req / dt_ref,
+            f"batched{BATCH}_req_s": n_req / dt_bat,
+            "speedup": dt_ref / dt_bat,
+        }
+        csv(f"serving_recurrent_{fam},per_request_req_s,{n_req / dt_ref:.3f}")
+        csv(f"serving_recurrent_{fam},batched{BATCH}_req_s,"
+            f"{n_req / dt_bat:.3f}")
+        csv(f"serving_recurrent_{fam},speedup,{dt_ref / dt_bat:.2f}")
+
+
 def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
     global REQUESTS, MAX_NEW, BATCH
     saved = (REQUESTS, MAX_NEW, BATCH)
@@ -162,6 +210,7 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
         if not smoke:
             _scheduler_regimes(edge, ep, cloud, cp, prompts, csv, rows)
         _paged_vs_dense(edge, ep, cloud, cp, csv, rows)
+        _recurrent_mix(cloud, cp, csv, rows)
     finally:
         REQUESTS, MAX_NEW, BATCH = saved
     if out:
@@ -173,7 +222,8 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI config: paged-vs-dense arm only")
+                    help="tiny CI config: paged-vs-dense + recurrent arms "
+                         "only")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="JSON results path ('' to skip)")
     args = ap.parse_args()

@@ -1,6 +1,9 @@
 """End-to-end collaborative serving driver (deliverable b): batched
-requests through the full engine — semantic cache, edge-first generation,
-uncertainty-gated escalation to speculative cloud verification.
+requests through the REAL serving path — ``BatchedEngine.serve_batch``,
+the continuous-batching scheduler production serving runs on: slot-based
+admission into paged KV caches, one jitted decode scan per tick, semantic
+cache with intra-batch dedup, uncertainty-gated grouped escalation to
+speculative cloud verification.
 
     PYTHONPATH=src python examples/collaborative_serving.py
 """
@@ -10,7 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.engine import CollaborativeEngine
+from repro.core.scheduler import BatchedEngine
 from repro.data import SyntheticLM
 from repro.models import Model
 
@@ -21,21 +24,24 @@ edge, cloud = Model(edge_cfg), Model(cloud_cfg)
 ep = edge.init(jax.random.PRNGKey(0))
 cp = cloud.init(jax.random.PRNGKey(1))
 
-engine = CollaborativeEngine(edge, cloud, gamma=4, temperature=0.0,
-                             escalate_threshold=0.55, estimator="entropy",
-                             escalation="speculative", cache_threshold=0.98)
+engine = BatchedEngine(edge, cloud, batch_size=8, gamma=4, temperature=0.0,
+                       escalate_threshold=0.55, estimator="entropy",
+                       escalation="speculative", cache_threshold=0.98,
+                       tick_tokens=8)
 
 synth = SyntheticLM(edge_cfg.vocab_size, n_domains=3)
 rng = np.random.default_rng(0)
 
 requests = [synth.sample(rng, i % 3, 12) for i in range(10)]
-requests += requests[:3]          # repeats -> cache hits
+requests += requests[:3]          # repeats -> cache hits (dedup/coalescing)
+
+t0 = time.time()
+traces = engine.serve_batch(ep, cp, requests, 16)
+dt = time.time() - t0
 
 paths = {}
 edge_calls = cloud_passes = 0
-t0 = time.time()
-for i, prompt in enumerate(requests):
-    tr = engine.serve(ep, cp, prompt, max_new=16)
+for i, tr in enumerate(traces):
     paths[tr.path] = paths.get(tr.path, 0) + 1
     edge_calls += tr.edge_calls
     cloud_passes += tr.cloud_passes
@@ -43,8 +49,12 @@ for i, prompt in enumerate(requests):
           f"edge={tr.edge_calls:3d} cloud={tr.cloud_passes:2d}")
 
 n = len(requests)
-print(f"\n{n} requests in {time.time()-t0:.1f}s")
+stats = engine.stats()
+print(f"\n{n} requests in {dt:.1f}s ({n / dt:.2f} req/s)")
 print(f"path mix: {paths}")
 print(f"cloud passes/request: {cloud_passes/n:.1f} "
       f"(cloud-only would be 16.0)")
-print(f"cache hit rate: {engine.stats()['cache_hit_rate']:.2f}")
+print(f"cache hit rate: {stats['cache_hit_rate']:.2f}")
+print(f"kv: layout={stats['kv_layout']} "
+      f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "
+      f"capacity={stats['kv_capacity_bytes'] / 1e6:.2f}MB")

@@ -12,6 +12,7 @@ from repro.configs.base import (  # noqa: F401
 )
 
 _MODULES = {
+    "mamba2-370m": "mamba2_370m",
     "xlstm-125m": "xlstm_125m",
     "whisper-small": "whisper_small",
     "olmoe-1b-7b": "olmoe_1b_7b",

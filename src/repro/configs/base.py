@@ -1,8 +1,9 @@
 """Unified model/run configuration for the repro framework.
 
-One ``ModelConfig`` dataclass covers all six architecture families assigned
-to this paper (dense / moe / ssm / hybrid / encdec-audio / vlm).  Every field
-not used by a family defaults to an inert value so configs stay comparable.
+One ``ModelConfig`` dataclass covers all architecture families assigned to
+this paper (dense / moe / ssm-mamba2 / xlstm / hybrid / encdec-audio / vlm).
+Every field not used by a family defaults to an inert value so configs stay
+comparable.
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ from typing import Optional, Tuple
 class ModelConfig:
     # identity
     name: str
-    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    family: str              # dense | moe | ssm | xlstm | hybrid | encdec | vlm
     source: str = ""                 # citation (arXiv id / hf model card)
 
     # transformer backbone
@@ -77,11 +78,11 @@ class ModelConfig:
 
     @property
     def is_decoder_only(self) -> bool:
-        return self.family in ("dense", "moe", "ssm", "hybrid", "vlm")
+        return self.family in ("dense", "moe", "ssm", "xlstm", "hybrid", "vlm")
 
     @property
     def has_attention(self) -> bool:
-        return self.family != "ssm" or self.name.startswith("xlstm") is False
+        return self.family not in ("ssm", "xlstm")
 
     @property
     def supports_long_decode(self) -> bool:
@@ -103,8 +104,12 @@ class ModelConfig:
             attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
             mlp = 3 * d * self.d_ff * self.num_experts
             return L * (attn + mlp) + emb
-        if self.family == "ssm":   # xlstm: mlstm/slstm blocks
-            per = 8 * d * d        # projections + gates (approximate)
+        if self.family == "xlstm":   # mlstm/slstm blocks
+            per = 8 * d * d          # projections + gates (approximate)
+            return L * per + emb
+        if self.family == "ssm":     # mamba2 blocks
+            d_in = self.ssm_expand * d
+            per = 2 * d * d_in + d_in * d + d_in * (2 * self.ssm_state)
             return L * per + emb
         if self.family == "hybrid":
             d_in = self.ssm_expand * d
@@ -167,7 +172,7 @@ class ModelConfig:
             kw["xlstm_slstm_every"] = 2
         if self.ssm_state:
             kw.update(ssm_state=16, ssm_chunk=8)
-        if self.family == "ssm":
+        if self.family in ("ssm", "xlstm"):
             kw["ssm_chunk"] = 8
         return self.replace(**kw)
 

@@ -1,4 +1,4 @@
-"""xlstm-125m [ssm] — sLSTM + mLSTM blocks, d_ff=0 [arXiv:2405.04517].
+"""xlstm-125m [xlstm] — sLSTM + mLSTM blocks, d_ff=0 [arXiv:2405.04517].
 
 d_ff = 0: xLSTM blocks carry their own up/down projections and gating, so
 there is no separate MLP sub-layer.  4 heads with kv=4 refers to the mLSTM
@@ -9,7 +9,7 @@ from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(
     name="xlstm-125m",
-    family="ssm",
+    family="xlstm",
     source="arXiv:2405.04517",
     num_layers=12,
     d_model=768,

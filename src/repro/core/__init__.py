@@ -4,6 +4,8 @@ Inference (survey §2): routing, uncertainty, early_exit, partition,
 compression, cache, speculative, self_speculative, tree_speculation, engine.
 """
 from repro.core.scheduler import BatchedEngine, RequestTrace  # noqa: F401
+from repro.core.seq_state import (DenseKV, Lane, PagedKV,  # noqa: F401
+                                  RecurrentState, SequenceState, SpecOps)
 from repro.core.speculative import (BatchedSpecDecoder,  # noqa: F401
                                     SpecDecoder, SpecStats,
                                     autoregressive_baseline,

@@ -17,7 +17,10 @@ default PAGED (a shared block pool plus per-slot block tables,
 ``core/paged_cache.py``; ``kv_layout="dense"`` keeps the padded-slab
 parity oracle) — one jitted multi-token ``lax.scan`` per tick over the
 whole batch (with uncertainty accumulated on device — no per-token host
-sync), and grouped batched escalation.  ``CollaborativeEngine`` keeps the
+sync), and grouped batched escalation.  Cache layouts and families hide
+behind the ``SequenceState`` adapters (``core/seq_state.py``), so every
+edge/cloud family pair — recurrent-state models included — takes the same
+batched path.  ``CollaborativeEngine`` keeps the
 original single-request API as a thin wrapper over a ``batch_size=1``
 ``BatchedEngine``; multi-request callers should construct ``BatchedEngine``
 directly (or via ``launch/serve.py --scheduler batched``).

@@ -9,18 +9,16 @@ tokens) but executes them slot-based and batched:
   * SLOTS — ``batch_size`` slots, each holding one in-flight request.  All
     per-slot device state is a stacked pytree with a leading slot axis and
     a per-slot scalar ``pos``.
-  * KV LAYOUT — ``kv_layout="paged"`` (default where the families allow)
-    backs the slots with ONE shared pool of fixed-size token blocks plus
-    per-slot int32 block tables (``core/paged_cache.py``): blocks are
-    allocated at admission, grown on demand each decode tick, and freed at
-    retirement, so slot capacity follows each request instead of the batch
-    maximum and admission is deferred (not over-reserved) when the pool is
-    full.  ``kv_layout="dense"`` keeps the original common-``slot_len``
-    padded slabs and serves as the parity oracle.
+  * SEQUENCE STATE — every per-family cache layout lives behind the
+    ``SequenceState`` adapter protocol in ``core/seq_state.py``: dense KV
+    slabs (the parity oracle), the paged block pool + per-slot block tables
+    (``kv_layout="paged"``, the default where both families allow), and
+    fixed-size recurrent state (ssm / xlstm / hybrid).  The scheduler calls
+    ``admit / flush / prepare_tick / retire`` and reads ``peak_bytes``; it
+    never branches on layout or family itself.
   * PREFILL on admission: the exact-length prompt is prefilled once
-    (jit-cached per prompt length) and written into the slot — dense: one
-    stacked-slab scatter per admission wave; paged: one block scatter per
-    prompt plus a block-table row write.
+    (jit-cached per prompt length) and written into the slot in one
+    batched scatter per admission wave.
   * DECODE — one jitted ``lax.scan`` of up to ``tick_tokens`` steps over
     the whole batch, with per-slot uncertainty accumulated ON DEVICE
     (``uncertainty.get_batched_estimator``).  One host sync per tick, not
@@ -38,29 +36,29 @@ tokens) but executes them slot-based and batched:
     one batched cloud decode ("cloud"), one batched skeleton + batched edge
     completion ("skeleton"), or one ``BatchedSpecDecoder`` group
     ("speculative").  Groups are padded to ``batch_size`` so every jitted
-    shape is compiled once; on the paged layout each group brings its own
-    exactly-sized block pool and the speculative rewind is still a ``pos``
-    write against the group's block tables.
+    shape is compiled once.  Speculative rewind is a ``pos`` write on KV
+    layouts and a batched accepted-prefix replay (``Model.replay_step``) on
+    recurrent layouts — EVERY family pair, mixed ones included (e.g. mamba2
+    draft -> granite verify), runs the same grouped batched escalation.
 
 Remaining gaps (see ROADMAP "Serving architecture"): scheduling is
-single-host/single-device, and recurrent-family (ssm/hybrid) speculation
-still falls back to per-request snapshot+replay.
+single-host/single-device.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import SemanticCache, embed_tokens_mean
-from repro.core.paged_cache import (BlockPool, blocks_for,
-                                    prompt_cache_to_blocks, write_pool_blocks)
-from repro.core.speculative import BatchedSpecDecoder, SpecDecoder
-from repro.core.uncertainty import get_batched_estimator
+from repro.core.seq_state import (Lane, layout_for,  # noqa: F401 (re-export)
+                                  pow2_steps, resolve_kv_layout,
+                                  stack_slot_caches, write_slot, write_slots)
+from repro.core.speculative import BatchedSpecDecoder
 
 
 @dataclasses.dataclass
@@ -70,253 +68,6 @@ class RequestTrace:
     cloud_passes: int = 0
     uncertainty: float = 0.0
     tokens: Optional[List[int]] = None
-
-
-# ---------------------------------------------------------------- slot utils
-def stack_slot_caches(model, batch: int, slot_len: int):
-    """Zero-initialized stacked per-slot caches: each leaf of the model's
-    single-sequence cache gains a leading slot axis."""
-    one = model.init_cache(1, slot_len)
-    return jax.tree.map(lambda x: jnp.zeros((batch,) + x.shape, x.dtype), one)
-
-
-def write_slots(slots, bs: List[int], caches: List):
-    """Overwrite slots ``bs`` with freshly prefilled single-sequence caches
-    in ONE scatter per leaf (k separate ``.at[b].set`` writes would copy the
-    whole stacked cache k times).  Also wipes any garbage a retired occupant
-    decoded past its budget."""
-    idx = jnp.asarray(bs, jnp.int32)
-    return jax.tree.map(
-        lambda big, *smalls: big.at[idx].set(jnp.stack(smalls)),
-        slots, *caches)
-
-
-def write_slot(slots, b: int, cache):
-    """Single-slot convenience wrapper over ``write_slots``."""
-    return write_slots(slots, [b], [cache])
-
-
-def _pow2_steps(n: int, cap: int) -> int:
-    """Round a residual step count up to a power of two (capped): the decode
-    scan is jit-compiled per static ``n_steps``, so bucketing keeps the
-    compile set at O(log cap) while the active mask absorbs the overshoot."""
-    p = 1
-    while p < n:
-        p *= 2
-    return min(p, cap)
-
-
-class _Lane:
-    """Jitted batched machinery for ONE model: a batched decode step (dense:
-    vmapped per-slot ``decode_step``; paged: the natively batched
-    ``paged_decode_step``), a per-prompt-length prefill, and the multi-token
-    decode scan shared by both layouts."""
-
-    def __init__(self, model, estimator: str, temperature: float,
-                 kv_layout: str = "dense"):
-        self.model = model
-        self.kv_layout = kv_layout
-        est = get_batched_estimator(estimator)
-        if kv_layout == "paged":
-            # tok rides through the scan as (B,1,1); the paged step is
-            # batched over the leading axis and returns (B, V) logits.
-            step = lambda p, t, c: model.paged_decode_step(p, t[:, :, 0], c)
-        else:
-            step = jax.vmap(lambda p, t, c: model.decode_step(p, t, c),
-                            in_axes=(None, 0, 0))
-        self._jit_prefill = jax.jit(
-            lambda p, toks, max_seq: model.prefill(
-                p, {"tokens": toks}, max_seq=max_seq),
-            static_argnames=("max_seq",))
-
-        def chunk(params, caches, tok, steps_left, unc_sum, rng,
-                  n_steps: int):
-            """n_steps decode steps over all slots in one scan.  Returns the
-            advanced state plus per-step (token, active) for the host."""
-            def body(carry, r):
-                caches, tok, steps_left, unc_sum = carry
-                lg, caches = step(params, tok, caches)   # (B,1,V) | (B,V)
-                lg = lg.reshape(lg.shape[0], -1)
-                active = steps_left > 0
-                if temperature == 0.0:
-                    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
-                else:
-                    nxt = jax.random.categorical(
-                        r, lg / temperature, axis=-1).astype(jnp.int32)
-                unc_sum = unc_sum + jnp.where(active, est(lg), 0.0)
-                steps_left = steps_left - active.astype(jnp.int32)
-                return (caches, nxt[:, None, None], steps_left, unc_sum), \
-                    (nxt, active)
-
-            (caches, tok, steps_left, unc_sum), (toks, actives) = \
-                jax.lax.scan(body, (caches, tok, steps_left, unc_sum),
-                             jax.random.split(rng, n_steps))
-            return caches, tok, steps_left, unc_sum, toks, actives
-
-        self._chunk = jax.jit(chunk, static_argnames=("n_steps",))
-
-    def prefill(self, params, prompt, max_seq: int):
-        """Prefill ``prompt[:-1]`` into a fresh cache padded to ``max_seq``.
-        Recompiles per distinct prompt length; the jit cache makes repeats
-        free."""
-        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :-1])
-        return self._jit_prefill(params, toks, max_seq=max_seq)
-
-
-# ---------------------------------------------------------------- kv states
-class _DenseKV:
-    """Dense stacked slot caches: every slot padded to a common
-    ``slot_len`` (the original layout, kept as the parity oracle)."""
-
-    def __init__(self, lane: _Lane, params, batch: int, slot_len: int):
-        self.lane = lane
-        self.params = params
-        self.slot_len = slot_len
-        self.caches = stack_slot_caches(lane.model, batch, slot_len)
-        self._pend_bs: List[int] = []
-        self._pend_caches: List[Any] = []
-
-    def admit(self, b: int, prompt, need_tokens: int) -> bool:
-        _, c1 = self.lane.prefill(self.params, prompt, self.slot_len)
-        self._pend_bs.append(b)
-        self._pend_caches.append(c1)
-        return True
-
-    def flush(self):
-        if self._pend_bs:   # one scatter for the whole admission wave
-            self.caches = write_slots(self.caches, self._pend_bs,
-                                      self._pend_caches)
-            self._pend_bs, self._pend_caches = [], []
-
-    def prepare_tick(self, occupied, steps_h, n: int):
-        pass                # every slot already owns slot_len entries
-
-    def retire(self, b: int):
-        pass                # slab is overwritten wholesale on re-admission
-
-    @property
-    def capacity_bytes(self) -> int:
-        return sum(x.nbytes for x in jax.tree.leaves(self.caches))
-
-    peak_bytes = capacity_bytes
-
-
-class _PagedKV:
-    """Paged slot caches: one shared block pool + per-slot block tables.
-
-    Host side this owns a ``BlockPool`` (block ids only) and mirrors each
-    slot's real content length; device side it owns the cache pytree
-    ``{k, v, table, pos}``.  Writes are batched: admissions/retirements
-    accumulate and land in ``flush`` (block scatters + ONE table-row/pos
-    scatter), per-tick growth lands in ``prepare_tick`` (one table-entry
-    scatter).  Retired slots' rows are redirected to the trap block so
-    their masked garbage decode cannot corrupt re-allocated blocks.
-    """
-
-    def __init__(self, lane: _Lane, params, batch: int, slot_len: int,
-                 block_size: int, num_blocks: Optional[int] = None):
-        self.lane = lane
-        self.params = params
-        self.block_size = block_size
-        self.max_blocks = blocks_for(slot_len, block_size)
-        if num_blocks is None:      # worst-case-safe default: dense capacity
-            num_blocks = batch * self.max_blocks + 1
-        num_blocks = max(num_blocks, 2)
-        self.pool = BlockPool(num_blocks, block_size)
-        self.caches = lane.model.init_paged_cache(
-            num_blocks, block_size, batch, self.max_blocks)
-        self._block_bytes = (self.caches["k"].nbytes +
-                             self.caches["v"].nbytes) // num_blocks
-        self._len = [0] * batch     # real cache entries written per slot
-        self._commit = [0] * batch  # blocks reserved for future growth
-        self._stale: set = set()    # retired slots awaiting a trap row
-        self._pend: List[Tuple[int, np.ndarray, int]] = []  # (b, row, pos)
-
-    def admit(self, b: int, prompt, need_tokens: int) -> bool:
-        """Allocate the prompt's blocks and stage the prefill; returns
-        False (admission deferred) when the pool cannot back the request.
-
-        Admission is reservation-based: the request's WORST-CASE block need
-        (``need_tokens`` = prompt + budget [+ overdraft]) is committed up
-        front so on-demand growth can never fail mid-flight, but blocks are
-        only physically allocated as decode reaches them — the reservation
-        is per-request, not the batch maximum, which is where the paged
-        layout beats the dense slabs."""
-        S = int(np.asarray(prompt).size)
-        nb = self.pool.blocks_for(S - 1)
-        total = self.pool.blocks_for(need_tokens)
-        if not self.pool.can_alloc(total + sum(self._commit)):
-            return False
-        blocks = self.pool.alloc(b, nb)
-        self._commit[b] = total - nb
-        _, c1 = self.lane.prefill(self.params, prompt, nb * self.block_size)
-        kb, vb = prompt_cache_to_blocks(c1, self.block_size)
-        self.caches["k"], self.caches["v"] = write_pool_blocks(
-            self.caches["k"], self.caches["v"],
-            jnp.asarray(blocks, jnp.int32), kb, vb)
-        row = np.zeros((self.max_blocks,), np.int32)    # pad = trap block
-        row[:nb] = blocks
-        self._pend.append((b, row, S - 1))
-        self._len[b] = S - 1
-        self._stale.discard(b)
-        return True
-
-    def flush(self):
-        if not (self._pend or self._stale):
-            return
-        idx, rows, poss = [], [], []
-        for b, row, p in self._pend:
-            idx.append(b)
-            rows.append(row)
-            poss.append(p)
-        for b in self._stale:       # retired, not re-admitted: trap row
-            idx.append(b)
-            rows.append(np.zeros((self.max_blocks,), np.int32))
-            poss.append(0)
-        ii = jnp.asarray(idx, jnp.int32)
-        self.caches["table"] = self.caches["table"].at[ii].set(
-            jnp.asarray(np.stack(rows)))
-        self.caches["pos"] = self.caches["pos"].at[ii].set(
-            jnp.asarray(poss, jnp.int32))
-        self._pend, self._stale = [], set()
-
-    def prepare_tick(self, occupied, steps_h, n: int):
-        """Grow every occupied slot to cover this tick's REAL decode steps
-        (``min(steps_left, n)``); the masked garbage tail past a slot's
-        budget clamps into the trap.  Growth draws down the slot's
-        admission-time reservation, so it cannot fail."""
-        upd_b, upd_i, upd_blk = [], [], []
-        for b in occupied:
-            target = self._len[b] + min(int(steps_h[b]), n)
-            new = self.pool.grow_to(b, target)
-            self._commit[b] = max(self._commit[b] - len(new), 0)
-            base = len(self.pool.owned(b)) - len(new)
-            for j, blk in enumerate(new):
-                upd_b.append(b)
-                upd_i.append(base + j)
-                upd_blk.append(blk)
-            self._len[b] = target
-        if upd_b:
-            self.caches["table"] = self.caches["table"].at[
-                jnp.asarray(upd_b, jnp.int32),
-                jnp.asarray(upd_i, jnp.int32)].set(
-                jnp.asarray(upd_blk, jnp.int32))
-
-    def retire(self, b: int):
-        self.pool.free(b)
-        self._len[b] = 0
-        self._commit[b] = 0
-        self._stale.add(b)
-
-    @property
-    def peak_bytes(self) -> int:
-        """High-water mark of LIVE block bytes — what a right-sized pool
-        would have to hold (the benchmark's headline number)."""
-        return self.pool.peak_used * self._block_bytes
-
-    @property
-    def capacity_bytes(self) -> int:
-        return self.caches["k"].nbytes + self.caches["v"].nbytes
 
 
 # ---------------------------------------------------------------- requests
@@ -339,12 +90,14 @@ class BatchedEngine:
 
     Mirrors ``CollaborativeEngine``'s decision semantics exactly — same
     estimator, threshold, escalation modes, semantic cache — so greedy
-    traces match the per-request engine token for token, on BOTH KV
-    layouts.
+    traces match the per-request engine token for token, on every KV
+    layout and model family.
 
     KV layout knobs:
       * ``kv_layout``: "auto" (paged where both models' cache families
-        support it, else dense), "paged", or "dense".
+        support it, else dense), "paged", or "dense".  Recurrent-state
+        families always keep dense (stacked) storage — their state has no
+        sequence axis to page.
       * ``kv_block_size``: tokens per block (paged).
       * ``kv_blocks``: total pool blocks incl. the trap (paged).  Default
         sizes the pool to the dense worst case; give a smaller pool to cap
@@ -366,20 +119,10 @@ class BatchedEngine:
         if escalation not in ("speculative", "cloud", "skeleton"):
             raise ValueError(f"unknown escalation mode {escalation!r}; "
                              "known: speculative | cloud | skeleton")
-        if kv_layout not in ("auto", "paged", "dense"):
-            raise ValueError(f"unknown kv_layout {kv_layout!r}; "
-                             "known: auto | paged | dense")
         if kv_block_size < 1:
             raise ValueError(f"kv_block_size must be >= 1, got "
                              f"{kv_block_size}")
-        paged_ok = edge_model.paged_kv and cloud_model.paged_kv
-        if kv_layout == "paged" and not paged_ok:
-            raise ValueError(
-                "kv_layout='paged' needs KV-cache transformer families on "
-                f"both models, got {edge_model.cfg.family!r} / "
-                f"{cloud_model.cfg.family!r}")
-        self.kv_layout = ("paged" if paged_ok else "dense") \
-            if kv_layout == "auto" else kv_layout
+        self.kv_layout = resolve_kv_layout(edge_model, cloud_model, kv_layout)
         self.kv_block_size = kv_block_size
         self.kv_blocks = kv_blocks
         self.edge_model = edge_model
@@ -392,22 +135,17 @@ class BatchedEngine:
         self.skeleton_len = skeleton_len
         self.tick_tokens = tick_tokens
         self.seed = seed
-        self.edge = _Lane(edge_model, estimator, temperature,
-                          kv_layout=self.kv_layout)
-        self.cloud = _Lane(cloud_model, estimator, temperature,
-                           kv_layout=self.kv_layout)
+        self.edge = Lane(edge_model, estimator, temperature,
+                         layout=layout_for(edge_model, self.kv_layout),
+                         block_size=kv_block_size)
+        self.cloud = Lane(cloud_model, estimator, temperature,
+                          layout=layout_for(cloud_model, self.kv_layout),
+                          block_size=kv_block_size)
         self.cache = SemanticCache(threshold=cache_threshold) if use_cache \
             else None
-        if edge_model.rewindable_cache and cloud_model.rewindable_cache:
-            self.spec: Optional[BatchedSpecDecoder] = BatchedSpecDecoder(
-                edge_model, cloud_model, gamma=gamma, temperature=temperature,
-                kv_layout=self.kv_layout)
-            self._spec_fallback = None
-        else:       # recurrent-state caches: per-request snapshot/replay
-            self.spec = None
-            self._spec_fallback = SpecDecoder(edge_model, cloud_model,
-                                              gamma=gamma,
-                                              temperature=temperature)
+        self.spec = BatchedSpecDecoder(edge_model, cloud_model, gamma=gamma,
+                                       temperature=temperature,
+                                       kv_layout=self.kv_layout)
         self._queue: collections.deque = collections.deque()
         self._next_rid = 0
         # intra-batch dedup: in-flight leaders and their coalesced followers
@@ -424,25 +162,6 @@ class BatchedEngine:
         self._next_rid += 1
         self._queue.append(_Request(rid, prompt, max_new))
         return rid
-
-    # ------------------------------------------------------------ kv state
-    def _make_kv(self, lane: _Lane, params, batch: int,
-                 need_tokens: Optional[Sequence[int]] = None,
-                 num_blocks: Optional[int] = None):
-        """Build the decode-cache owner for ``lane`` in the engine's
-        layout.  ``need_tokens`` (escalation groups) sizes a paged pool to
-        exactly the group's residency instead of the worst case."""
-        if self.kv_layout == "dense":
-            return _DenseKV(lane, params, batch, self._slot_len)
-        if num_blocks is None and need_tokens is not None:
-            needed = sum(blocks_for(t, self.kv_block_size)
-                         for t in need_tokens)
-            # pow2-bucket the pool so escalation groups with different
-            # residencies reuse one compiled scan/spec-round shape (the
-            # peak-bytes stat tracks LIVE blocks, not this capacity)
-            num_blocks = 1 + _pow2_steps(needed, 1 << 30)
-        return _PagedKV(lane, params, batch, self._slot_len,
-                        self.kv_block_size, num_blocks)
 
     def _note_group(self, *states):
         live = sum(s.peak_bytes for s in states)
@@ -472,8 +191,8 @@ class BatchedEngine:
         self._slot_len = max(r.prompt.size + r.max_new for r in self._queue) \
             + 2 * max(self.gamma, 16) + 8
         self._kv_stats = {"kv_layout": self.kv_layout}
-        state = self._make_kv(self.edge, edge_params, B,
-                              num_blocks=self.kv_blocks)
+        state = self.edge.make_state(edge_params, B, self._slot_len,
+                                     num_blocks=self.kv_blocks)
         tok = jnp.zeros((B, 1, 1), jnp.int32)
         steps = jnp.zeros((B,), jnp.int32)
         unc = jnp.zeros((B,), jnp.float32)
@@ -546,9 +265,9 @@ class BatchedEngine:
             # scan recompiles per static n_steps, so bucketing bounds the
             # compile set; overshoot decodes masked garbage)
             steps_h = np.asarray(steps)
-            n = _pow2_steps(int(min(self.tick_tokens,
-                                    steps_h[occupied].max())),
-                            self.tick_tokens)
+            n = pow2_steps(int(min(self.tick_tokens,
+                                   steps_h[occupied].max())),
+                           self.tick_tokens)
             state.prepare_tick(occupied, steps_h, n)
             rng, r = jax.random.split(rng)
             state.caches, tok, steps, unc, toks, actives = self.edge._chunk(
@@ -585,9 +304,7 @@ class BatchedEngine:
 
         self._kv_stats["kv_peak_bytes"] = state.peak_bytes
         self._kv_stats["kv_capacity_bytes"] = state.capacity_bytes
-        if isinstance(state, _PagedKV):
-            self._kv_stats["kv_blocks_peak"] = state.pool.peak_used
-            self._kv_stats["kv_block_size"] = state.block_size
+        self._kv_stats.update(state.stats())
         return results
 
     def serve_batch(self, edge_params, cloud_params, prompts,
@@ -617,16 +334,16 @@ class BatchedEngine:
             results[f.rid] = RequestTrace(
                 "cache", tokens=list(tr.tokens) if tr.tokens else None)
 
-    def _group_generate(self, lane: _Lane, params, prompts,
+    def _group_generate(self, lane: Lane, params, prompts,
                         max_news: List[int], rng) -> List[List[int]]:
         """Batched greedy/sampled generation for an escalation group: per-
         request prefill, then ONE decode scan over the padded group."""
         if max(max_news) == 0:
             return [[] for _ in prompts]
-        n = _pow2_steps(max(max_news), 1 << 30)     # bound scan compiles
+        n = pow2_steps(max(max_news), 1 << 30)      # bound scan compiles
         G = self.batch_size                         # pad: stable jit shapes
         need = [len(p) - 1 + m for p, m in zip(prompts, max_news) if m > 0]
-        state = self._make_kv(lane, params, G, need_tokens=need)
+        state = lane.make_state(params, G, self._slot_len, need_tokens=need)
         tok = jnp.zeros((G, 1, 1), jnp.int32)
         steps = jnp.zeros((G,), jnp.int32)
         members = []
@@ -678,19 +395,9 @@ class BatchedEngine:
                     "skeleton", edge_calls=r.max_new + (r.max_new - k),
                     cloud_passes=k, uncertainty=u, tokens=s + rest)))
 
-        else:   # speculative
-            if self.spec is not None:
-                out.extend(self._spec_escalate(edge_params, cloud_params,
-                                               reqs, uncs, rng))
-            else:   # recurrent caches: per-request snapshot/replay path
-                for r, u in zip(reqs, uncs):
-                    toks, st = self._spec_fallback.generate(
-                        edge_params, cloud_params, r.prompt, r.max_new)
-                    out.append((r, RequestTrace(
-                        "speculative",
-                        edge_calls=r.max_new + st.draft_calls,
-                        cloud_passes=st.target_passes + st.replay_passes,
-                        uncertainty=u, tokens=toks)))
+        else:   # speculative: one grouped draft/verify for EVERY family pair
+            out.extend(self._spec_escalate(edge_params, cloud_params,
+                                           reqs, uncs, rng))
         return out
 
     def _spec_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
@@ -699,8 +406,10 @@ class BatchedEngine:
         overdraft — spec rewinds only move ``pos``, never reallocate."""
         G = self.batch_size
         need = [r.prompt.size - 1 + r.max_new + self.gamma + 2 for r in reqs]
-        d_state = self._make_kv(self.edge, edge_params, G, need_tokens=need)
-        t_state = self._make_kv(self.cloud, cloud_params, G, need_tokens=need)
+        d_state = self.edge.make_state(edge_params, G, self._slot_len,
+                                       need_tokens=need)
+        t_state = self.cloud.make_state(cloud_params, G, self._slot_len,
+                                        need_tokens=need)
         last = jnp.zeros((G, 1, 1), jnp.int32)
         for i, (r, nd) in enumerate(zip(reqs, need)):
             d_state.admit(i, r.prompt, nd)

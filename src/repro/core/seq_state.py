@@ -1,0 +1,440 @@
+"""Family-agnostic per-sequence decode state for the serving scheduler.
+
+The scheduler used to special-case every cache family: dense KV slabs,
+paged KV block tables, and a per-request snapshot+replay fallback for
+recurrent state.  This module hides all of that behind ONE adapter
+protocol, so ``core/scheduler.py`` and ``core/speculative.py`` drive every
+model family — transformer, moe, ssm (mamba2), hybrid, xlstm — through the
+same slot/tick/escalation machinery:
+
+  * ``SequenceState`` — the host-side slot-state owner: ``admit`` (prefill
+    + capacity reservation), ``flush`` (batched device writes),
+    ``prepare_tick`` (per-tick capacity growth), ``retire`` (free), and the
+    ``peak_bytes`` / ``capacity_bytes`` / ``stats`` accounting the
+    benchmarks read.  One implementation per layout:
+
+      - ``DenseKV``    — stacked per-slot caches padded to a common
+        ``slot_len`` (the parity oracle).
+      - ``PagedKV``    — one shared block pool + per-slot block tables
+        (``core/paged_cache.py``).
+      - ``RecurrentState`` — fixed-size recurrent state (ssm/xlstm/hybrid):
+        dense stacked storage (there is no sequence axis to page), its own
+        class so layout policy stays out of the scheduler.
+
+  * ``SpecOps`` — the traceable (jit-safe) per-model ops speculative
+    decoding composes: ``step`` / ``extend`` for drafting and verification,
+    and ``snapshot`` / ``commit`` for the per-round rewind.  KV layouts
+    snapshot ``pos`` and commit with a ``pos`` write; the recurrent layout
+    snapshots the state pytree (a reference, not a copy — snapshot-free on
+    the host) and commits by replaying each slot's accepted prefix through
+    the model's batched ``replay_step`` (padded draft tape + per-slot
+    ``jnp.where`` state select), replacing the old host-side per-request
+    snapshot+replay fallback.
+
+  * ``Lane`` — the per-model jitted machinery (batched decode step,
+    per-prompt-length prefill, multi-token decode scan) plus the
+    ``make_state`` factory.  ALL layout/family dispatch lives here, in
+    ``layout_for`` / ``resolve_kv_layout`` / ``make_spec_ops``.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.paged_cache import (BlockPool, blocks_for,
+                                    prompt_cache_to_blocks, write_pool_blocks)
+from repro.core.uncertainty import get_batched_estimator
+
+
+# ---------------------------------------------------------------- slot utils
+def stack_slot_caches(model, batch: int, slot_len: int):
+    """Zero-initialized stacked per-slot caches: each leaf of the model's
+    single-sequence cache gains a leading slot axis."""
+    one = model.init_cache(1, slot_len)
+    return jax.tree.map(lambda x: jnp.zeros((batch,) + x.shape, x.dtype), one)
+
+
+def write_slots(slots, bs: List[int], caches: List):
+    """Overwrite slots ``bs`` with freshly prefilled single-sequence caches
+    in ONE scatter per leaf (k separate ``.at[b].set`` writes would copy the
+    whole stacked cache k times).  Also wipes any garbage a retired occupant
+    decoded past its budget."""
+    idx = jnp.asarray(bs, jnp.int32)
+    return jax.tree.map(
+        lambda big, *smalls: big.at[idx].set(jnp.stack(smalls)),
+        slots, *caches)
+
+
+def write_slot(slots, b: int, cache):
+    """Single-slot convenience wrapper over ``write_slots``."""
+    return write_slots(slots, [b], [cache])
+
+
+def pow2_steps(n: int, cap: int) -> int:
+    """Round a residual step count up to a power of two (capped): the decode
+    scan is jit-compiled per static ``n_steps``, so bucketing keeps the
+    compile set at O(log cap) while the active mask absorbs the overshoot."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
+
+# ---------------------------------------------------------------- layouts
+def layout_for(model, kv_layout: str) -> str:
+    """Effective per-model layout under the engine-level ``kv_layout``:
+    "paged" where the engine runs paged and the family supports it,
+    "recurrent" for state-cache families, else "dense"."""
+    if kv_layout == "paged" and model.paged_kv:
+        return "paged"
+    if not model.rewindable_cache:
+        return "recurrent"
+    return "dense"
+
+
+def resolve_kv_layout(edge_model, cloud_model, kv_layout: str) -> str:
+    """Resolve the engine-level KV layout ("auto" -> paged where BOTH
+    models' families page); validates explicit requests."""
+    if kv_layout not in ("auto", "paged", "dense"):
+        raise ValueError(f"unknown kv_layout {kv_layout!r}; "
+                         "known: auto | paged | dense")
+    paged_ok = edge_model.paged_kv and cloud_model.paged_kv
+    if kv_layout == "paged" and not paged_ok:
+        raise ValueError(
+            "kv_layout='paged' needs KV-cache transformer families on "
+            f"both models, got {edge_model.cfg.family!r} / "
+            f"{cloud_model.cfg.family!r}")
+    if kv_layout == "auto":
+        return "paged" if paged_ok else "dense"
+    return kv_layout
+
+
+# ---------------------------------------------------------------- spec ops
+class SpecOps:
+    """Traceable per-(model, layout) ops for batched speculative decoding.
+
+    ``step``/``extend`` run one decode step / a multi-token extend over the
+    whole group; ``snapshot``/``commit`` implement the per-round rewind.
+    Every method is safe to call inside ``jax.jit``.
+    """
+
+    def __init__(self, model, layout: str):
+        self.model = model
+        self.layout = layout
+        if layout == "paged":
+            self._step = lambda p, t, c: model.paged_decode_step(p, t[:, :, 0], c)
+            self._extend = model.paged_extend_step
+        else:
+            vstep = jax.vmap(lambda p, t, c: model.decode_step(p, t, c),
+                             in_axes=(None, 0, 0))
+            vext = jax.vmap(lambda p, t, c: model.extend_step(p, t, c),
+                            in_axes=(None, 0, 0))
+            self._step = lambda p, t, c: _squeeze1(vstep(p, t, c))
+            self._extend = lambda p, t, c: _squeeze1(vext(p, t[:, None, :], c))
+        if layout == "recurrent":
+            self._vreplay = jax.vmap(
+                lambda p, t, c, n: model.replay_step(p, t[None, :], c, n),
+                in_axes=(None, 0, 0, 0))
+
+    def step(self, params, tok, caches):
+        """tok (G, 1, 1) -> (logits (G, V), caches)."""
+        return self._step(params, tok, caches)
+
+    def extend(self, params, tokens, caches):
+        """tokens (G, T) -> (logits (G, T, V), caches)."""
+        return self._extend(params, tokens, caches)
+
+    def snapshot(self, caches):
+        """Pre-round rewind anchor: ``pos`` (G,) for KV layouts, the cache
+        pytree itself (a device reference, no copy) for recurrent state."""
+        if self.layout == "recurrent":
+            return caches
+        return caches["pos"]
+
+    def commit(self, params, caches, snap, tokens, counts):
+        """Rewind the post-round ``caches`` to each slot's accepted prefix:
+        ``tokens`` (G, T) is the round's draft tape [pending, d_0..], and
+        ``counts`` (G,) int32 (0 for frozen slots) how many of its entries
+        each slot commits.  KV: one ``pos`` write (rejected entries stay,
+        masked and overwritten).  Recurrent: vmapped ``replay_step`` from
+        the snapshot — each slot re-advances through its own prefix in one
+        fused scan."""
+        if self.layout == "recurrent":
+            return self._vreplay(params, tokens, snap, counts)
+        return {**caches, "pos": snap + counts}
+
+
+def _squeeze1(out):
+    logits, caches = out
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------- states
+class SequenceState:
+    """Adapter protocol for the scheduler's per-slot decode state (see the
+    module docstring).  ``caches`` is the device pytree the lane's jitted
+    step/scan functions consume; everything else is host bookkeeping."""
+
+    layout = "dense"
+    caches: Any
+
+    def admit(self, b: int, prompt, need_tokens: int) -> bool:
+        """Stage slot ``b``'s prompt prefill; reserve worst-case capacity
+        (``need_tokens`` cache entries).  False = defer (capacity full)."""
+        raise NotImplementedError
+
+    def flush(self):
+        """Land all staged admissions/retirements in batched device writes."""
+
+    def prepare_tick(self, occupied, steps_h, n: int):
+        """Grow capacity to cover this tick's real decode steps."""
+
+    def retire(self, b: int):
+        """Release slot ``b``'s capacity."""
+
+    @property
+    def capacity_bytes(self) -> int:
+        return sum(x.nbytes for x in jax.tree.leaves(self.caches))
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.capacity_bytes
+
+    def stats(self) -> dict:
+        return {}
+
+
+class DenseKV(SequenceState):
+    """Dense stacked slot caches: every slot padded to a common
+    ``slot_len`` (the original layout, kept as the parity oracle)."""
+
+    layout = "dense"
+
+    def __init__(self, lane: "Lane", params, batch: int, slot_len: int):
+        self.lane = lane
+        self.params = params
+        self.slot_len = slot_len
+        self.caches = stack_slot_caches(lane.model, batch, slot_len)
+        self._pend_bs: List[int] = []
+        self._pend_caches: List[Any] = []
+
+    def admit(self, b: int, prompt, need_tokens: int) -> bool:
+        _, c1 = self.lane.prefill(self.params, prompt, self.slot_len)
+        self._pend_bs.append(b)
+        self._pend_caches.append(c1)
+        return True
+
+    def flush(self):
+        if self._pend_bs:   # one scatter for the whole admission wave
+            self.caches = write_slots(self.caches, self._pend_bs,
+                                      self._pend_caches)
+            self._pend_bs, self._pend_caches = [], []
+
+
+class RecurrentState(DenseKV):
+    """Fixed-size recurrent state (ssm / xlstm / hybrid): stacked like the
+    dense layout — recurrent state has no sequence axis to page, so slots
+    are O(1)-sized regardless of ``slot_len`` (hybrid's shared-attention
+    K/V slabs are the exception and do pad to ``slot_len``).  Differs from
+    ``DenseKV`` only in rewind semantics, which live in ``SpecOps``."""
+
+    layout = "recurrent"
+
+
+class PagedKV(SequenceState):
+    """Paged slot caches: one shared block pool + per-slot block tables.
+
+    Host side this owns a ``BlockPool`` (block ids only) and mirrors each
+    slot's real content length; device side it owns the cache pytree
+    ``{k, v, table, pos}``.  Writes are batched: admissions/retirements
+    accumulate and land in ``flush`` (block scatters + ONE table-row/pos
+    scatter), per-tick growth lands in ``prepare_tick`` (one table-entry
+    scatter).  Retired slots' rows are redirected to the trap block so
+    their masked garbage decode cannot corrupt re-allocated blocks.
+    """
+
+    layout = "paged"
+
+    def __init__(self, lane: "Lane", params, batch: int, slot_len: int,
+                 block_size: int, num_blocks: Optional[int] = None):
+        self.lane = lane
+        self.params = params
+        self.block_size = block_size
+        self.max_blocks = blocks_for(slot_len, block_size)
+        if num_blocks is None:      # worst-case-safe default: dense capacity
+            num_blocks = batch * self.max_blocks + 1
+        num_blocks = max(num_blocks, 2)
+        self.pool = BlockPool(num_blocks, block_size)
+        self.caches = lane.model.init_paged_cache(
+            num_blocks, block_size, batch, self.max_blocks)
+        self._block_bytes = (self.caches["k"].nbytes +
+                             self.caches["v"].nbytes) // num_blocks
+        self._len = [0] * batch     # real cache entries written per slot
+        self._commit = [0] * batch  # blocks reserved for future growth
+        self._stale: set = set()    # retired slots awaiting a trap row
+        self._pend: List[Tuple[int, np.ndarray, int]] = []  # (b, row, pos)
+
+    def admit(self, b: int, prompt, need_tokens: int) -> bool:
+        """Allocate the prompt's blocks and stage the prefill; returns
+        False (admission deferred) when the pool cannot back the request.
+
+        Admission is reservation-based: the request's WORST-CASE block need
+        (``need_tokens`` = prompt + budget [+ overdraft]) is committed up
+        front so on-demand growth can never fail mid-flight, but blocks are
+        only physically allocated as decode reaches them — the reservation
+        is per-request, not the batch maximum, which is where the paged
+        layout beats the dense slabs."""
+        S = int(np.asarray(prompt).size)
+        nb = self.pool.blocks_for(S - 1)
+        total = self.pool.blocks_for(need_tokens)
+        if not self.pool.can_alloc(total + sum(self._commit)):
+            return False
+        blocks = self.pool.alloc(b, nb)
+        self._commit[b] = total - nb
+        _, c1 = self.lane.prefill(self.params, prompt, nb * self.block_size)
+        kb, vb = prompt_cache_to_blocks(c1, self.block_size)
+        self.caches["k"], self.caches["v"] = write_pool_blocks(
+            self.caches["k"], self.caches["v"],
+            jnp.asarray(blocks, jnp.int32), kb, vb)
+        row = np.zeros((self.max_blocks,), np.int32)    # pad = trap block
+        row[:nb] = blocks
+        self._pend.append((b, row, S - 1))
+        self._len[b] = S - 1
+        self._stale.discard(b)
+        return True
+
+    def flush(self):
+        if not (self._pend or self._stale):
+            return
+        idx, rows, poss = [], [], []
+        for b, row, p in self._pend:
+            idx.append(b)
+            rows.append(row)
+            poss.append(p)
+        for b in self._stale:       # retired, not re-admitted: trap row
+            idx.append(b)
+            rows.append(np.zeros((self.max_blocks,), np.int32))
+            poss.append(0)
+        ii = jnp.asarray(idx, jnp.int32)
+        self.caches["table"] = self.caches["table"].at[ii].set(
+            jnp.asarray(np.stack(rows)))
+        self.caches["pos"] = self.caches["pos"].at[ii].set(
+            jnp.asarray(poss, jnp.int32))
+        self._pend, self._stale = [], set()
+
+    def prepare_tick(self, occupied, steps_h, n: int):
+        """Grow every occupied slot to cover this tick's REAL decode steps
+        (``min(steps_left, n)``); the masked garbage tail past a slot's
+        budget clamps into the trap.  Growth draws down the slot's
+        admission-time reservation, so it cannot fail."""
+        upd_b, upd_i, upd_blk = [], [], []
+        for b in occupied:
+            target = self._len[b] + min(int(steps_h[b]), n)
+            new = self.pool.grow_to(b, target)
+            self._commit[b] = max(self._commit[b] - len(new), 0)
+            base = len(self.pool.owned(b)) - len(new)
+            for j, blk in enumerate(new):
+                upd_b.append(b)
+                upd_i.append(base + j)
+                upd_blk.append(blk)
+            self._len[b] = target
+        if upd_b:
+            self.caches["table"] = self.caches["table"].at[
+                jnp.asarray(upd_b, jnp.int32),
+                jnp.asarray(upd_i, jnp.int32)].set(
+                jnp.asarray(upd_blk, jnp.int32))
+
+    def retire(self, b: int):
+        self.pool.free(b)
+        self._len[b] = 0
+        self._commit[b] = 0
+        self._stale.add(b)
+
+    @property
+    def peak_bytes(self) -> int:
+        """High-water mark of LIVE block bytes — what a right-sized pool
+        would have to hold (the benchmark's headline number)."""
+        return self.pool.peak_used * self._block_bytes
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.caches["k"].nbytes + self.caches["v"].nbytes
+
+    def stats(self) -> dict:
+        return {"kv_blocks_peak": self.pool.peak_used,
+                "kv_block_size": self.block_size}
+
+
+# ---------------------------------------------------------------- lane
+class Lane:
+    """Jitted batched machinery for ONE model in ONE layout: the batched
+    decode step (``SpecOps.step``), a per-prompt-length prefill, the
+    multi-token decode scan shared by all layouts, and the ``make_state``
+    factory the scheduler calls instead of picking adapters itself."""
+
+    def __init__(self, model, estimator: str, temperature: float,
+                 layout: str = "dense", block_size: int = 32):
+        self.model = model
+        self.layout = layout
+        self.block_size = block_size
+        self.ops = SpecOps(model, layout)
+        est = get_batched_estimator(estimator)
+        step = self.ops.step
+        self._jit_prefill = jax.jit(
+            lambda p, toks, max_seq: model.prefill(
+                p, {"tokens": toks}, max_seq=max_seq),
+            static_argnames=("max_seq",))
+
+        def chunk(params, caches, tok, steps_left, unc_sum, rng,
+                  n_steps: int):
+            """n_steps decode steps over all slots in one scan.  Returns the
+            advanced state plus per-step (token, active) for the host."""
+            def body(carry, r):
+                caches, tok, steps_left, unc_sum = carry
+                lg, caches = step(params, tok, caches)       # (B, V)
+                active = steps_left > 0
+                if temperature == 0.0:
+                    nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+                else:
+                    nxt = jax.random.categorical(
+                        r, lg / temperature, axis=-1).astype(jnp.int32)
+                unc_sum = unc_sum + jnp.where(active, est(lg), 0.0)
+                steps_left = steps_left - active.astype(jnp.int32)
+                return (caches, nxt[:, None, None], steps_left, unc_sum), \
+                    (nxt, active)
+
+            (caches, tok, steps_left, unc_sum), (toks, actives) = \
+                jax.lax.scan(body, (caches, tok, steps_left, unc_sum),
+                             jax.random.split(rng, n_steps))
+            return caches, tok, steps_left, unc_sum, toks, actives
+
+        self._chunk = jax.jit(chunk, static_argnames=("n_steps",))
+
+    def prefill(self, params, prompt, max_seq: int):
+        """Prefill ``prompt[:-1]`` into a fresh cache padded to ``max_seq``.
+        Recompiles per distinct prompt length; the jit cache makes repeats
+        free."""
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :-1])
+        return self._jit_prefill(params, toks, max_seq=max_seq)
+
+    def make_state(self, params, batch: int, slot_len: int, *,
+                   need_tokens: Optional[Sequence[int]] = None,
+                   num_blocks: Optional[int] = None) -> SequenceState:
+        """Build this lane's decode-state adapter.  ``need_tokens``
+        (escalation groups) sizes a paged pool to exactly the group's
+        residency instead of the worst case."""
+        if self.layout == "recurrent":
+            return RecurrentState(self, params, batch, slot_len)
+        if self.layout == "dense":
+            return DenseKV(self, params, batch, slot_len)
+        if num_blocks is None and need_tokens is not None:
+            needed = sum(blocks_for(t, self.block_size) for t in need_tokens)
+            # pow2-bucket the pool so escalation groups with different
+            # residencies reuse one compiled scan/spec-round shape (the
+            # peak-bytes stat tracks LIVE blocks, not this capacity)
+            num_blocks = 1 + pow2_steps(needed, 1 << 30)
+        return PagedKV(self, params, batch, slot_len, self.block_size,
+                       num_blocks)

@@ -10,9 +10,12 @@ architecture families differ):
 
 * KV-cache models (dense/moe/vlm/encdec) roll back rejected tokens by
   resetting ``pos`` — stale entries are masked out and later overwritten.
-* Recurrent-state models (ssm/hybrid) cannot rewind; we snapshot the state
-  before each round and REPLAY the accepted prefix (one extra extend pass —
-  this cost shows up in SpecStats.replay_passes and in the benchmarks).
+* Recurrent-state models (ssm/xlstm/hybrid) cannot rewind; the reference
+  ``SpecDecoder`` snapshots the state before each round and REPLAYS the
+  accepted prefix (one extra extend pass — this cost shows up in
+  SpecStats.replay_passes and in the benchmarks).  ``BatchedSpecDecoder``
+  replays on device instead: each slot re-advances through its own accepted
+  prefix via the model's batched ``replay_step`` (``core/seq_state.py``).
 
 Invariant maintained by ``SpecDecoder.generate``: both caches contain
 ``sequence[:-1]``; ``sequence[-1]`` ("last token") is pending.
@@ -256,18 +259,22 @@ class BatchedSpecDecoder:
     caches (leading slot axis, per-slot scalar ``pos``):
 
       * drafting is ONE jitted ``lax.scan`` of gamma+1 steps over the whole
-        group (vmapped ``decode_step``);
-      * verification is ONE batched target ``extend_step`` over all slots;
+        group;
+      * verification is ONE batched target extend over all slots;
       * acceptance (vmapped ``speculative_sample``) and the per-slot cache
         rewind both happen on device — one host sync per ROUND, per group.
 
-    Requires rewindable (KV) caches for both models: per-slot rewind is a
-    ``pos`` write.  Recurrent-state families (ssm/hybrid) need snapshot +
-    replay of per-slot accepted prefixes of DIFFERENT lengths, which does
-    not batch — the scheduler falls back to per-request ``SpecDecoder``.
+    Cache handling is family-agnostic: each model's step/extend/rewind go
+    through ``core.seq_state.SpecOps``, so any edge/cloud family pair —
+    mixed ones included — shares the same rounds.  KV caches (dense or
+    paged) rewind with a ``pos`` write; recurrent-state families
+    (ssm/xlstm/hybrid) rewind by replaying each slot's accepted prefix
+    from the pre-round state via the model's batched ``replay_step``
+    (padded draft tape + per-slot ``jnp.where`` state select) — no
+    per-request snapshot+replay anywhere.
 
     The caller owns admission: ``generate_group`` takes already-prefilled
-    stacked caches (see ``core.scheduler.stack_slot_caches`` /
+    stacked caches (see ``core.seq_state.stack_slot_caches`` /
     ``write_slot``) so the scheduler can reuse its slot machinery.
 
     ``kv_layout="paged"`` runs the same rounds over paged caches (shared
@@ -282,35 +289,14 @@ class BatchedSpecDecoder:
 
     def __init__(self, draft_model, target_model, *, gamma: int = 4,
                  temperature: float = 0.0, kv_layout: str = "dense"):
-        if not (draft_model.rewindable_cache and target_model.rewindable_cache):
-            raise ValueError("BatchedSpecDecoder requires rewindable (KV) "
-                             "caches for both models; use SpecDecoder for "
-                             "recurrent-state families")
+        from repro.core.seq_state import SpecOps, layout_for
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.gamma = gamma
         self.temperature = temperature
         self.kv_layout = kv_layout
-        if kv_layout == "paged":
-            # batched paged steps: the block pool has no slot axis to vmap
-            # over, but the ops are natively batched. Adapters restore the
-            # vmapped shapes ((G,1,V) draft logits, (G,1,T,V) verify).
-            def _pdraft(p, t, c):
-                lg, c = draft_model.paged_decode_step(p, t[:, :, 0], c)
-                return lg[:, None], c
-
-            def _pverify(p, t, c):
-                lg, c = target_model.paged_extend_step(p, t[:, 0, :], c)
-                return lg[:, None], c
-
-            self._vdraft, self._vverify = _pdraft, _pverify
-        else:
-            self._vdraft = jax.vmap(
-                lambda p, t, c: draft_model.decode_step(p, t, c),
-                in_axes=(None, 0, 0))
-            self._vverify = jax.vmap(
-                lambda p, t, c: target_model.extend_step(p, t, c),
-                in_axes=(None, 0, 0))
+        self._dops = SpecOps(draft_model, layout_for(draft_model, kv_layout))
+        self._tops = SpecOps(target_model, layout_for(target_model, kv_layout))
         self._round = jax.jit(self._round_impl)
 
     def _round_impl(self, draft_params, target_params, d_slots, t_slots,
@@ -323,16 +309,15 @@ class BatchedSpecDecoder:
         """
         gamma = self.gamma
         G = last.shape[0]
-        d_snap = d_slots["pos"]                      # (G,)
-        t_snap = t_slots["pos"]
+        d_snap = self._dops.snapshot(d_slots)
+        t_snap = self._tops.snapshot(t_slots)
         r_draft, r_ver = jax.random.split(rng)
 
         # ---- draft gamma tokens (+1 step so a fully-accepted draft's last
-        # token is already in the cache when we rewind to snap+gamma+1)
+        # token is already in the cache when we commit gamma+1 tokens)
         def body(carry, r):
             caches, tok = carry
-            lg, caches = self._vdraft(draft_params, tok, caches)
-            lg = lg.reshape(G, -1)
+            lg, caches = self._dops.step(draft_params, tok, caches)  # (G, V)
             if self.temperature == 0.0:
                 nxt = jnp.argmax(lg, -1).astype(jnp.int32)
             else:
@@ -346,21 +331,22 @@ class BatchedSpecDecoder:
         draft_lgs = jnp.moveaxis(lgs[:gamma], 0, 1)  # (G, gamma, V)
 
         # ---- verify in one batched target pass over [last, d_0..d_{g-1}]
-        ver_in = jnp.concatenate([last[:, :, 0], draft_toks], axis=1)[:, None, :]
-        t_logits, t_slots = self._vverify(target_params, ver_in, t_slots)
+        ver_in = jnp.concatenate([last[:, :, 0], draft_toks], axis=1)  # (G,g+1)
+        t_logits, t_slots = self._tops.extend(target_params, ver_in, t_slots)
 
         n_acc, next_tok = jax.vmap(
             functools.partial(speculative_sample,
                               temperature=self.temperature)
-        )(jax.random.split(r_ver, G), t_logits[:, 0], draft_lgs, draft_toks)
+        )(jax.random.split(r_ver, G), t_logits, draft_lgs, draft_toks)
 
-        # ---- per-slot rewind: caches now hold sequence + accepted draft;
-        # frozen slots restore their snapshot (their writes were garbage
-        # past pos, masked out and overwritten on the next real round).
-        d_slots = {**d_slots,
-                   "pos": jnp.where(active, d_snap + n_acc + 1, d_snap)}
-        t_slots = {**t_slots,
-                   "pos": jnp.where(active, t_snap + n_acc + 1, t_snap)}
+        # ---- per-slot rewind: caches now hold sequence + the full draft;
+        # commit each slot's accepted prefix [last, d_0..d_{n_acc-1}]
+        # (counts = 0 freezes inactive slots on their snapshot).
+        counts = jnp.where(active, n_acc + 1, 0).astype(jnp.int32)
+        d_slots = self._dops.commit(draft_params, d_slots, d_snap,
+                                    ver_in, counts)
+        t_slots = self._tops.commit(target_params, t_slots, t_snap,
+                                    ver_in, counts)
         last = jnp.where(active[:, None, None], next_tok[:, None, None], last)
         return d_slots, t_slots, last, draft_toks, n_acc, next_tok
 

@@ -10,6 +10,16 @@ escalation).
 (useful for tracing and as the baseline the batched numbers are quoted
 against).
 
+Any edge/cloud family pair works — mixed ones included, e.g.::
+
+    PYTHONPATH=src python -m repro.launch.serve --edge mamba2-370m \
+        --cloud granite-8b --reduced --threshold -1
+
+Recurrent-state edges (mamba2 "ssm", zamba2 "hybrid", "xlstm") ride the
+same batched scheduler and grouped speculative escalation as the KV
+families: their rewinds are batched accepted-prefix replays behind the
+``SequenceState`` adapters in ``core/seq_state.py``.
+
 KV layout (batched scheduler): ``--kv-layout paged`` (the default via
 ``auto`` on KV-cache transformer families) backs the slots with a shared
 pool of ``--kv-block-size``-token blocks and per-slot block tables

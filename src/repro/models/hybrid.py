@@ -195,3 +195,29 @@ def decode_step(params, token, cache, cfg, *, window: int = 0):
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["embed"], h[:, 0, :])
     return logits, {"mamba": msts, "k": ks, "v": vs, "pos": pos + 1}
+
+
+def replay_step(params, tokens, cache, count, cfg):
+    """Batched accepted-prefix replay for speculative rewind (see
+    ``models.ssm.replay_step``): advance through ``tokens[:, :count]`` of
+    the padded draft tape with a ``tree_where``-gated scan.
+
+    Only the mamba states and ``pos`` are gated.  The shared-attention K/V
+    slabs always take the step's write: entries land at monotonically
+    increasing positions while the slot is alive, and once ``t >= count``
+    the frozen ``pos`` makes dead steps overwrite the single entry AT
+    ``pos`` — which is past the committed prefix, masked out of every read
+    (``k_pos <= pos``), and rewritten by the next real decode.  That keeps
+    the replay from copying the full K/V slabs once per scan step."""
+    def body(carry, xs):
+        t, tok = xs
+        _, nxt = decode_step(params, tok[:, None], carry, cfg)
+        take = t < count
+        return {"mamba": S.tree_where(take, nxt["mamba"], carry["mamba"]),
+                "k": nxt["k"], "v": nxt["v"],
+                "pos": jnp.where(take, nxt["pos"], carry["pos"])}, None
+
+    T = tokens.shape[1]
+    cache, _ = jax.lax.scan(body, cache,
+                            (jnp.arange(T, dtype=jnp.int32), tokens.T))
+    return cache

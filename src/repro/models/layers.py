@@ -288,6 +288,52 @@ def paged_extend_attention(p, x, k_pool, v_pool, table, pos, cfg):
     return out.reshape(B, T, H * hd) @ p["wo"], k_pool, v_pool
 
 
+def paged_decode_attention_block(p, x, k_pool, v_pool, table, pos, cfg, *,
+                                 backend: str = "auto"):
+    """Single-token decode through a paged KV pool WITHOUT materializing the
+    block-table gather.
+
+    Same write path as ``paged_extend_attention`` (the new K/V land at
+    ``table[b, pos // bs]``, offset ``pos % bs``), but the read dispatches
+    on backend: TPU runs the flash-decoding Pallas kernel
+    (``kernels.ops.paged_decode_attention`` — scalar-prefetched block-table
+    index maps, each grid step DMAs exactly one block), CPU runs its
+    pure-jnp oracle ``kernels.ref.paged_decode_attention_ref``.  ``backend``
+    "kernel" / "ref" force a side (tests); "auto" picks by device.
+    Callers with a sliding window stay on ``paged_extend_attention`` — the
+    kernel masks by ``length`` only.
+
+    x: (B, 1, d); k_pool/v_pool: (NB, bs, Kv, hd); table: (B, MB) int32;
+    pos: (B,).  Returns (out (B, 1, d), new_k_pool, new_v_pool).
+    """
+    from repro.kernels import ops, ref
+    B, T, d = x.shape
+    assert T == 1, "paged_decode_attention_block is the T=1 fast path"
+    _, bs, Kv, hd = k_pool.shape
+    H = cfg.num_heads
+    G = H // Kv
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, Kv, hd)
+    v = (x @ p["wv"]).reshape(B, 1, Kv, hd)
+    q_pos = pos[:, None]                                             # (B, 1)
+    if cfg.use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+    blk = jnp.take_along_axis(table, q_pos // bs, axis=1)[:, 0]      # (B,)
+    off = (pos % bs)
+    k_pool = k_pool.at[blk, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[blk, off].set(v[:, 0].astype(v_pool.dtype))
+    qh = q[:, 0].reshape(B, Kv, G, hd)          # head h = kv*G + g, as mha
+    length = pos + 1
+    if backend == "kernel" or (backend == "auto" and not ops.on_cpu()):
+        out = ops.paged_decode_attention(qh, k_pool, v_pool, table, length)
+    else:
+        out = ref.paged_decode_attention_ref(qh, k_pool, v_pool, table,
+                                             length)
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], k_pool, v_pool
+
+
 def extend_attention(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0,
                      block_mask=None, q_positions=None):
     """Multi-token cached decode (chunked prefill / speculative verify).

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import encdec, hybrid, transformer, xlstm
+from repro.models import encdec, hybrid, ssm, transformer, xlstm
 
 
 def cross_entropy(logits, labels, ignore: int = -1):
@@ -41,6 +41,8 @@ class Model:
         if cfg.family in ("dense", "moe", "vlm"):
             return transformer.init_params(rng, cfg)
         if cfg.family == "ssm":
+            return ssm.init_params(rng, cfg)
+        if cfg.family == "xlstm":
             return xlstm.init_params(rng, cfg)
         if cfg.family == "hybrid":
             return hybrid.init_params(rng, cfg)
@@ -61,6 +63,9 @@ class Model:
                                        window=window, remat=remat,
                                        collect_hidden=collect_hidden)
         if cfg.family == "ssm":
+            return ssm.forward(params, tokens, cfg, remat=remat,
+                               collect_hidden=collect_hidden)
+        if cfg.family == "xlstm":
             return xlstm.forward(params, tokens, cfg, remat=remat,
                                  collect_hidden=collect_hidden)
         if cfg.family == "hybrid":
@@ -87,6 +92,8 @@ class Model:
         if cfg.family in ("dense", "moe", "vlm"):
             return transformer.init_cache(cfg, batch_size, max_seq)
         if cfg.family == "ssm":
+            return ssm.init_cache(cfg, batch_size)
+        if cfg.family == "xlstm":
             return xlstm.init_cache(cfg, batch_size)
         if cfg.family == "hybrid":
             return hybrid.init_cache(cfg, batch_size, max_seq)
@@ -105,6 +112,8 @@ class Model:
             return transformer.prefill(params, tokens, cfg, max_seq=max_seq,
                                        embeds=batch["embeds"], window=window)
         if cfg.family == "ssm":
+            return ssm.prefill(params, tokens, cfg)
+        if cfg.family == "xlstm":
             return xlstm.prefill(params, tokens, cfg)
         if cfg.family == "hybrid":
             return hybrid.prefill(params, tokens, cfg, max_seq=max_seq,
@@ -119,6 +128,8 @@ class Model:
         if cfg.family in ("dense", "moe", "vlm"):
             return transformer.decode_step(params, token, cache, cfg, window=window)
         if cfg.family == "ssm":
+            return ssm.decode_step(params, token, cache, cfg)
+        if cfg.family == "xlstm":
             return xlstm.decode_step(params, token, cache, cfg)
         if cfg.family == "hybrid":
             return hybrid.decode_step(params, token, cache, cfg, window=window)
@@ -140,6 +151,8 @@ class Model:
         if block_mask is not None or q_positions is not None:
             raise ValueError(f"block_mask unsupported for family {cfg.family}")
         if cfg.family == "ssm":
+            return ssm.extend_step(params, tokens, cache, cfg)
+        if cfg.family == "xlstm":
             return xlstm.extend_step(params, tokens, cache, cfg)
         if cfg.family == "hybrid":
             return hybrid.extend_step(params, tokens, cache, cfg, window=window)
@@ -169,11 +182,15 @@ class Model:
         return transformer.init_paged_cache(self.cfg, num_blocks, block_size,
                                             batch, max_blocks)
 
-    def paged_decode_step(self, params, token, cache):
+    def paged_decode_step(self, params, token, cache, *,
+                          attn_backend: str = "auto"):
         """One decode step over a paged cache. token (B,1) -> (logits (B,V),
-        cache)."""
+        cache).  ``attn_backend``: "auto" (TPU: Pallas paged kernel, CPU:
+        jnp oracle), "kernel", "ref", or "gather" (the full-width
+        block-table gather, kept as the windowed/general path)."""
         self._require_paged()
-        return transformer.paged_decode_step(params, token, cache, self.cfg)
+        return transformer.paged_decode_step(params, token, cache, self.cfg,
+                                             attn_backend=attn_backend)
 
     def paged_extend_step(self, params, tokens, cache):
         """Multi-token cached decode over a paged cache. tokens (B,T) ->
@@ -184,13 +201,30 @@ class Model:
     @property
     def rewindable_cache(self) -> bool:
         """True if the cache can be rolled back by resetting ``pos`` (KV
-        caches); False for recurrent state (SSM/hybrid), which needs
-        snapshot + replay on speculative rejection."""
+        caches); False for recurrent state (ssm/xlstm/hybrid), which rewinds
+        by replaying the accepted prefix (``replay_step``)."""
         return self.cfg.family in ("dense", "moe", "vlm", "encdec")
 
     def rewind(self, cache, new_pos):
         assert self.rewindable_cache
         return {**cache, "pos": jnp.asarray(new_pos, jnp.int32)}
+
+    def replay_step(self, params, tokens, cache, count):
+        """Recurrent-state rewind primitive: re-advance ``cache`` through
+        ``tokens[:, :count]`` of a padded draft tape (``count`` () int32;
+        ``count == 0`` keeps the cache).  vmapped over slots by the serving
+        scheduler, this rewinds every slot to its own accepted count in one
+        fused scan — the batched replacement for per-request
+        snapshot+replay.  KV-cache families rewind via ``rewind`` instead."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm.replay_step(params, tokens, cache, count, cfg)
+        if cfg.family == "xlstm":
+            return xlstm.replay_step(params, tokens, cache, count, cfg)
+        if cfg.family == "hybrid":
+            return hybrid.replay_step(params, tokens, cache, count, cfg)
+        raise ValueError(f"replay_step is for recurrent-state families; "
+                         f"{cfg.family!r} caches rewind via pos")
 
 
 # ---------------------------------------------------------------- batches

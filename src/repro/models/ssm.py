@@ -1,5 +1,6 @@
 """State-space sequence mixing: a generic *chunked gated linear attention*
-(GLA) engine shared by Mamba2 (SSD) and xLSTM's mLSTM, plus the Mamba2 block.
+(GLA) engine shared by Mamba2 (SSD) and xLSTM's mLSTM, the Mamba2 block, and
+the standalone pure-Mamba2 model (family "ssm", e.g. ``mamba2-370m``).
 
 Recurrence (per batch b, head h):
     S_t = a_t * S_{t-1} + i_t * k_t v_t^T          (N x P matrix state)
@@ -253,3 +254,139 @@ def mamba2_step(p, x, cache, cfg):
     y = y * jax.nn.silu(z)
     y = rmsnorm(y, p["norm"], cfg.norm_eps)
     return y @ p["out_proj"], {"gla": st, "conv": conv_state}
+
+
+# ------------------------------------------------------- standalone model
+# Pure-Mamba2 decoder (family "ssm"): embed + L stacked mamba2 blocks
+# consumed with lax.scan (one-block-sized HLO, like hybrid.py minus its
+# shared attention) + final norm.  The cache is pure recurrent state —
+# no sequence axis at all, so decode cost is O(1) in context length.
+def init_params(rng, cfg):
+    from repro.models import layers as L
+    dtype = jnp.dtype(cfg.param_dtype)
+    r = L.split(rng, cfg.num_layers + 2)
+    blocks = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_mamba2(r[i], cfg, dtype)
+                            for i in range(cfg.num_layers)])
+    return {
+        "embed": L.init_embedding(r[-2], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _stacked_cache(cfg, batch: int):
+    base = mamba2_init_cache(cfg, batch)
+    cache = jax.tree.map(
+        lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), base)
+    # running-max needs -inf init, not zeros:
+    cache["gla"] = GLAState(cache["gla"].S, cache["gla"].n,
+                            jnp.full(cache["gla"].m.shape, _NEG, jnp.float32))
+    return cache
+
+
+def init_cache(cfg, batch: int):
+    return {"layers": _stacked_cache(cfg, batch),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def forward(params, tokens, cfg, *, remat: bool = False,
+            collect_hidden: bool = False):
+    from repro import runtime
+    from repro.models.layers import embed, rmsnorm, unembed
+    h = embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
+
+    def body(hh, p):
+        hh = runtime.shard_activation(hh)
+        out, _st = mamba2_forward(p, hh, cfg)
+        hh = hh + out
+        return hh, (hh if collect_hidden else jnp.zeros((), hh.dtype))
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, hs = jax.lax.scan(body, h, params["blocks"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], h)
+    if collect_hidden:
+        return logits, jnp.float32(0.0), hs
+    return logits, jnp.float32(0.0)
+
+
+def _run_cached(params, tokens_or_token, cache, cfg, block_fn):
+    """Shared scan-over-layers driver for prefill/extend/decode: ``block_fn``
+    maps (p, h, layer_state) -> (h, new_state)."""
+    from repro import runtime
+    from repro.models.layers import embed, rmsnorm, unembed
+    h = embed(params["embed"], tokens_or_token).astype(
+        jnp.dtype(cfg.activ_dtype))
+
+    def body(hh, xs):
+        p, st = xs
+        hh = runtime.shard_activation(hh)
+        out, st = block_fn(p, hh, st)
+        return hh + out, st
+
+    h, states = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], h), states
+
+
+def prefill(params, tokens, cfg):
+    """Returns (last-token logits (B,V), cache with final recurrent state)."""
+    cache = _stacked_cache(cfg, tokens.shape[0])
+    logits, states = _run_cached(
+        params, tokens, cache, cfg,
+        lambda p, hh, st: mamba2_forward(p, hh, cfg, cache=st))
+    return logits[:, -1, :], {"layers": states,
+                              "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+
+
+def extend_step(params, tokens, cache, cfg):
+    """Multi-token cached decode. tokens (B,T) -> (logits (B,T,V), cache)."""
+    logits, states = _run_cached(
+        params, tokens, cache["layers"], cfg,
+        lambda p, hh, st: mamba2_forward(p, hh, cfg, cache=st))
+    return logits, {"layers": states,
+                    "pos": cache["pos"] + jnp.asarray(tokens.shape[1],
+                                                      jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg):
+    """One decode step. token (B,1) -> (logits (B,V), cache)."""
+    logits, states = _run_cached(
+        params, token, cache["layers"], cfg,
+        lambda p, hh, st: mamba2_step(p, hh, st, cfg))
+    return logits[:, 0, :], {"layers": states, "pos": cache["pos"] + 1}
+
+
+# ------------------------------------------------------- batched replay
+def tree_where(pred, new, old):
+    """Per-leaf ``jnp.where`` over two identically-shaped pytrees: ``pred``
+    is a scalar (or broadcastable) bool.  The recurrent families' rewind
+    primitive — under ``vmap`` the predicate becomes per-slot, so one call
+    selects each slot's state at its own accepted count."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), new, old)
+
+
+def replay_step(params, tokens, cache, count, cfg):
+    """Batched accepted-prefix replay for speculative rewind (family "ssm").
+
+    Recurrent state cannot be rolled back by a ``pos`` write, so rewinding
+    to an accepted draft prefix means re-advancing from the pre-round state.
+    ``tokens`` (B, T) is the PADDED tape [pending token, draft_0 ..
+    draft_{T-2}]; ``count`` () int32 in [0, T] is how many of those tokens
+    are actually committed.  The scan advances the state only while
+    ``t < count`` (a ``tree_where`` select), so vmapping over slots replays
+    every slot's own accepted prefix in ONE fused scan — no host-side
+    per-request snapshot+replay.  ``count == 0`` returns ``cache``
+    unchanged (frozen slots keep their snapshot)."""
+    def body(carry, xs):
+        t, tok = xs
+        _, nxt = decode_step(params, tok[:, None], carry, cfg)
+        return tree_where(t < count, nxt, carry), None
+
+    T = tokens.shape[1]
+    cache, _ = jax.lax.scan(body, cache,
+                            (jnp.arange(T, dtype=jnp.int32), tokens.T))
+    return cache

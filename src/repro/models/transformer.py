@@ -139,16 +139,53 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, batch: int,
     }
 
 
-def paged_decode_step(params, token, cache, cfg):
+def paged_decode_step(params, token, cache, cfg, *, attn_backend: str = "auto"):
     """One decode step over a paged cache. token: (B, 1) int32; cache as
     built by ``init_paged_cache``.  Returns (logits (B, V), cache).
 
     The batched counterpart of vmapping ``decode_step`` over stacked dense
     slots: same math, but K/V are read and written through the block table
-    so per-sequence capacity is whatever the scheduler allocated.  This is
-    exactly the T=1 case of ``paged_extend_step``."""
+    so per-sequence capacity is whatever the scheduler allocated.  The
+    attention read dispatches per backend (TPU: the Pallas flash-decoding
+    paged kernel; CPU: its pure-jnp oracle) instead of gathering the full
+    block-table width every step; sliding-window configs (and
+    ``attn_backend="gather"``) keep the general T=1 ``paged_extend_step``
+    path, whose mask handles the window."""
+    if attn_backend != "gather" and not cfg.sliding_window:
+        return _paged_decode_step_kernel(params, token, cache, cfg,
+                                         attn_backend)
     logits, cache = paged_extend_step(params, token, cache, cfg)
     return logits[:, 0], cache
+
+
+def _paged_decode_step_kernel(params, token, cache, cfg, backend: str):
+    """T=1 paged decode with the dispatched attention read
+    (``layers.paged_decode_attention_block``)."""
+    h = L.embed(params["embed"], token).astype(_adt(cfg))
+    pos, table = cache["pos"], cache["table"]
+
+    def body(hh, xs):
+        p, ck, cv = xs
+        hh = runtime.shard_activation(hh)
+        hn = L.rmsnorm(hh, p["attn_norm"], cfg.norm_eps)
+        a, ck, cv = L.paged_decode_attention_block(p["attn"], hn, ck, cv,
+                                                   table, pos, cfg,
+                                                   backend=backend)
+        hh = hh + a
+        hn = L.rmsnorm(hh, p["mlp_norm"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m, _ = MOE.moe_apply(p["moe"], hn, cfg)
+        else:
+            m = L.mlp_block(p["mlp"], hn, cfg.mlp_activation)
+        return hh + m, (ck, cv)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
+                                         cache["v"]))
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(_head(params), h[:, 0, :])
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, {**cache, "k": ks, "v": vs, "pos": pos + 1}
 
 
 def paged_extend_step(params, tokens, cache, cfg):

@@ -282,3 +282,22 @@ def decode_step(params, token, cache, cfg):
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = unembed(params["embed"], h[:, 0, :])
     return logits, {"layers": new_states, "pos": cache["pos"] + 1}
+
+
+def replay_step(params, tokens, cache, count, cfg):
+    """Batched accepted-prefix replay for speculative rewind (see
+    ``models.ssm.replay_step`` — same contract: advance the mLSTM/sLSTM
+    states through ``tokens[:, :count]`` of the padded draft tape, one
+    ``tree_where``-gated scan step per token, so vmapping over slots rewinds
+    each slot to its own accepted count without host-side snapshot+replay."""
+    from repro.models.ssm import tree_where
+
+    def body(carry, xs):
+        t, tok = xs
+        _, nxt = decode_step(params, tok[:, None], carry, cfg)
+        return tree_where(t < count, nxt, carry), None
+
+    T = tokens.shape[1]
+    cache, _ = jax.lax.scan(body, cache,
+                            (jnp.arange(T, dtype=jnp.int32), tokens.T))
+    return cache

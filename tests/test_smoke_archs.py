@@ -57,6 +57,7 @@ def test_full_config_fields(arch):
     """The full (non-reduced) config matches the assignment exactly."""
     cfg = get_config(arch)
     expected = {
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50288),
         "xlstm-125m": (12, 768, 4, 4, 0, 50304),
         "whisper-small": (12, 768, 12, 12, 3072, 51865),
         "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
@@ -77,3 +78,5 @@ def test_full_config_fields(arch):
         assert (cfg.num_experts, cfg.top_k) == (32, 8)
     if arch == "zamba2-2.7b":
         assert cfg.ssm_state == 64
+    if arch == "mamba2-370m":
+        assert (cfg.ssm_state, cfg.ssm_head_dim) == (128, 64)

@@ -45,8 +45,8 @@ def test_greedy_lossless_different_draft(small):
     assert toks == base                          # greedy spec decode is exact
 
 
-@pytest.mark.parametrize("arch", ["xlstm-125m", "zamba2-2.7b", "whisper-small",
-                                  "olmoe-1b-7b"])
+@pytest.mark.parametrize("arch", ["mamba2-370m", "xlstm-125m", "zamba2-2.7b",
+                                  "whisper-small", "olmoe-1b-7b"])
 def test_greedy_lossless_all_families(arch):
     cfg = get_config(arch).reduced()
     m = Model(cfg)
@@ -58,7 +58,7 @@ def test_greedy_lossless_all_families(arch):
     dec = SpecDecoder(m, m, gamma=3, temperature=0.0)
     toks, stats = dec.generate(params, params, prompt, 10)
     assert toks == base
-    if cfg.family in ("ssm", "hybrid"):
+    if cfg.family in ("ssm", "xlstm", "hybrid"):
         assert stats.replay_passes > 0           # recurrent replay accounted
 
 
