@@ -19,6 +19,19 @@ request with exactly the blocks it touches.  It reports req/s and PEAK KV
 CACHE BYTES for both layouts, asserts token-for-token parity, and asserts
 the paged peak is strictly below dense.
 
+The SHARED-PREFIX arm serves a mix whose prompts share an 80% common
+prefix (the agentic/system-prompt regime): the paged layout's prefix-block
+index maps the shared blocks physically (refcounts + copy-on-write,
+``core/paged_cache.py``), so peak live KV sits several times below dense.
+Reports ``kv_savings_x`` (>= 3x target) plus sharing/CoW counters, and
+asserts token parity.
+
+The OVERCOMMIT arm caps the block pool at HALF the batch's reservations
+(2x overcommit): admission proceeds by preemption-by-swap (victim blocks
+staged to a host buffer and restored bit-for-bit) instead of deferring, so
+every request completes — ``deferred_forever`` must be 0 — at dense token
+parity.
+
 The RECURRENT arm runs mixed-family speculative escalation — mamba2 (ssm)
 and zamba2 (hybrid) drafts against a granite (transformer) cloud — where
 the batched scheduler's rewind is a replayed state select
@@ -156,6 +169,83 @@ def _paged_vs_dense(edge, ep, cloud, cp, csv, rows):
     csv(f"serving_skewed,paged_kv_savings_x,{ratio:.2f}")
 
 
+def _shared_prefix(edge, ep, cloud, cp, csv, rows):
+    """80%-shared-prefix mix: every request carries the same long prefix
+    (block-aligned) plus a short distinct tail.  The paged prefix-block
+    index keeps ONE physical copy of the prefix per pool; dense pays it
+    per slot.  Target: kv_savings_x >= 3 at exact token parity."""
+    v = edge.cfg.vocab_size
+    rng = np.random.default_rng(3)
+    plen = 5 * PROMPT_LEN                       # 80% shared, 20% distinct
+    pref = rng.integers(0, v, (4 * plen) // 5).astype(np.int32)
+    prompts = [np.concatenate([pref,
+                               rng.integers(0, v, plen - pref.size)
+                               .astype(np.int32)])
+               for _ in range(REQUESTS)]
+    arms = {}
+    for layout in ("dense", "paged"):
+        dt, traces, stats = _batched(edge, cloud, ep, cp, prompts, 1.1,
+                                     kv_layout=layout, kv_block_size=8)
+        arms[layout] = (traces, stats)
+        rows.setdefault("shared_prefix", {})[layout] = {
+            "req_s": len(prompts) / dt,
+            "kv_peak_bytes": stats["kv_peak_bytes"],
+        }
+        csv(f"serving_shared_prefix,{layout}_req_s,{len(prompts) / dt:.3f}")
+        csv(f"serving_shared_prefix,{layout}_kv_peak_mb,"
+            f"{stats['kv_peak_bytes'] / 1e6:.3f}")
+    (d_tr, d_stats), (p_tr, p_stats) = arms["dense"], arms["paged"]
+    assert all(dt.tokens == pt.tokens for dt, pt in zip(d_tr, p_tr)), \
+        "prefix sharing diverged from the dense parity oracle"
+    ratio = d_stats["kv_peak_bytes"] / p_stats["kv_peak_bytes"]
+    rows["shared_prefix"]["kv_savings_x"] = ratio
+    rows["shared_prefix"]["prefix_hits"] = p_stats["kv_prefix_hits"]
+    rows["shared_prefix"]["shared_blocks"] = p_stats["kv_shared_blocks"]
+    rows["shared_prefix"]["cow_forks"] = p_stats["kv_cow_forks"]
+    csv(f"serving_shared_prefix,kv_savings_x,{ratio:.2f}")
+    csv(f"serving_shared_prefix,shared_blocks,{p_stats['kv_shared_blocks']}")
+
+
+def _overcommit(edge, ep, cloud, cp, csv, rows):
+    """2x-overcommitted pool: kv_blocks holds HALF the batch's worst-case
+    reservations.  Preemption-by-swap must complete every request (zero
+    permanent deferrals) at dense token parity."""
+    v = edge.cfg.vocab_size
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, v, PROMPT_LEN).astype(np.int32)
+               for _ in range(REQUESTS)]
+    bs = 8
+    per_req = -(-(PROMPT_LEN - 1 + MAX_NEW) // bs)
+    kv_blocks = (BATCH * per_req) // 2 + 1      # half the full residency
+    dt_d, d_tr, _ = _batched(edge, cloud, ep, cp, prompts, 1.1,
+                             kv_layout="dense")
+    # short ticks keep several part-done requests resident, so admission
+    # pressure manifests as preemption rather than same-tick turnover
+    dt_p, p_tr, stats = _batched(edge, cloud, ep, cp, prompts, 1.1,
+                                 kv_layout="paged", kv_block_size=bs,
+                                 kv_blocks=kv_blocks, tick_tokens=4)
+    assert all(dt.tokens == pt.tokens for dt, pt in zip(d_tr, p_tr)), \
+        "preemption-by-swap diverged from the dense parity oracle"
+    deferred_forever = len(prompts) - len(p_tr)
+    rows["overcommit"] = {
+        "kv_blocks": kv_blocks,
+        "full_residency_blocks": BATCH * per_req,
+        "completed": len(p_tr),
+        "deferred_forever": deferred_forever,
+        "preemptions": stats["preemptions"],
+        "swaps": stats["kv_swaps"],
+        "kv_blocks_peak": stats["kv_blocks_peak"],
+        "req_s": len(prompts) / dt_p,
+        "dense_req_s": len(prompts) / dt_d,
+    }
+    assert deferred_forever == 0
+    assert stats["preemptions"] > 0, \
+        "overcommit arm exerted no pool pressure (preemption never fired)"
+    csv(f"serving_overcommit,deferred_forever,{deferred_forever}")
+    csv(f"serving_overcommit,preemptions,{stats['preemptions']}")
+    csv(f"serving_overcommit,paged_req_s,{len(prompts) / dt_p:.3f}")
+
+
 def _recurrent_mix(cloud, cp, csv, rows):
     """Mixed-family batched speculation: recurrent drafts (mamba2 ssm +
     zamba2 hybrid) against the transformer cloud, every request escalating
@@ -210,6 +300,8 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
         if not smoke:
             _scheduler_regimes(edge, ep, cloud, cp, prompts, csv, rows)
         _paged_vs_dense(edge, ep, cloud, cp, csv, rows)
+        _shared_prefix(edge, ep, cloud, cp, csv, rows)
+        _overcommit(edge, ep, cloud, cp, csv, rows)
         _recurrent_mix(cloud, cp, csv, rows)
     finally:
         REQUESTS, MAX_NEW, BATCH = saved
@@ -222,8 +314,9 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny CI config: paged-vs-dense + recurrent arms "
-                         "only")
+                    help="tiny CI config: paged-vs-dense, shared-prefix, "
+                         "overcommit and recurrent arms (skips the slow "
+                         "per-request scheduler regimes)")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="JSON results path ('' to skip)")
     args = ap.parse_args()

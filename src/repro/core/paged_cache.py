@@ -15,6 +15,12 @@ module is the memory half of the fix — the vLLM-style block pool:
     decode time (one tick's worth at a time), and freed at retirement —
     per-slot capacity is decoupled from the batch's worst request.
 
+Blocks are REFCOUNTED: slots whose prompts share a block-aligned prefix map
+the shared prefix onto the same physical blocks (``share``), and the first
+divergent write forks a private copy (``fork`` — copy-on-write).  ``used``
+counts physical blocks, so sharing shows up directly in ``peak_used`` and
+the benchmark's kv_savings number.
+
 Block 0 is the TRAP block: it is never allocated, and every unused table
 entry points at it.  Retired slots keep garbage-decoding behind the
 scheduler's ``active`` mask until re-admission; redirecting their table
@@ -22,11 +28,13 @@ rows to the trap confines those masked writes so freed blocks can be
 reallocated immediately without corruption.
 
 ``BlockPool`` is the host-side allocator (pure Python bookkeeping — block
-ids only, no device arrays); ``write_pool_blocks`` is the jitted scatter
-that lands a prefilled prompt's K/V blocks in the pool.
+ids only, no device arrays); ``write_pool_blocks`` / ``copy_pool_blocks``
+are the jitted scatters that land a prefilled prompt's K/V blocks in the
+pool and execute copy-on-write forks.
 """
 from __future__ import annotations
 
+import heapq
 from typing import Any, Dict, List
 
 import jax
@@ -46,8 +54,13 @@ class BlockPool:
 
     Tracks only block IDS — the device arrays live in the scheduler's
     cache pytree.  Block 0 (``TRAP_BLOCK``) is reserved and never handed
-    out.  ``peak_used`` is the high-water mark of live blocks, which the
-    benchmark converts to peak cache bytes.
+    out.  ``peak_used`` is the high-water mark of live PHYSICAL blocks
+    (a block shared by k owners counts once), which the benchmark converts
+    to peak cache bytes.
+
+    The free list is a min-heap, so the lowest free ids are handed out
+    first no matter how allocations and frees interleave — deterministic
+    block layouts in tests survive retire/admit churn.
     """
 
     def __init__(self, num_blocks: int, block_size: int):
@@ -58,9 +71,11 @@ class BlockPool:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
         self.num_blocks = num_blocks
         self.block_size = block_size
-        # stack: low ids handed out first (deterministic layouts in tests)
-        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        # min-heap: low ids handed out first (deterministic layouts)
+        self._free: List[int] = list(range(1, num_blocks))
+        heapq.heapify(self._free)
         self._owned: Dict[Any, List[int]] = {}
+        self._refs: Dict[int, int] = {}
         self.peak_used = 0
 
     # ------------------------------------------------------------ queries
@@ -77,17 +92,22 @@ class BlockPool:
     def owned(self, owner) -> List[int]:
         return list(self._owned.get(owner, ()))
 
+    def refcount(self, blk: int) -> int:
+        return self._refs.get(blk, 0)
+
     # ------------------------------------------------------------ alloc
     def alloc(self, owner, n_blocks: int) -> List[int]:
         """Take ``n_blocks`` for ``owner``; raises when the pool is
-        exhausted (the scheduler checks ``can_alloc`` first and defers
-        admission instead)."""
+        exhausted (the scheduler checks ``can_alloc`` first and defers or
+        preempts instead)."""
         if n_blocks > len(self._free):
             raise RuntimeError(
                 f"KV block pool exhausted: want {n_blocks}, have "
                 f"{len(self._free)} free of {self.num_blocks - 1} "
                 f"(raise --kv-blocks or shrink the batch)")
-        got = [self._free.pop() for _ in range(n_blocks)]
+        got = [heapq.heappop(self._free) for _ in range(n_blocks)]
+        for blk in got:
+            self._refs[blk] = 1
         self._owned.setdefault(owner, []).extend(got)
         self.peak_used = max(self.peak_used, self.used)
         return got
@@ -101,10 +121,53 @@ class BlockPool:
             return []
         return self.alloc(owner, need)
 
-    def free(self, owner):
-        """Return all of ``owner``'s blocks to the pool (idempotent)."""
+    # ------------------------------------------------------------ sharing
+    def share(self, owner, blocks: List[int]) -> None:
+        """Map ``blocks`` (another owner's live prefix) into ``owner``'s
+        logical block list, bumping each refcount — no physical
+        allocation.  ``owner``'s list must currently be empty or end
+        exactly where ``blocks`` continue (prefixes are shared front-first
+        at admission)."""
+        for blk in blocks:
+            if self._refs.get(blk, 0) < 1:
+                raise RuntimeError(f"cannot share dead block {blk}")
+            self._refs[blk] += 1
+        self._owned.setdefault(owner, []).extend(blocks)
+
+    def fork(self, owner, blk: int) -> int:
+        """Copy-on-write split: give ``owner`` a fresh private block in
+        place of shared ``blk`` (the caller copies the device contents).
+        Returns the new block id; ``blk`` keeps its remaining owners."""
+        mine = self._owned.get(owner, [])
+        i = mine.index(blk)          # raises if owner doesn't hold blk
+        if self._refs.get(blk, 0) <= 1:
+            return blk               # already private: nothing to split
+        [new] = self.alloc(owner, 1)
+        self._owned[owner].pop()     # alloc appended; splice in place
+        mine[i] = new
+        self._deref(blk)
+        return new
+
+    # ------------------------------------------------------------ free
+    def _deref(self, blk: int) -> bool:
+        """Drop one reference; True if the block died (returned to the
+        free heap)."""
+        self._refs[blk] -= 1
+        if self._refs[blk] > 0:
+            return False
+        del self._refs[blk]
+        heapq.heappush(self._free, blk)
+        return True
+
+    def free(self, owner) -> List[int]:
+        """Release all of ``owner``'s references (idempotent).  Returns
+        the ids that actually DIED (refcount hit zero) so callers can
+        invalidate host-side indexes over their contents."""
+        dead = []
         for blk in self._owned.pop(owner, ()):
-            self._free.append(blk)
+            if self._deref(blk):
+                dead.append(blk)
+        return dead
 
 
 # ---------------------------------------------------------------- device
@@ -118,6 +181,21 @@ def write_pool_blocks(k_pool, v_pool, block_ids, k_blocks, v_blocks):
     """
     return (k_pool.at[:, block_ids].set(k_blocks.astype(k_pool.dtype)),
             v_pool.at[:, block_ids].set(v_blocks.astype(v_pool.dtype)))
+
+
+@jax.jit
+def copy_pool_blocks(k_pool, v_pool, src_ids, dst_ids):
+    """Copy-on-write fork: duplicate blocks ``src_ids`` into ``dst_ids``
+    (both (n,) int32) in one gather+scatter per side."""
+    return (k_pool.at[:, dst_ids].set(k_pool[:, src_ids]),
+            v_pool.at[:, dst_ids].set(v_pool[:, src_ids]))
+
+
+@jax.jit
+def read_pool_blocks(k_pool, v_pool, block_ids):
+    """Gather blocks ``block_ids`` (n,) int32 out of the pool — the device
+    half of swap-out (the caller stages the result to host memory)."""
+    return k_pool[:, block_ids], v_pool[:, block_ids]
 
 
 def prompt_cache_to_blocks(cache, block_size: int):

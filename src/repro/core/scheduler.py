@@ -31,7 +31,29 @@ tokens) but executes them slot-based and batched:
     admitted into the freed slots.  Identical prompts admitted in the same
     tick (or while a matching request is still in flight) are COALESCED:
     one leader decodes, the rest are served from its result through the
-    semantic cache — restoring the sequential engine's behavior.
+    semantic cache — restoring the sequential engine's behavior.  On the
+    paged layout, admission also consults the ``PagedKV`` prefix-block
+    index: requests sharing a block-aligned prompt prefix (twins included,
+    whatever tick they arrive in) map the shared blocks physically, with
+    copy-on-write at first divergence.
+  * PREEMPTION-BY-SWAP (paged layout): when the block pool cannot back a
+    waiting request, the scheduler swaps out a victim slot — its KV blocks
+    staged to a host buffer (``PagedKV.swap_out``) — admits the waiter,
+    and resumes the victim later (``swap_in``, bit-identical content, so
+    resumed decodes emit the same tokens).  ANTI-STARVATION POLICY:
+    admission stays strict-arrival-order (swapped victims, which predate
+    everything queued, resume before new admissions); the victim is the
+    occupied slot with the MOST remaining decode steps (tie: youngest
+    rid), i.e. the one that would hold its reservation longest; slots
+    admitted or resumed in the current wave are never victims (no
+    same-tick thrash), nor are slots whose swap-in restore could not fit
+    the pool; and a request too large for even an empty pool (its live
+    shareable prefix counted) fails fast instead of preempting the whole
+    batch.  Every preemption
+    admits the head waiter, the queue is finite per drain, and a swapped
+    victim re-enters at the head of admission order — so no request can
+    starve and no permanent deferral exists (the old defer-forever path is
+    gone).
   * ESCALATION runs GROUPED: all slots retired-uncertain in a tick share
     one batched cloud decode ("cloud"), one batched skeleton + batched edge
     completion ("skeleton"), or one ``BatchedSpecDecoder`` group
@@ -152,6 +174,8 @@ class BatchedEngine:
         self._leaders: List[Tuple[np.ndarray, int]] = []
         self._followers: Dict[int, List[_Request]] = {}
         self._kv_stats: Dict[str, Any] = {}
+        self._swapped: Dict[int, dict] = {}
+        self._preempts = 0
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new: int) -> int:
@@ -200,12 +224,38 @@ class BatchedEngine:
         rng = jax.random.PRNGKey(self.seed)
         results: Dict[int, RequestTrace] = {}
         self._leaders, self._followers = [], {}
+        self._swapped: Dict[int, dict] = {}     # rid -> host swap handle
+        self._preempts = 0
 
-        while self._queue or any(s.req is not None for s in slots):
-            # ---- admit queued requests into free slots (batched cache probe)
+        while self._queue or self._swapped or any(s.req is not None
+                                                  for s in slots):
             free = [b for b in range(B) if slots[b].req is None]
+            wave: set = set()       # slots admitted/resumed this wave
+            stalled = False
+            # ---- resume swapped-out victims first: every victim predates
+            # everything still queued, so strict arrival order = swapped
+            # before queue (see the anti-starvation policy above)
+            while self._swapped and free:
+                rid0 = min(self._swapped)
+                b = free[0]
+                if not state.swap_in(b, self._swapped[rid0]["kv"]):
+                    stalled = True  # pool still tight; retry next tick
+                    break
+                h = self._swapped.pop(rid0)
+                free.pop(0)
+                wave.add(b)
+                slots[b] = h["slot"]
+                tok = tok.at[b, 0, 0].set(h["tok"])
+                steps = steps.at[b].set(h["steps"])
+                unc = unc.at[b].set(h["unc"])
+            # ---- admit queued requests into free slots (batched cache
+            # probe).  A stalled swap-in blocks NEW admissions entirely:
+            # the victim predates every queued request, so letting
+            # newcomers consume the blocks it is waiting for would break
+            # strict arrival order (it resumes within a bounded number of
+            # ticks as in-flight slots retire).
             deferred = False
-            if free and self._queue:
+            if free and self._queue and not stalled:
                 cands = [self._queue.popleft()
                          for _ in range(min(len(free), len(self._queue)))]
                 hits: List[Optional[Any]] = [None] * len(cands)
@@ -231,15 +281,52 @@ class BatchedEngine:
                             self.cache.hits += 1
                             continue
                     b = free.pop(0)
-                    if not state.admit(b, r.prompt,
-                                       r.prompt.size - 1 + r.max_new):
-                        # pool full: defer this and the rest, keep order
+                    need = r.prompt.size - 1 + r.max_new
+                    ok = state.admit(b, r.prompt, need)
+                    if not ok and not state.fits_empty(need):
+                        # private footprint exceeds the whole pool: only
+                        # live prefix sharing can admit this request, and
+                        # preemption could evict the very blocks that
+                        # sharing needs — defer instead of swapping, and
+                        # fail fast once even sharing cannot cover it
+                        if not state.fits_empty(need, r.prompt):
+                            raise RuntimeError(
+                                f"request {r.rid} needs more KV blocks "
+                                "than the whole pool; raise kv_blocks")
+                    else:
+                        while not ok:
+                            # pool full: preempt-by-swap — swap out the
+                            # victim holding its reservation longest,
+                            # retry until admitted or out of victims
+                            v = self._pick_victim(state, slots, steps,
+                                                  wave)
+                            if v is None:
+                                break
+                            vreq = slots[v].req
+                            self._swapped[vreq.rid] = {
+                                "kv": state.swap_out(v),
+                                "slot": slots[v],
+                                "tok": int(np.asarray(tok[v, 0, 0])),
+                                "steps": int(np.asarray(steps[v])),
+                                "unc": float(np.asarray(unc[v])),
+                            }
+                            slots[v] = _Slot()
+                            steps = steps.at[v].set(0)
+                            free.append(v)
+                            self._preempts += 1
+                            ok = state.admit(b, r.prompt, need)
+                    if not ok:
+                        # every preemptable victim is out and the pool is
+                        # still too tight: defer this and the rest, keep
+                        # arrival order (in-flight retirements will free
+                        # blocks within a bounded number of ticks)
                         free.insert(0, b)
                         for rr in reversed(cands[i:]):
                             self._queue.appendleft(rr)
                         deferred = True
                         break
                     slots[b] = _Slot(req=r)
+                    wave.add(b)
                     bs.append(b)
                     lasts.append([[int(r.prompt[-1])]])
                     news.append(r.max_new)
@@ -254,7 +341,7 @@ class BatchedEngine:
 
             occupied = [b for b in range(B) if slots[b].req is not None]
             if not occupied:
-                if deferred:
+                if deferred or stalled:
                     raise RuntimeError(
                         "paged KV pool too small for the queued request "
                         "even with an empty batch; raise kv_blocks")
@@ -304,8 +391,28 @@ class BatchedEngine:
 
         self._kv_stats["kv_peak_bytes"] = state.peak_bytes
         self._kv_stats["kv_capacity_bytes"] = state.capacity_bytes
+        self._kv_stats["preemptions"] = self._preempts
         self._kv_stats.update(state.stats())
         return results
+
+    def _pick_victim(self, state, slots, steps, wave) -> Optional[int]:
+        """Preemption victim: the occupied slot with the MOST remaining
+        decode steps (it would hold its block reservation longest), tie
+        broken toward the youngest request.  Slots admitted or resumed in
+        the current wave are exempt — their staged device writes have not
+        flushed yet, and exempting them prevents same-tick swap thrash.
+        Slots whose swap-in restore could never fit the pool (admitted
+        over a prefix larger than their private footprint allows) are
+        exempt too — swapping them would strand their completed work."""
+        steps_h = np.asarray(steps)
+        best = None
+        for b, s in enumerate(slots):
+            if s.req is None or b in wave or not state.swappable(b):
+                continue
+            key = (int(steps_h[b]), s.req.rid)
+            if best is None or key > best[0]:
+                best = (key, b)
+        return None if best is None else best[1]
 
     def serve_batch(self, edge_params, cloud_params, prompts,
                     max_new) -> List[RequestTrace]:

@@ -16,7 +16,10 @@ same slot/tick/escalation machinery:
       - ``DenseKV``    — stacked per-slot caches padded to a common
         ``slot_len`` (the parity oracle).
       - ``PagedKV``    — one shared block pool + per-slot block tables
-        (``core/paged_cache.py``).
+        (``core/paged_cache.py``), with refcounted block-level prefix
+        sharing + copy-on-write (``share_prefix`` / ``cow_split``) and
+        host-buffer swap (``swap_out`` / ``swap_in``) backing the
+        scheduler's preemption path.
       - ``RecurrentState`` — fixed-size recurrent state (ssm/xlstm/hybrid):
         dense stacked storage (there is no sequence axis to page), its own
         class so layout policy stays out of the scheduler.
@@ -38,14 +41,16 @@ same slot/tick/escalation machinery:
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence, Tuple
+import hashlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paged_cache import (BlockPool, blocks_for,
-                                    prompt_cache_to_blocks, write_pool_blocks)
+from repro.core.paged_cache import (BlockPool, blocks_for, copy_pool_blocks,
+                                    prompt_cache_to_blocks, read_pool_blocks,
+                                    write_pool_blocks)
 from repro.core.uncertainty import get_batched_estimator
 
 
@@ -195,6 +200,30 @@ class SequenceState:
     def retire(self, b: int):
         """Release slot ``b``'s capacity."""
 
+    def fits_empty(self, need_tokens: int, prompt=None) -> bool:
+        """True if a request reserving ``need_tokens`` cache entries could
+        EVER be admitted (fits an otherwise-empty pool, or its live
+        shareable prefix covers the overshoot).  Dense layouts always fit;
+        the scheduler uses False to fail fast instead of preempting the
+        whole batch for a hopeless request."""
+        return True
+
+    def swappable(self, b: int) -> bool:
+        """True if slot ``b`` may be chosen as a preemption victim (its
+        ``swap_in`` restore is guaranteed to fit the pool eventually)."""
+        return False
+
+    def swap_out(self, b: int):
+        """Stage slot ``b``'s cache content to host memory and release its
+        device capacity; returns an opaque handle for ``swap_in``.  Only
+        meaningful on layouts whose admission can fail (paged)."""
+        raise NotImplementedError(f"{type(self).__name__} does not swap")
+
+    def swap_in(self, b: int, handle) -> bool:
+        """Restore a swapped-out cache into slot ``b``; False if the pool
+        cannot back it yet (the scheduler retries next tick)."""
+        raise NotImplementedError(f"{type(self).__name__} does not swap")
+
     @property
     def capacity_bytes(self) -> int:
         return sum(x.nbytes for x in jax.tree.leaves(self.caches))
@@ -254,6 +283,24 @@ class PagedKV(SequenceState):
     scatter), per-tick growth lands in ``prepare_tick`` (one table-entry
     scatter).  Retired slots' rows are redirected to the trap block so
     their masked garbage decode cannot corrupt re-allocated blocks.
+
+    PREFIX SHARING: admission consults a host-side prefix-block index
+    (prompt-entry bytes -> live block ids).  A new request whose prompt
+    shares a block-aligned prefix — or is an exact twin — of an in-flight
+    slot's prompt maps those blocks into its own table via refcount bumps
+    (``share_prefix``) instead of re-allocating and re-prefilling them;
+    causal attention makes prefix K/V bit-identical across prompts, so
+    token parity with the dense oracle is exact.  The first divergent
+    decode write into a shared block forks a private copy first
+    (``cow_split`` — copy-on-write), and index entries are invalidated the
+    moment their backing block dies or is mutated.
+
+    SWAP: ``swap_out`` stages a slot's blocks to host memory
+    (``jax.device_get``) and releases them; ``swap_in`` restores the
+    content into freshly allocated blocks bit-for-bit, so a preempted
+    request resumes mid-decode with identical tokens.  Swapped content is
+    re-admitted without re-sharing (a swapped twin pays its own blocks —
+    acceptable, since swap only fires under pool pressure).
     """
 
     layout = "paged"
@@ -276,35 +323,211 @@ class PagedKV(SequenceState):
         self._commit = [0] * batch  # blocks reserved for future growth
         self._stale: set = set()    # retired slots awaiting a trap row
         self._pend: List[Tuple[int, np.ndarray, int]] = []  # (b, row, pos)
+        # prefix-block index: prompt-entry bytes -> block ids holding them
+        self._prefix_index: Dict[bytes, Tuple[int, ...]] = {}
+        self._indexed: set = set()  # blocks referenced by any index entry
+        # CoW reservations: shared tail block -> slots that reserved one
+        # future fork block for it (their _commit carries the headroom)
+        self._cow_rsv: Dict[int, List[int]] = {}
+        self._prefix_hits = 0       # admissions that shared >= 1 block
+        self._shared_blocks = 0     # physical allocations avoided
+        self._cow_forks = 0
+        self._swaps = 0
 
+    # ------------------------------------------------------------ prefix
+    def _prefix_keys(self, entries: np.ndarray) -> List[bytes]:
+        """Chained per-block digests: ``key[j]`` identifies the token
+        prefix covering blocks 0..j (``min((j+1)*bs, E)`` entries), as
+        ``blake2b(key[j-1] || block_j_bytes)``.  One O(E) pass yields
+        every prefix key as a 16-byte digest — raw prefix byte-strings as
+        keys would cost O(E^2/bs) hashing and index memory per prompt,
+        quadratic on the admission path for long prompts."""
+        E, bs = entries.size, self.block_size
+        keys, prev = [], b""
+        for j in range(blocks_for(E, bs)):
+            prev = hashlib.blake2b(
+                prev + entries[j * bs:min((j + 1) * bs, E)].tobytes(),
+                digest_size=16).digest()
+            keys.append(prev)
+        return keys
+
+    def _lookup_prefix(self, entries: np.ndarray) -> Tuple[int, List[int]]:
+        """Longest indexed prefix of ``entries``: the exact entry count
+        first (twin — shares the partial tail block too), then
+        block-aligned lengths descending.  Returns (entries matched,
+        block ids)."""
+        E, bs = entries.size, self.block_size
+        keys = self._prefix_keys(entries)
+        for j in range(len(keys) - 1, -1, -1):
+            got = self._prefix_index.get(keys[j])
+            if got is not None:
+                return min((j + 1) * bs, E), list(got)
+        return 0, []
+
+    def _register(self, entries: np.ndarray, blocks: List[int]):
+        """Index every block-aligned prefix of ``entries`` (plus the full
+        partial-tail prefix) under the blocks that hold it.  First
+        registrant wins — twins share the original's blocks."""
+        for j, key in enumerate(self._prefix_keys(entries)):
+            self._prefix_index.setdefault(key, tuple(blocks[:j + 1]))
+        self._indexed.update(blocks)
+
+    def _reindex(self):
+        self._indexed = {blk for v in self._prefix_index.values()
+                         for blk in v}
+
+    def _purge_blocks(self, dead):
+        """Drop index entries backed by any block that died."""
+        dd = set(dead) & self._indexed
+        if dd:
+            self._prefix_index = {k: v for k, v in self._prefix_index.items()
+                                  if not dd.intersection(v)}
+            self._reindex()
+
+    def _purge_written(self, blk: int):
+        """Drop index entries referencing ``blk`` — its content is about
+        to be mutated by a decode write.  O(1) when the block is not
+        indexed (the steady state after the first write)."""
+        if blk in self._indexed:
+            self._prefix_index = {k: v for k, v in self._prefix_index.items()
+                                  if blk not in v}
+            self._reindex()
+
+    def share_prefix(self, b: int, entries: np.ndarray,
+                     _peek: Optional[Tuple[int, List[int]]] = None) -> int:
+        """Map the longest indexed prefix of ``entries`` into slot ``b``
+        (refcount bumps, no allocation), registering a CoW reservation
+        when the shared tail is partial (slot ``b``'s ``_commit`` must
+        already carry that one-block headroom).  Returns the number of
+        cache entries covered (0 = no match; caller prefills everything).
+        ``_peek`` lets ``admit`` reuse its sizing lookup instead of
+        re-hashing every prefix slice."""
+        m, shared = _peek if _peek is not None else \
+            self._lookup_prefix(entries)
+        if shared:
+            self.pool.share(b, shared)
+            if m % self.block_size:
+                self._cow_rsv.setdefault(shared[-1], []).append(b)
+            self._prefix_hits += 1
+            self._shared_blocks += len(shared)
+        return m
+
+    def _drop_cow_rsv(self, b: int) -> int:
+        """Remove slot ``b``'s outstanding CoW reservations (its commit
+        headroom leaves with it); returns how many were dropped."""
+        n = 0
+        for blk in list(self._cow_rsv):
+            lst = self._cow_rsv[blk]
+            while b in lst:
+                lst.remove(b)
+                n += 1
+            if not lst:
+                del self._cow_rsv[blk]
+        return n
+
+    def cow_split(self, b: int):
+        """Make slot ``b``'s next decode-write target block private.
+
+        The only pre-existing block a decode write can land in is the
+        partial tail block at ``_len // block_size`` (growth allocates the
+        rest fresh).  If it is shared (refcount > 1) fork a private copy —
+        copy-on-write at first divergence; if it is exclusively owned,
+        just invalidate any index entries over its (about to change)
+        content.  Returns (src, dst, table_index) for the staged device
+        copy, or None.
+
+        The fork block is drawn from a SHARER's reservation, not
+        necessarily the forking slot's: a tail shared by k sharers forks
+        exactly k-1 times (the last writer keeps the original in place),
+        and it is the k sharers — never the original registrant — whose
+        admissions reserved the headroom.  Whichever slot forks first
+        consumes one of those reservations, keeping ``free >=
+        sum(_commit)`` exact however retire/preempt interleave."""
+        E, bs = self._len[b], self.block_size
+        if E % bs == 0:
+            return None             # next write opens a fresh block
+        i0 = E // bs
+        blk = self.pool.owned(b)[i0]
+        if self.pool.refcount(blk) > 1:
+            new = self.pool.fork(b, blk)
+            rsv = self._cow_rsv.get(blk)
+            if rsv:
+                s = rsv.pop()
+                self._commit[s] = max(self._commit[s] - 1, 0)
+                if not rsv:
+                    del self._cow_rsv[blk]
+            self._cow_forks += 1
+            return blk, new, i0
+        self._purge_written(blk)
+        return None
+
+    # ------------------------------------------------------------ admit
     def admit(self, b: int, prompt, need_tokens: int) -> bool:
         """Allocate the prompt's blocks and stage the prefill; returns
-        False (admission deferred) when the pool cannot back the request.
+        False (admission deferred/preempted) when the pool cannot back the
+        request.
 
         Admission is reservation-based: the request's WORST-CASE block need
-        (``need_tokens`` = prompt + budget [+ overdraft]) is committed up
-        front so on-demand growth can never fail mid-flight, but blocks are
-        only physically allocated as decode reaches them — the reservation
-        is per-request, not the batch maximum, which is where the paged
-        layout beats the dense slabs."""
-        S = int(np.asarray(prompt).size)
-        nb = self.pool.blocks_for(S - 1)
+        (``need_tokens`` = prompt + budget [+ overdraft], plus one block if
+        a shared partial tail will need a copy-on-write fork) is committed
+        up front so on-demand growth can never fail mid-flight, but blocks
+        are only physically allocated as decode reaches them — the
+        reservation is per-request, not the batch maximum, which is where
+        the paged layout beats the dense slabs.  Shared prefix blocks
+        count against nobody's reservation: they are live already."""
+        prompt = np.asarray(prompt, np.int32)
+        entries = prompt[:-1]
+        E = entries.size
+        nb = self.pool.blocks_for(E)
         total = self.pool.blocks_for(need_tokens)
-        if not self.pool.can_alloc(total + sum(self._commit)):
+        m, shared = self._lookup_prefix(entries)        # sizing peek
+        own_new = nb - len(shared)
+        cow_extra = 1 if shared and (m % self.block_size) else 0
+        if not self.pool.can_alloc(own_new + (total - nb) + cow_extra
+                                   + sum(self._commit)):
             return False
-        blocks = self.pool.alloc(b, nb)
-        self._commit[b] = total - nb
-        _, c1 = self.lane.prefill(self.params, prompt, nb * self.block_size)
-        kb, vb = prompt_cache_to_blocks(c1, self.block_size)
-        self.caches["k"], self.caches["v"] = write_pool_blocks(
-            self.caches["k"], self.caches["v"],
-            jnp.asarray(blocks, jnp.int32), kb, vb)
+        ns = 0
+        if shared:
+            self.share_prefix(b, entries, _peek=(m, shared))
+            ns = len(shared)
+        blocks = self.pool.alloc(b, own_new) if own_new else []
+        self._commit[b] = (total - nb) + cow_extra
+        if own_new:                 # prefill; write only the unshared tail
+            _, c1 = self.lane.prefill(self.params, prompt,
+                                      nb * self.block_size)
+            kb, vb = prompt_cache_to_blocks(c1, self.block_size)
+            self.caches["k"], self.caches["v"] = write_pool_blocks(
+                self.caches["k"], self.caches["v"],
+                jnp.asarray(blocks, jnp.int32), kb[:, ns:], vb[:, ns:])
+        mine = self.pool.owned(b)
         row = np.zeros((self.max_blocks,), np.int32)    # pad = trap block
-        row[:nb] = blocks
-        self._pend.append((b, row, S - 1))
-        self._len[b] = S - 1
+        row[:len(mine)] = mine
+        self._pend.append((b, row, E))
+        self._len[b] = E
         self._stale.discard(b)
+        self._register(entries, mine)
         return True
+
+    def fits_empty(self, need_tokens: int, prompt=None) -> bool:
+        total = self.pool.blocks_for(need_tokens)
+        if total <= self.pool.num_blocks - 1:
+            return True
+        if prompt is not None:      # admissible via currently-live sharing?
+            m, shared = self._lookup_prefix(
+                np.asarray(prompt, np.int32)[:-1])
+            cow = 1 if shared and (m % self.block_size) else 0
+            if total - len(shared) + cow <= self.pool.num_blocks - 1:
+                return True
+        return False
+
+    def swappable(self, b: int) -> bool:
+        """A victim is only worth swapping if its restore is guaranteed:
+        ``swap_in`` re-allocates every LOGICAL block privately (shared
+        prefixes are not re-shared), so a slot admitted over a prefix
+        larger than the pool could never come back."""
+        rsv = sum(b in lst for lst in self._cow_rsv.values())
+        return (len(self.pool.owned(b)) + self._commit[b] - rsv
+                <= self.pool.num_blocks - 1)
 
     def flush(self):
         if not (self._pend or self._stale):
@@ -329,10 +552,24 @@ class PagedKV(SequenceState):
         """Grow every occupied slot to cover this tick's REAL decode steps
         (``min(steps_left, n)``); the masked garbage tail past a slot's
         budget clamps into the trap.  Growth draws down the slot's
-        admission-time reservation, so it cannot fail."""
+        admission-time reservation, so it cannot fail.  Before growing,
+        ``cow_split`` forks any shared partial tail block the tick is
+        about to write into (one batched device copy for the wave)."""
         upd_b, upd_i, upd_blk = [], [], []
+        cow_src, cow_dst = [], []
         for b in occupied:
-            target = self._len[b] + min(int(steps_h[b]), n)
+            steps = min(int(steps_h[b]), n)
+            if steps <= 0:
+                continue
+            cow = self.cow_split(b)
+            if cow is not None:
+                src, dst, i0 = cow
+                cow_src.append(src)
+                cow_dst.append(dst)
+                upd_b.append(b)
+                upd_i.append(i0)
+                upd_blk.append(dst)
+            target = self._len[b] + steps
             new = self.pool.grow_to(b, target)
             self._commit[b] = max(self._commit[b] - len(new), 0)
             base = len(self.pool.owned(b)) - len(new)
@@ -341,6 +578,11 @@ class PagedKV(SequenceState):
                 upd_i.append(base + j)
                 upd_blk.append(blk)
             self._len[b] = target
+        if cow_src:
+            self.caches["k"], self.caches["v"] = copy_pool_blocks(
+                self.caches["k"], self.caches["v"],
+                jnp.asarray(cow_src, jnp.int32),
+                jnp.asarray(cow_dst, jnp.int32))
         if upd_b:
             self.caches["table"] = self.caches["table"].at[
                 jnp.asarray(upd_b, jnp.int32),
@@ -348,15 +590,58 @@ class PagedKV(SequenceState):
                 jnp.asarray(upd_blk, jnp.int32))
 
     def retire(self, b: int):
-        self.pool.free(b)
+        self._drop_cow_rsv(b)
+        self._purge_blocks(self.pool.free(b))
         self._len[b] = 0
         self._commit[b] = 0
         self._stale.add(b)
 
+    # ------------------------------------------------------------ swap
+    def swap_out(self, b: int) -> dict:
+        """Stage slot ``b``'s blocks to host memory and free them.  The
+        handle is self-contained (content, entry count, outstanding
+        reservation): ``swap_in`` restores it bit-for-bit, so the resumed
+        decode emits exactly the tokens the uninterrupted run would.  Any
+        unconsumed CoW reservation is shed — the restored copy is fully
+        private, so no fork can ever hit it."""
+        ids = self.pool.owned(b)
+        k, v = read_pool_blocks(self.caches["k"], self.caches["v"],
+                                jnp.asarray(ids, jnp.int32))
+        commit = max(self._commit[b] - self._drop_cow_rsv(b), 0)
+        handle = {"k": jax.device_get(k), "v": jax.device_get(v),
+                  "len": self._len[b], "commit": commit}
+        self._purge_blocks(self.pool.free(b))
+        self._len[b] = 0
+        self._commit[b] = 0
+        self._stale.add(b)
+        self._swaps += 1
+        return handle
+
+    def swap_in(self, b: int, handle: dict) -> bool:
+        """Restore a swapped-out slot into ``b``; False when the pool
+        cannot back its blocks + outstanding reservation yet."""
+        nb = handle["k"].shape[1]
+        if not self.pool.can_alloc(nb + handle["commit"]
+                                   + sum(self._commit)):
+            return False
+        blocks = self.pool.alloc(b, nb)
+        self._commit[b] = handle["commit"]
+        self.caches["k"], self.caches["v"] = write_pool_blocks(
+            self.caches["k"], self.caches["v"],
+            jnp.asarray(blocks, jnp.int32),
+            jnp.asarray(handle["k"]), jnp.asarray(handle["v"]))
+        row = np.zeros((self.max_blocks,), np.int32)
+        row[:nb] = blocks
+        self._pend.append((b, row, handle["len"]))
+        self._len[b] = handle["len"]
+        self._stale.discard(b)
+        return True
+
     @property
     def peak_bytes(self) -> int:
         """High-water mark of LIVE block bytes — what a right-sized pool
-        would have to hold (the benchmark's headline number)."""
+        would have to hold (the benchmark's headline number).  Shared
+        blocks count once: prefix sharing lowers this directly."""
         return self.pool.peak_used * self._block_bytes
 
     @property
@@ -365,7 +650,11 @@ class PagedKV(SequenceState):
 
     def stats(self) -> dict:
         return {"kv_blocks_peak": self.pool.peak_used,
-                "kv_block_size": self.block_size}
+                "kv_block_size": self.block_size,
+                "kv_prefix_hits": self._prefix_hits,
+                "kv_shared_blocks": self._shared_blocks,
+                "kv_cow_forks": self._cow_forks,
+                "kv_swaps": self._swaps}
 
 
 # ---------------------------------------------------------------- lane

@@ -110,7 +110,8 @@ def decode_attention(q, k, v, length, *, window: int = 0, bs: int = 512,
 
 # ---------------------------------------------------------------- paged
 def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, bs: int, ns: int, scale: float):
+                  acc_ref, m_ref, l_ref, *, bs: int, ns: int, window: int,
+                  scale: float):
     b = pl.program_id(0)
     isb = pl.program_id(2)
 
@@ -126,8 +127,15 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     s = (q @ k.T) * scale                            # (G, bs)
 
     length = len_ref[b]
-    k_pos = isb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
-    s = jnp.where(k_pos < length, s, NEG)
+    # windowed variant: the grid only walks the trailing-window blocks,
+    # starting at logical block sb = max(length - window, 0) // bs
+    sb = jnp.maximum(length - window, 0) // bs if window else 0
+    k_pos = (sb + isb) * bs + \
+        jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    mask = k_pos < length
+    if window:
+        mask = mask & (k_pos >= length - window)
+    s = jnp.where(mask, s, NEG)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -144,9 +152,9 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_decode_attention(q, k_pool, v_pool, table, length, *,
-                           interpret: bool = False):
+                           window: int = 0, interpret: bool = False):
     """Decode attention through a paged KV pool.
 
     q: (B, Kv, G, hd); k_pool/v_pool: (NB, bs, Kv, hd) — the shared block
@@ -160,6 +168,15 @@ def paged_decode_attention(q, k_pool, v_pool, table, length, *,
     dereference ``table[b, i]`` so each grid step DMAs exactly the one
     block it needs — the paged gather costs no extra HBM traffic over the
     dense kernel.
+
+    With ``window`` > 0 only the trailing ``window`` cache positions are
+    attended (sliding-window decode): the grid's sequence axis shrinks to
+    the few blocks that can overlap the window, and the index maps offset
+    the block-table lookup by the per-sequence start block
+    ``max(length - window, 0) // bs`` — long-context sliding-window
+    serving reads O(window) bytes per step, not O(length).  Blocks the
+    clamp pushes past the table edge read a masked (all-NEG) garbage
+    block, contributing exact zeros to the online softmax.
     """
     B, Kv, G, hd = q.shape
     NB, bs, Kv2, hd2 = k_pool.shape
@@ -167,17 +184,25 @@ def paged_decode_attention(q, k_pool, v_pool, table, length, *,
     MB = table.shape[1]
     scale = 1.0 / np.sqrt(hd)
 
-    kern = functools.partial(_paged_kernel, bs=bs, ns=MB, scale=scale)
+    # sequence-axis grid: every block (full attention) or just the blocks
+    # a trailing window can straddle
+    ns = MB if not window else min(MB, (window + bs - 2) // bs + 1)
+
+    def blk(b, g, i, tbl, ln):
+        if window:
+            i = jnp.minimum(jnp.maximum(ln[b] - window, 0) // bs + i, MB - 1)
+        return (tbl[b, i], 0, g, 0)
+
+    kern = functools.partial(_paged_kernel, bs=bs, ns=ns, window=window,
+                             scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, Kv, MB),
+        grid=(B, Kv, ns),
         in_specs=[
             pl.BlockSpec((1, 1, G, hd),
                          lambda b, g, i, tbl, ln: (b, g, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, g, i, tbl, ln: (tbl[b, i], 0, g, 0)),
-            pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, g, i, tbl, ln: (tbl[b, i], 0, g, 0)),
+            pl.BlockSpec((1, bs, 1, hd), blk),
+            pl.BlockSpec((1, bs, 1, hd), blk),
         ],
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, g, i, tbl, ln: (b, g, 0, 0)),

@@ -31,10 +31,12 @@ def decode_attention(q, k, v, length, *, window=0, bs=512):
     return _decode(q, k, v, length, window=window, bs=bs, interpret=on_cpu())
 
 
-def paged_decode_attention(q, k_pool, v_pool, table, length):
+def paged_decode_attention(q, k_pool, v_pool, table, length, *, window=0):
     """Decode attention through a paged KV pool + block table (the serving
-    scheduler's --kv-layout=paged hot loop on TPU)."""
-    return _paged(q, k_pool, v_pool, table, length, interpret=on_cpu())
+    scheduler's --kv-layout=paged hot loop on TPU).  ``window`` > 0 runs
+    the sliding-window variant (trailing-window blocks only)."""
+    return _paged(q, k_pool, v_pool, table, length, window=window,
+                  interpret=on_cpu())
 
 
 def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,

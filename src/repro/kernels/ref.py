@@ -39,16 +39,19 @@ def decode_attention_ref(q, k, v, length, *, window: int = 0):
     return jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
-def paged_decode_attention_ref(q, k_pool, v_pool, table, length):
+def paged_decode_attention_ref(q, k_pool, v_pool, table, length, *,
+                               window: int = 0):
     """Pure-jnp oracle for the paged decode kernel, and the CPU-CI
     fallback: gather the block table into a contiguous (B, Kv, S, hd)
     cache, then run dense decode attention.  q: (B,Kv,G,hd);
-    k_pool/v_pool: (NB, bs, Kv, hd); table: (B,MB) int32; length: (B,)."""
+    k_pool/v_pool: (NB, bs, Kv, hd); table: (B,MB) int32; length: (B,).
+    ``window`` > 0 restricts attention to the trailing ``window`` valid
+    positions (sliding-window decode), mirroring the kernel's mask."""
     B = q.shape[0]
     Kv, hd = k_pool.shape[2], k_pool.shape[3]
     kk = jnp.moveaxis(k_pool[table].reshape(B, -1, Kv, hd), 2, 1)
     vv = jnp.moveaxis(v_pool[table].reshape(B, -1, Kv, hd), 2, 1)
-    return decode_attention_ref(q, kk, vv, length)
+    return decode_attention_ref(q, kk, vv, length, window=window)
 
 
 def spec_verify_ref(rng, target_logits, draft_logits, draft_tokens, *,

@@ -24,9 +24,15 @@ KV layout (batched scheduler): ``--kv-layout paged`` (the default via
 ``auto`` on KV-cache transformer families) backs the slots with a shared
 pool of ``--kv-block-size``-token blocks and per-slot block tables
 (``core/paged_cache.py``) — per-request cache capacity instead of padding
-every slot to the longest request.  ``--kv-blocks`` caps the pool (admission
-defers when it runs full); the default sizes it to the dense worst case.
-``--kv-layout dense`` keeps the padded-slab layout as the parity oracle.
+every slot to the longest request.  Requests sharing a block-aligned
+prompt prefix (identical system prompts, retried requests) map the shared
+blocks physically — refcounts plus copy-on-write at first divergence — and
+``--kv-blocks`` caps the pool: when it runs full the scheduler preempts
+the slot holding its reservation longest (KV swapped to a host buffer,
+restored bit-for-bit later) instead of deferring forever, so an
+overcommitted pool still completes every request.  The default sizes the
+pool to the dense worst case.  ``--kv-layout dense`` keeps the padded-slab
+layout as the parity oracle.
 """
 from __future__ import annotations
 
@@ -73,8 +79,10 @@ def main():
                     help="tokens per KV block (paged layout)")
     ap.add_argument("--kv-blocks", type=int, default=None,
                     help="total KV pool blocks incl. the trap block (paged "
-                         "layout); admission is deferred when the pool runs "
-                         "full. Default: sized to the dense worst case")
+                         "layout); when the pool runs full the scheduler "
+                         "preempts-by-swap (host-staged KV) so every "
+                         "request still completes. Default: sized to the "
+                         "dense worst case")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -137,6 +145,12 @@ def main():
               f"capacity={stats['kv_capacity_bytes'] / 1e6:.2f}MB"
               + (f" blocks_peak={stats['kv_blocks_peak']}"
                  if "kv_blocks_peak" in stats else ""))
+        if stats.get("kv_prefix_hits") or stats.get("preemptions"):
+            print(f"kv: prefix_hits={stats.get('kv_prefix_hits', 0)} "
+                  f"shared_blocks={stats.get('kv_shared_blocks', 0)} "
+                  f"cow_forks={stats.get('kv_cow_forks', 0)} "
+                  f"preemptions={stats.get('preemptions', 0)} "
+                  f"swaps={stats.get('kv_swaps', 0)}")
 
 
 if __name__ == "__main__":

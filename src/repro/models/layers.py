@@ -300,8 +300,9 @@ def paged_decode_attention_block(p, x, k_pool, v_pool, table, pos, cfg, *,
     index maps, each grid step DMAs exactly one block), CPU runs its
     pure-jnp oracle ``kernels.ref.paged_decode_attention_ref``.  ``backend``
     "kernel" / "ref" force a side (tests); "auto" picks by device.
-    Callers with a sliding window stay on ``paged_extend_attention`` — the
-    kernel masks by ``length`` only.
+    ``cfg.sliding_window`` configs run the kernel's windowed variant
+    (trailing-window blocks only) — the masked full-width gather is no
+    longer on any T=1 decode path.
 
     x: (B, 1, d); k_pool/v_pool: (NB, bs, Kv, hd); table: (B, MB) int32;
     pos: (B,).  Returns (out (B, 1, d), new_k_pool, new_v_pool).
@@ -325,11 +326,13 @@ def paged_decode_attention_block(p, x, k_pool, v_pool, table, pos, cfg, *,
     v_pool = v_pool.at[blk, off].set(v[:, 0].astype(v_pool.dtype))
     qh = q[:, 0].reshape(B, Kv, G, hd)          # head h = kv*G + g, as mha
     length = pos + 1
+    win = cfg.sliding_window
     if backend == "kernel" or (backend == "auto" and not ops.on_cpu()):
-        out = ops.paged_decode_attention(qh, k_pool, v_pool, table, length)
+        out = ops.paged_decode_attention(qh, k_pool, v_pool, table, length,
+                                         window=win)
     else:
         out = ref.paged_decode_attention_ref(qh, k_pool, v_pool, table,
-                                             length)
+                                             length, window=win)
     out = out.reshape(B, 1, H * hd).astype(x.dtype)
     return out @ p["wo"], k_pool, v_pool
 

@@ -185,9 +185,10 @@ class Model:
     def paged_decode_step(self, params, token, cache, *,
                           attn_backend: str = "auto"):
         """One decode step over a paged cache. token (B,1) -> (logits (B,V),
-        cache).  ``attn_backend``: "auto" (TPU: Pallas paged kernel, CPU:
-        jnp oracle), "kernel", "ref", or "gather" (the full-width
-        block-table gather, kept as the windowed/general path)."""
+        cache).  ``attn_backend``: "auto" (TPU: Pallas paged kernel —
+        windowed variant under ``cfg.sliding_window``; CPU: jnp oracle),
+        "kernel", "ref", or "gather" (the full-width block-table gather,
+        kept only as a test oracle — it is off every decode hot path)."""
         self._require_paged()
         return transformer.paged_decode_step(params, token, cache, self.cfg,
                                              attn_backend=attn_backend)

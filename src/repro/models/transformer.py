@@ -147,11 +147,13 @@ def paged_decode_step(params, token, cache, cfg, *, attn_backend: str = "auto"):
     slots: same math, but K/V are read and written through the block table
     so per-sequence capacity is whatever the scheduler allocated.  The
     attention read dispatches per backend (TPU: the Pallas flash-decoding
-    paged kernel; CPU: its pure-jnp oracle) instead of gathering the full
-    block-table width every step; sliding-window configs (and
-    ``attn_backend="gather"``) keep the general T=1 ``paged_extend_step``
-    path, whose mask handles the window."""
-    if attn_backend != "gather" and not cfg.sliding_window:
+    paged kernel — including its windowed variant for
+    ``cfg.sliding_window`` configs; CPU: the pure-jnp oracle) instead of
+    gathering the full block-table width every step.  Only
+    ``attn_backend="gather"`` keeps the general T=1 ``paged_extend_step``
+    path (the parity oracle for tests) — no config falls off the kernel
+    fast path."""
+    if attn_backend != "gather":
         return _paged_decode_step_kernel(params, token, cache, cfg,
                                          attn_backend)
     logits, cache = paged_extend_step(params, token, cache, cfg)

@@ -89,6 +89,46 @@ def test_paged_decode_attention_sweep(B, Kv, G, bs, MB, hd, dtype):
                                np.asarray(o_ref, np.float32), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("window", [4, 8, 11, 16, 48])
+def test_paged_decode_attention_windowed(window):
+    """Windowed paged kernel (trailing-window blocks only, scalar-
+    prefetched start block) vs the windowed oracle — unaligned windows,
+    lengths below the window (early-position clamp), and windows past the
+    whole table included."""
+    B, Kv, G, bs, MB, hd = 4, 2, 4, 8, 6, 64
+    NB = B * MB + 1
+    q = _rand(0, (B, Kv, G, hd), jnp.float32)
+    k_pool = _rand(1, (NB, bs, Kv, hd), jnp.float32)
+    v_pool = _rand(2, (NB, bs, Kv, hd), jnp.float32)
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(
+        rng.permutation(np.arange(1, NB))[:B * MB].reshape(B, MB), jnp.int32)
+    length = jnp.asarray([3, 17, 30, MB * bs], jnp.int32)
+    o = ops.paged_decode_attention(q, k_pool, v_pool, table, length,
+                                   window=window)
+    o_ref = ref.paged_decode_attention_ref(q, k_pool, v_pool, table, length,
+                                           window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_windowed_matches_full_when_window_covers_length():
+    """window >= length degenerates to full attention — the windowed grid
+    restriction must not drop any valid block."""
+    B, Kv, G, bs, MB, hd = 2, 2, 2, 8, 4, 64
+    NB = B * MB + 1
+    q = _rand(0, (B, Kv, G, hd), jnp.float32)
+    k_pool = _rand(1, (NB, bs, Kv, hd), jnp.float32)
+    v_pool = _rand(2, (NB, bs, Kv, hd), jnp.float32)
+    table = jnp.asarray(np.arange(1, NB).reshape(B, MB), jnp.int32)
+    length = jnp.asarray([7, 29], jnp.int32)
+    o_win = ops.paged_decode_attention(q, k_pool, v_pool, table, length,
+                                       window=MB * bs)
+    o_full = ops.paged_decode_attention(q, k_pool, v_pool, table, length)
+    np.testing.assert_allclose(np.asarray(o_win), np.asarray(o_full),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_paged_matches_dense_on_contiguous_table():
     """With an identity (contiguous) block table the paged kernel computes
     exactly what the dense decode kernel computes over the flat cache."""
@@ -105,6 +145,59 @@ def test_paged_matches_dense_on_contiguous_table():
     o_dense = ops.decode_attention(q, kk, vv, length, bs=32)
     np.testing.assert_allclose(np.asarray(o_paged), np.asarray(o_dense),
                                atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------ dense window
+@pytest.mark.parametrize("window", [3, 4, 7])
+@pytest.mark.parametrize("use_rope", [False, True])
+def test_dense_decode_window_clamp_vs_full_oracle(window, use_rope):
+    """Audit of the dense sliding-window decode path
+    (``layers.decode_attention``: ``start = max(pos - (window-1), 0)`` +
+    ``dynamic_slice_in_dim``): at every position the windowed read must
+    equal full attention masked to the trailing ``window`` keys — and at
+    ``pos < window`` (where the slice start clamps to 0) it must equal
+    UNRESTRICTED full attention exactly.  Parametrized over early, exact-
+    boundary, and deep positions; no off-by-one found, test pins it."""
+    from types import SimpleNamespace
+    from repro.models import layers as L
+    cfg = SimpleNamespace(num_heads=4, num_kv_heads=2, head_dim=16,
+                          use_rope=use_rope, rope_theta=10_000.0)
+    d = 32
+    rng = jax.random.PRNGKey(0)
+    p = L.init_attention(rng, SimpleNamespace(d_model=d, head_dim=16,
+                                              num_heads=4, num_kv_heads=2),
+                         jnp.float32)
+    Smax = 2 * window + 4
+    xs = jax.random.normal(jax.random.PRNGKey(1), (Smax, 1, 1, d))
+    ck_w = jnp.zeros((1, Smax, 2, 16))
+    cv_w = jnp.zeros_like(ck_w)
+    ck_f, cv_f = ck_w, cv_w
+    for pos in range(Smax):
+        o_w, ck_w, cv_w = L.decode_attention(p, xs[pos], ck_w, cv_w, pos,
+                                             cfg, window=window)
+        o_f, ck_f, cv_f = L.decode_attention(p, xs[pos], ck_f, cv_f, pos,
+                                             cfg, window=0)
+        if pos < window:
+            # early positions: window covers the whole prefix -> identical
+            # to full attention (the clamp must not drop position 0)
+            np.testing.assert_allclose(np.asarray(o_w), np.asarray(o_f),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"pos={pos}")
+        else:
+            # deep positions: equals full attention over the cache masked
+            # to keys (pos - window, pos]
+            q = (xs[pos] @ p["wq"]).reshape(1, 1, 4, 16)
+            kpos = jnp.arange(Smax)
+            if use_rope:
+                q = L.apply_rope(q, jnp.asarray([pos], jnp.int32),
+                                 cfg.rope_theta)
+            mask = ((kpos <= pos) & (kpos > pos - window))[None, None, None,
+                                                           None, :]
+            o_ref = L.mha(q, ck_f, cv_f, mask=mask).reshape(1, 1, 64) \
+                @ p["wo"]
+            np.testing.assert_allclose(np.asarray(o_w), np.asarray(o_ref),
+                                       atol=1e-5, rtol=1e-5,
+                                       err_msg=f"pos={pos}")
 
 
 # ------------------------------------------------------------ spec verify

@@ -79,6 +79,44 @@ def test_blocks_for_rounding():
     assert blocks_for(9, 8) == 2
 
 
+def test_block_pool_free_order_determinism():
+    """Regression: freed ids must re-enter the LOW-IDS-FIRST discipline.
+    The old list-append free broke it after any retire/admit churn (the
+    most recently freed block came back first)."""
+    pool = BlockPool(num_blocks=10, block_size=4)
+    assert pool.alloc("a", 3) == [1, 2, 3]
+    assert pool.alloc("b", 3) == [4, 5, 6]
+    pool.free("a")
+    # after churn, the lowest free ids still come first
+    assert pool.alloc("c", 2) == [1, 2]
+    assert pool.alloc("d", 3) == [3, 7, 8]
+    pool.free("b")
+    pool.free("c")
+    assert pool.alloc("e", 4) == [1, 2, 4, 5]
+
+
+def test_block_pool_refcounts_share_fork():
+    """share bumps refcounts without allocating; fork (copy-on-write)
+    splits a shared block in place; free releases references and only
+    returns DEAD ids."""
+    pool = BlockPool(num_blocks=10, block_size=4)
+    a = pool.alloc("a", 3)                      # [1, 2, 3]
+    pool.share("b", a[:2])                      # b maps a's first 2 blocks
+    assert pool.owned("b") == [1, 2]
+    assert pool.used == 3                       # no physical allocation
+    assert pool.refcount(1) == 2 and pool.refcount(3) == 1
+    new = pool.fork("b", 2)                     # CoW split of block 2
+    assert new not in a and pool.owned("b") == [1, new]
+    assert pool.refcount(2) == 1 and pool.refcount(new) == 1
+    assert pool.fork("b", new) == new           # private: no-op
+    dead = pool.free("a")                       # 1 survives via b
+    assert sorted(dead) == [2, 3] and pool.refcount(1) == 1
+    assert sorted(pool.free("b")) == [1, new]
+    assert pool.used == 0
+    with pytest.raises(RuntimeError):
+        pool.share("c", [3])                    # dead blocks can't be shared
+
+
 # ---------------------------------------------------------------- parity
 def test_paged_edge_parity_staggered(pair):
     """Greedy tokens, paths, and uncertainties match the dense layout under
@@ -189,6 +227,162 @@ def test_paged_sliding_window_parity():
     for dt, pt in zip(dts, pts):
         assert pt.tokens == dt.tokens
         assert abs(pt.uncertainty - dt.uncertainty) < 1e-5
+
+
+def test_paged_sliding_window_uses_kernel_path(monkeypatch):
+    """Sliding-window configs now ride the windowed Pallas/ref decode
+    kernel: the masked full-width block-table gather
+    (``paged_extend_attention``) must never fire on the T=1 decode hot
+    path.  (Escalation-free run: the gather legitimately remains the T>1
+    speculative-verify read.)"""
+    from repro.models import layers as L
+    e_cfg = get_config("smollm-135m").reduced().replace(sliding_window=4)
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size, sliding_window=4)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    ep = edge.init(jax.random.PRNGKey(0))
+    cp = cloud.init(jax.random.PRNGKey(1))
+
+    def _boom(*a, **k):
+        raise AssertionError("masked gather used on the T=1 decode path")
+    monkeypatch.setattr(L, "paged_extend_attention", _boom)
+    prompts = _prompts(e_cfg.vocab_size, [(10, 0), (6, 3)])
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    pts = paged.serve_batch(ep, cp, prompts, 8)
+    assert all(pt.path == "edge" and len(pt.tokens) == 8 for pt in pts)
+
+
+# ---------------------------------------------------------------- sharing
+def test_prefix_sharing_across_ticks(pair):
+    """Requests sharing a block-aligned prompt prefix map the shared
+    blocks physically (refcounts, not copies) — including ones admitted in
+    LATER ticks, past the same-tick dedup window — at exact token parity
+    with the dense oracle."""
+    edge, ep, cloud, cp = pair
+    v = edge.cfg.vocab_size
+    pref = ((np.arange(16) * 7) % v).astype(np.int32)       # 2 full blocks
+    prompts = [np.concatenate([pref,
+                               ((np.arange(6) * 5 + o) % v).astype(np.int32)])
+               for o in range(5)]
+    # the long-budget leader keeps the prefix blocks live while the other
+    # four rotate through the second slot across later ticks
+    budgets = [16, 4, 4, 4, 4]
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dts = dense.serve_batch(ep, cp, prompts, budgets)
+    pts = paged.serve_batch(ep, cp, prompts, budgets)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    s = paged.stats()
+    # batch_size=2: requests 2..4 admit in later ticks and still share
+    assert s["kv_prefix_hits"] == 4
+    assert s["kv_shared_blocks"] == 4 * 2       # 2 full prefix blocks each
+
+
+def test_twin_prompts_cow_on_divergent_write(pair):
+    """Exact twin prompts (semantic cache off) share EVERY prompt block,
+    including the partial tail; the first decode write forks a private
+    copy (copy-on-write), so both twins still emit dense-identical
+    tokens."""
+    edge, ep, cloud, cp = pair
+    (p,) = _prompts(edge.cfg.vocab_size, [(10, 0)])         # 9 entries: partial tail
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dts = dense.serve_batch(ep, cp, [p, p.copy()], 6)
+    pts = paged.serve_batch(ep, cp, [p, p.copy()], 6)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    s = paged.stats()
+    assert s["kv_prefix_hits"] == 1 and s["kv_cow_forks"] == 1
+
+
+def test_shared_prefix_peak_below_unshared(pair):
+    """The point of sharing: an 80%-shared-prefix mix keeps one physical
+    copy of the prefix, so peak live blocks sit well below dense."""
+    edge, ep, cloud, cp = pair
+    v = edge.cfg.vocab_size
+    pref = ((np.arange(24) * 7) % v).astype(np.int32)       # 3 full blocks
+    prompts = [np.concatenate([pref,
+                               ((np.arange(6) * 5 + o) % v).astype(np.int32)])
+               for o in range(6)]
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+                    batch_size=3)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=3)
+    dts = dense.serve_batch(ep, cp, prompts, 6)
+    pts = paged.serve_batch(ep, cp, prompts, 6)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    d, p = dense.stats(), paged.stats()
+    assert p["kv_peak_bytes"] * 2 < d["kv_peak_bytes"]
+
+
+# ---------------------------------------------------------------- preemption
+def test_preemption_under_overcommitted_pool(pair):
+    """A pool holding HALF the batch's reservations forces
+    preemption-by-swap: victims' blocks are staged to host and restored
+    bit-for-bit, every request completes (zero permanent deferrals), and
+    tokens match the dense oracle exactly."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size,
+                       [(16, 0), (16, 3), (16, 6), (16, 9), (16, 12)])
+    per_req = blocks_for(15 + 8, 8)             # blocks per request
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+                    batch_size=2)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=2, kv_blocks=per_req + per_req // 2 + 1)
+    dts = dense.serve_batch(ep, cp, prompts, 8)
+    pts = paged.serve_batch(ep, cp, prompts, 8)
+    assert len(pts) == len(prompts)             # nobody starved
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    s = paged.stats()
+    assert s["preemptions"] > 0 and s["kv_swaps"] == s["preemptions"]
+
+
+def test_cow_reservation_survives_twin_retirement(pair):
+    """Regression: the CoW fork block must be charged to the SHARER's
+    reservation, not the forking slot's.  Here the registrant (long
+    budget) forks first, the twin (short budget) retires, and a third
+    request is admitted into the gap — under the old accounting the
+    registrant's growth reservation had been silently consumed and its
+    next ``grow_to`` raised "KV block pool exhausted" mid-flight."""
+    edge, ep, cloud, cp = pair
+    v = edge.cfg.vocab_size
+    twin = ((np.arange(10) * 7) % v).astype(np.int32)   # 9 entries: partial
+    other = ((np.arange(17) * 5 + 3) % v).astype(np.int32)
+    prompts = [twin, twin.copy(), other]
+    budgets = [10, 2, 6]
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+                    batch_size=3, tick_tokens=2)
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=3, tick_tokens=2, kv_blocks=6)
+    dts = dense.serve_batch(ep, cp, prompts, budgets)
+    pts = paged.serve_batch(ep, cp, prompts, budgets)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    assert paged.stats()["kv_cow_forks"] == 1
+
+
+def test_giant_prompt_cannot_starve(pair):
+    """Anti-starvation regression (strict arrival order + preemption): a
+    giant request that needs most of the pool is admitted by swapping out
+    in-flight victims instead of deferring forever, and the victims resume
+    and finish with dense-identical tokens."""
+    edge, ep, cloud, cp = pair
+    v = edge.cfg.vocab_size
+    prompts = _prompts(v, [(8, 0), (8, 3), (40, 5), (8, 9)])
+    budgets = [12, 12, 4, 6]
+    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+                    batch_size=3)
+    # pool fits the giant + one small neighbour, not the giant + two
+    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+                    batch_size=3, kv_blocks=blocks_for(39 + 4, 8) + 4)
+    dts = dense.serve_batch(ep, cp, prompts, budgets)
+    pts = paged.serve_batch(ep, cp, prompts, budgets)
+    for dt, pt in zip(dts, pts):
+        assert pt.tokens == dt.tokens
+    assert paged.stats()["preemptions"] > 0
 
 
 # ---------------------------------------------------------------- memory

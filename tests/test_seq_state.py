@@ -208,6 +208,35 @@ def test_replay_step_prefix_equivalence(edges):
                                        err_msg=f"{fam} count={count}")
 
 
+# ---------------------------------------------------------------- cow
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_cow_shared_prefix_spec_rewind_parity(layout, edges, cloud):
+    """CoW correctness end-to-end: slots sharing a prompt prefix (an exact
+    twin included) diverge mid-stream, then take speculative rewinds
+    (threshold -1 escalates everyone; max_new > gamma forces multi-round
+    partial accepts).  Tokens must match the unshared ``serve_reference``
+    byte-for-byte on both layouts — on paged, the escalation group's
+    draft AND verify pools shared the prefix blocks and forked them at
+    first divergence."""
+    em, ep = edges["dense"]
+    cm, cp = cloud
+    pref = ((np.arange(16) * 3) % 512).astype(np.int32)     # 2 full blocks
+    prompts = [np.concatenate([pref,
+                               ((np.arange(5) * 11 + o) % 512)
+                               .astype(np.int32)]) for o in range(2)]
+    prompts.append(prompts[0].copy())           # exact twin: partial tail
+    ref = CollaborativeEngine(em, cm, gamma=3, temperature=0.0,
+                              escalate_threshold=-1.0, use_cache=False)
+    be = BatchedEngine(em, cm, batch_size=3, gamma=3, temperature=0.0,
+                       escalate_threshold=-1.0, use_cache=False,
+                       tick_tokens=4, kv_layout=layout, kv_block_size=8)
+    rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for rt, bt in zip(rts, bts):
+        assert bt.path == rt.path == "speculative"
+        assert bt.tokens == rt.tokens
+
+
 # ---------------------------------------------------------------- paged read
 def test_paged_decode_backend_dispatch_parity():
     """The dispatched paged decode read (Pallas kernel / jnp oracle) agrees
