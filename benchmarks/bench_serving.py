@@ -32,6 +32,16 @@ staged to a host buffer and restored bit-for-bit) instead of deferring, so
 every request completes — ``deferred_forever`` must be 0 — at dense token
 parity.
 
+The POLICY arm compares the shipped ``CollabPolicy`` implementations
+(threshold vs cascade vs bandit, ``core/policy.py``) at fixed traffic —
+per-policy req/s, cloud-token share, quality proxy.  ``cloud_token_share``
+counts tokens the cloud SCORES over the tokens requested: speculative
+verification scores gamma+1 per pass, so it is a cost RATIO that can
+exceed 1.0, not a fraction of output.  The arm then checks the ONLINE
+ADAPTATION the policy API unlocks: a UCB ``BanditPolicy`` served an
+easy-prompt stream in segments must learn to stop escalating (its
+cloud-token share strictly decreases from the first segment to the last).
+
 The RECURRENT arm runs mixed-family speculative escalation — mamba2 (ssm)
 and zamba2 (hybrid) drafts against a granite (transformer) cloud — where
 the batched scheduler's rewind is a replayed state select
@@ -62,6 +72,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engine import CollaborativeEngine
+from repro.core.policy import (BanditPolicy, CascadePolicy,
+                               SpeculativePolicy, ThresholdPolicy,
+                               cloud_tokens, trace_quality)
 from repro.core.scheduler import BatchedEngine
 from repro.data import SyntheticLM
 from repro.models import Model
@@ -88,7 +101,8 @@ def _setup():
 
 def _per_request(edge, cloud, ep, cp, prompts, threshold):
     eng = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=threshold, use_cache=False)
+                              policy=SpeculativePolicy(threshold),
+                              use_cache=False)
     eng.serve_reference(ep, cp, prompts[0], MAX_NEW)      # warm the jits
     t0 = time.time()
     traces = [eng.serve_reference(ep, cp, p, MAX_NEW) for p in prompts]
@@ -96,8 +110,9 @@ def _per_request(edge, cloud, ep, cp, prompts, threshold):
 
 
 def _batched(edge, cloud, ep, cp, prompts, threshold, **kw):
+    kw.setdefault("policy", SpeculativePolicy(threshold))
     eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
-                        escalate_threshold=threshold, use_cache=False, **kw)
+                        use_cache=False, **kw)
     eng.serve_batch(ep, cp, prompts[:BATCH], MAX_NEW)     # warm the jits
     t0 = time.time()
     traces = eng.serve_batch(ep, cp, prompts, MAX_NEW)
@@ -108,7 +123,8 @@ def _scheduler_regimes(edge, ep, cloud, cp, prompts, csv, rows):
     """Per-request vs batched req/s across the three uncertainty regimes."""
     # probe per-request uncertainties once to place the mixed threshold
     probe = CollaborativeEngine(edge, cloud, temperature=0.0,
-                                escalate_threshold=1.1, use_cache=False)
+                                policy=SpeculativePolicy(1.1),
+                                use_cache=False)
     uncs = [probe.serve_reference(ep, cp, p, MAX_NEW).uncertainty
             for p in prompts]
     regimes = {
@@ -262,7 +278,8 @@ def _recurrent_mix(cloud, cp, csv, rows):
         prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
                    for i in range(n_req)]
         ref = CollaborativeEngine(edge, cloud, temperature=0.0,
-                                  escalate_threshold=-1.0, use_cache=False)
+                                  policy=SpeculativePolicy(-1.0),
+                                  use_cache=False)
         ref.serve_reference(ep, cp, prompts[0], MAX_NEW)      # warm the jits
         t0 = time.time()
         tr_ref = [ref.serve_reference(ep, cp, p, MAX_NEW) for p in prompts]
@@ -286,6 +303,78 @@ def _recurrent_mix(cloud, cp, csv, rows):
         csv(f"serving_recurrent_{fam},speedup,{dt_ref / dt_bat:.2f}")
 
 
+def _policies(edge, ep, cloud, cp, csv, rows):
+    """POLICY-COMPARISON arm: ThresholdPolicy vs CascadePolicy vs
+    BanditPolicy over the same fixed mixed-uncertainty stream, each served
+    cold (compile included for all three, so req/s stays comparable).
+    Emits per-policy req/s, cloud-token share, and the quality proxy.
+
+    The ADAPTATION sub-arm then drives a fresh UCB ``BanditPolicy`` over an
+    easy-prompt stream (the below-median-uncertainty half) in repeated
+    segments through ONE engine: completion feedback accrues across
+    segments, so the learned cloud-token share must measurably DECREASE
+    from the first segment to the last (the acceptance criterion the old
+    string API could not even express)."""
+    gamma = 4
+    synth = SyntheticLM(edge.cfg.vocab_size)
+    rng = np.random.default_rng(5)
+    base = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+            for i in range(REQUESTS)]
+    # probe the stream's uncertainty profile through a never-escalate drain
+    probe_eng = BatchedEngine(edge, cloud, batch_size=BATCH,
+                              temperature=0.0, policy=ThresholdPolicy(1.1),
+                              use_cache=False)
+    probe = probe_eng.serve_batch(ep, cp, base, MAX_NEW)
+    uncs = np.array([t.uncertainty for t in probe])
+    med = float(np.median(uncs))
+
+    policies = {
+        "threshold": ThresholdPolicy(threshold=med),
+        "cascade": CascadePolicy(thresholds=(med, med), relief=0.5),
+        "bandit": BanditPolicy(arms=("accept", "cloud"), kind="ucb",
+                               cost_weight=med + 0.25, c=0.05),
+    }
+    rows["policy"] = {}
+    for name, pol in policies.items():
+        eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
+                            gamma=gamma, policy=pol, use_cache=False)
+        t0 = time.time()
+        traces = eng.serve_batch(ep, cp, base, MAX_NEW)
+        dt = time.time() - t0
+        ct = sum(cloud_tokens(t, gamma) for t in traces)
+        share = ct / (len(base) * MAX_NEW)
+        quality = float(np.mean([trace_quality(t, MAX_NEW)
+                                 for t in traces]))
+        rows["policy"][name] = {"req_s": len(base) / dt,
+                                "cloud_token_share": share,
+                                "quality_proxy": quality}
+        csv(f"policy_{name},req_s,{len(base) / dt:.3f}")
+        csv(f"policy_{name},cloud_token_share,{share:.3f}")
+        csv(f"policy_{name},quality_proxy,{quality:.3f}")
+
+    # bandit adaptation on the easy half of the stream
+    order = np.argsort(uncs)
+    easy = [base[i] for i in order[:max(len(base) // 2, 2)]]
+    w = float(uncs[order[len(easy) - 1]]) + 0.25   # accept must beat cloud
+    pol = BanditPolicy(arms=("accept", "cloud"), kind="ucb",
+                       cost_weight=w, c=0.05)
+    eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
+                        gamma=gamma, policy=pol, use_cache=False)
+    shares = []
+    for _ in range(4):
+        traces = eng.serve_batch(ep, cp, easy, MAX_NEW)
+        shares.append(sum(cloud_tokens(t, gamma) for t in traces)
+                      / (len(easy) * MAX_NEW))
+    rows["policy"]["bandit_adaptation"] = {
+        "shares": shares, "share_first": shares[0],
+        "share_last": shares[-1], "cost_weight": w,
+        "pulls": eng.stats()["policy_pulls"]}
+    assert shares[-1] < shares[0], \
+        f"bandit cloud-token share failed to adapt downward: {shares}"
+    csv(f"policy_bandit_adaptation,share_first,{shares[0]:.3f}")
+    csv(f"policy_bandit_adaptation,share_last,{shares[-1]:.3f}")
+
+
 def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
     global REQUESTS, MAX_NEW, BATCH
     saved = (REQUESTS, MAX_NEW, BATCH)
@@ -303,6 +392,7 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
         _shared_prefix(edge, ep, cloud, cp, csv, rows)
         _overcommit(edge, ep, cloud, cp, csv, rows)
         _recurrent_mix(cloud, cp, csv, rows)
+        _policies(edge, ep, cloud, cp, csv, rows)
     finally:
         REQUESTS, MAX_NEW, BATCH = saved
     if out:
@@ -315,8 +405,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: paged-vs-dense, shared-prefix, "
-                         "overcommit and recurrent arms (skips the slow "
-                         "per-request scheduler regimes)")
+                         "overcommit, recurrent and policy arms (skips "
+                         "the slow per-request scheduler regimes)")
     ap.add_argument("--out", default="BENCH_serving.json",
                     help="JSON results path ('' to skip)")
     args = ap.parse_args()

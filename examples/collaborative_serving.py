@@ -2,8 +2,16 @@
 requests through the REAL serving path — ``BatchedEngine.serve_batch``,
 the continuous-batching scheduler production serving runs on: slot-based
 admission into paged KV caches, one jitted decode scan per tick, semantic
-cache with intra-batch dedup, uncertainty-gated grouped escalation to
-speculative cloud verification.
+cache with intra-batch dedup, and uncertainty-gated grouped escalation —
+driven by TWO pluggable ``CollabPolicy`` implementations side by side:
+
+  * ``SpeculativePolicy`` — confidence gate into grouped speculative cloud
+    verification (token-level mixture);
+  * ``CascadePolicy`` — FrugalGPT-style cost-ordered cascade over
+    collaboration tiers (accept -> speculative -> full cloud regen).
+
+Same traffic, same scheduler, different collaboration policy — compare
+path mixes and cloud tokens per request in the printed summary.
 
     PYTHONPATH=src python examples/collaborative_serving.py
 """
@@ -13,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.policy import CascadePolicy, SpeculativePolicy, cloud_tokens
 from repro.core.scheduler import BatchedEngine
 from repro.data import SyntheticLM
 from repro.models import Model
@@ -24,37 +33,46 @@ edge, cloud = Model(edge_cfg), Model(cloud_cfg)
 ep = edge.init(jax.random.PRNGKey(0))
 cp = cloud.init(jax.random.PRNGKey(1))
 
-engine = BatchedEngine(edge, cloud, batch_size=8, gamma=4, temperature=0.0,
-                       escalate_threshold=0.55, estimator="entropy",
-                       escalation="speculative", cache_threshold=0.98,
-                       tick_tokens=8)
-
 synth = SyntheticLM(edge_cfg.vocab_size, n_domains=3)
 rng = np.random.default_rng(0)
 
 requests = [synth.sample(rng, i % 3, 12) for i in range(10)]
 requests += requests[:3]          # repeats -> cache hits (dedup/coalescing)
+GAMMA, MAX_NEW = 4, 16
 
-t0 = time.time()
-traces = engine.serve_batch(ep, cp, requests, 16)
-dt = time.time() - t0
+summary = {}
+for label, policy in [
+        ("speculative@0.55", SpeculativePolicy(threshold=0.55)),
+        ("cascade", CascadePolicy(thresholds=(0.45, 0.25), relief=0.5))]:
+    engine = BatchedEngine(edge, cloud, batch_size=8, gamma=GAMMA,
+                           temperature=0.0, policy=policy,
+                           cache_threshold=0.98, tick_tokens=8)
+    t0 = time.time()
+    traces = engine.serve_batch(ep, cp, requests, MAX_NEW)
+    dt = time.time() - t0
 
-paths = {}
-edge_calls = cloud_passes = 0
-for i, tr in enumerate(traces):
-    paths[tr.path] = paths.get(tr.path, 0) + 1
-    edge_calls += tr.edge_calls
-    cloud_passes += tr.cloud_passes
-    print(f"req {i:2d}: path={tr.path:12s} unc={tr.uncertainty:.3f} "
-          f"edge={tr.edge_calls:3d} cloud={tr.cloud_passes:2d}")
+    print(f"\n=== policy: {label} ===")
+    paths = {}
+    for i, tr in enumerate(traces):
+        paths[tr.path] = paths.get(tr.path, 0) + 1
+        print(f"req {i:2d}: path={tr.path:12s} unc={tr.uncertainty:.3f} "
+              f"edge={tr.edge_calls:3d} cloud={tr.cloud_passes:2d}")
+    n = len(requests)
+    ct = sum(cloud_tokens(tr, GAMMA) for tr in traces)
+    stats = engine.stats()
+    summary[label] = (n / dt, paths, ct / n, stats)
+    print(f"{n} requests in {dt:.1f}s ({n / dt:.2f} req/s); "
+          f"path mix: {paths}")
+    print(f"cloud tokens/request: {ct / n:.1f} "
+          f"(cloud-only would be {MAX_NEW:.1f}); "
+          f"cache hit rate: {stats['cache_hit_rate']:.2f}")
+    print(f"kv: layout={stats['kv_layout']} "
+          f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "
+          f"capacity={stats['kv_capacity_bytes'] / 1e6:.2f}MB")
 
-n = len(requests)
-stats = engine.stats()
-print(f"\n{n} requests in {dt:.1f}s ({n / dt:.2f} req/s)")
-print(f"path mix: {paths}")
-print(f"cloud passes/request: {cloud_passes/n:.1f} "
-      f"(cloud-only would be 16.0)")
-print(f"cache hit rate: {stats['cache_hit_rate']:.2f}")
-print(f"kv: layout={stats['kv_layout']} "
-      f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "
-      f"capacity={stats['kv_capacity_bytes'] / 1e6:.2f}MB")
+print("\n=== side by side ===")
+for label, (req_s, paths, ct, stats) in summary.items():
+    extra = {k.removeprefix("policy_"): v for k, v in stats.items()
+             if k.startswith("policy_")}
+    print(f"{label:18s} {req_s:5.2f} req/s  cloud tok/req {ct:5.1f}  "
+          f"paths {paths} {extra or ''}")

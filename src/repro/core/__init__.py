@@ -3,6 +3,10 @@
 Inference (survey §2): routing, uncertainty, early_exit, partition,
 compression, cache, speculative, self_speculative, tree_speculation, engine.
 """
+from repro.core.policy import (BanditPolicy, BudgetPolicy,  # noqa: F401
+                               CascadePolicy, CollabPolicy, SkeletonPolicy,
+                               SpeculativePolicy, ThresholdPolicy,
+                               make_policy)
 from repro.core.scheduler import BatchedEngine, RequestTrace  # noqa: F401
 from repro.core.seq_state import (DenseKV, Lane, PagedKV,  # noqa: F401
                                   RecurrentState, SequenceState, SpecOps)

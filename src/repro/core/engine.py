@@ -9,6 +9,12 @@ engine that composes the taxonomy's mechanisms per request:
        c. "skeleton"     — cloud drafts a skeleton prefix, edge completes
                            (cloud-to-edge skeleton, §2.4.3/PICE)
 
+All of step 2-3's decision logic is pluggable: pass a
+``core/policy.py::CollabPolicy`` (``policy=``) to choose lanes at
+admission, per-wave escalation actions, and online learning from
+completion feedback.  The legacy ``escalation=``/``escalate_threshold=``
+kwargs construct the matching threshold-family policy (deprecated).
+
 Serving architecture
 --------------------
 The serving path is the batched continuous-batching scheduler in
@@ -32,6 +38,7 @@ and ``benchmarks/bench_serving.py`` uses it as the per-request baseline.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict
 
 import jax
@@ -39,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import embed_tokens_mean
+from repro.core.policy import ThresholdPolicy, resolve_policy
 from repro.core.scheduler import BatchedEngine, RequestTrace  # noqa: F401
 from repro.core.speculative import SpecDecoder, autoregressive_baseline
 from repro.core.uncertainty import get_estimator
@@ -54,24 +62,33 @@ class CollaborativeEngine:
     """
 
     def __init__(self, edge_model, cloud_model, *, gamma: int = 4,
-                 temperature: float = 0.0, escalate_threshold: float = 0.6,
-                 estimator: str = "entropy", escalation: str = "speculative",
+                 temperature: float = 0.0, escalate_threshold=None,
+                 estimator: str = "entropy", escalation=None, policy=None,
                  use_cache: bool = True, cache_threshold: float = 0.95,
                  skeleton_len: int = 8, kv_layout: str = "auto",
                  kv_block_size: int = 32, kv_blocks=None):
         self.edge = edge_model
         self.cloud = cloud_model
         self.temperature = temperature
-        self.threshold = escalate_threshold
+        self.policy = resolve_policy(policy, escalation, escalate_threshold)
+        # serve_reference is the legacy per-token oracle: it understands
+        # only the threshold-family policies' fixed (threshold, action)
+        # pair; any other policy (bandit, budget, cascade — whose hooks the
+        # per-token loop cannot honor) keeps the historical defaults there,
+        # while serve()/the batched path runs the real policy
+        if isinstance(self.policy, ThresholdPolicy):
+            self.threshold = self.policy.threshold
+            self.escalation = self.policy.action
+        else:
+            self.threshold, self.escalation = 0.6, "speculative"
         self.est = get_estimator(estimator)
-        self.escalation = escalation
         self.skeleton_len = skeleton_len
         self.spec = SpecDecoder(edge_model, cloud_model, gamma=gamma,
                                 temperature=temperature)
         self.batched = BatchedEngine(
             edge_model, cloud_model, batch_size=1, gamma=gamma,
-            temperature=temperature, escalate_threshold=escalate_threshold,
-            estimator=estimator, escalation=escalation, use_cache=use_cache,
+            temperature=temperature, policy=self.policy,
+            estimator=estimator, use_cache=use_cache,
             cache_threshold=cache_threshold, skeleton_len=skeleton_len,
             kv_layout=kv_layout, kv_block_size=kv_block_size,
             kv_blocks=kv_blocks)
@@ -112,7 +129,16 @@ class CollaborativeEngine:
     def serve_reference(self, edge_params, cloud_params, prompt, max_new: int
                         ) -> RequestTrace:
         """Legacy per-request loop (host round-trip per token) — the
-        reference the batched scheduler is tested against."""
+        reference the batched scheduler is tested against.  Only honors
+        the threshold-family policies; anything else is served with the
+        historical speculative@0.6 decisions (with a warning)."""
+        if not isinstance(self.policy, ThresholdPolicy):
+            warnings.warn(
+                f"serve_reference cannot honor policy {self.policy.name!r} "
+                "(its assign/decide/feedback hooks never fire here); "
+                "serving with the historical speculative@0.6 decisions — "
+                "use serve() / BatchedEngine for the real policy",
+                RuntimeWarning, stacklevel=2)
         prompt = np.asarray(prompt, np.int32).reshape(-1)
 
         if self.cache is not None:
@@ -164,4 +190,5 @@ class CollaborativeEngine:
 
     # ----------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0}
+        return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0,
+                "policy": self.policy.name, **self.policy.stats()}

@@ -56,18 +56,28 @@ class CascadeRouter:
         self.thresholds = list(thresholds)
         self.est = get_estimator(estimator)
 
+    def route(self, u_fns: Sequence[Callable[[], float]]) -> Route:
+        """Cascade over lazily-evaluated per-tier UNCERTAINTIES (the
+        estimator already applied, or any other scalar the caller trusts):
+        pay tier i's cost, stop at the first tier confident under its
+        threshold (the last tier is unconditional).  This is the seam the
+        serving ``CascadePolicy`` drives — tiers there are collaboration
+        mechanisms, not just models."""
+        spent, trace = 0.0, []
+        for i, fn in enumerate(u_fns):
+            spent += self.costs[i]
+            u = float(fn())
+            trace.append((i, u))
+            if u <= self.thresholds[i] or i == len(u_fns) - 1:
+                return Route(i, u, spent, trace)
+        raise RuntimeError("unreachable")
+
     def run(self, score_fns: Sequence[Callable[[], np.ndarray]]) -> Route:
         """score_fns[i]() -> logits of model i (lazily evaluated: escalation
         is what costs money, so we only call what we route to)."""
-        spent, trace = 0.0, []
-        for i, fn in enumerate(score_fns):
-            logits = fn()
-            spent += self.costs[i]
-            u = float(np.asarray(self.est(logits)).mean())
-            trace.append((i, u))
-            if u <= self.thresholds[i] or i == len(score_fns) - 1:
-                return Route(i, u, spent, trace)
-        raise RuntimeError("unreachable")
+        return self.route([
+            lambda fn=fn: float(np.asarray(self.est(fn())).mean())
+            for fn in score_fns])
 
 
 class UCBRouter:

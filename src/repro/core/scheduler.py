@@ -26,9 +26,20 @@ tokens) but executes them slot-based and batched:
     garbage behind an ``active`` mask; their emissions are dropped, and on
     the paged layout those masked writes land in the reserved TRAP block
     so freed blocks can be re-allocated immediately.
-  * RETIRE / ADMIT each tick: finished slots are classified by mean
-    uncertainty (edge-confident vs escalate) and freed; queued requests are
-    admitted into the freed slots.  Identical prompts admitted in the same
+  * POLICY — every collaboration decision flows through the ``CollabPolicy``
+    hooks (``core/policy.py``); the scheduler contains no escalation-mode
+    branching of its own.  ``policy.assign(features)`` runs at admission
+    (task assignment: an ``"edge"``-assigned request force-accepts its edge
+    output, a ``"cloud"``-assigned one skips the edge entirely and is served
+    by a grouped batched cloud generation, ``"collab"`` takes the edge-first
+    path below); ``policy.decide(unc, steps, budget)`` runs once per
+    retirement wave, vectorized, naming each retiring request's action
+    (accept / cloud / skeleton / speculative — one wave can mix them);
+    ``policy.feedback(action, quality, cost, features)`` fires per
+    completion with the realized quality proxy and cloud-token cost,
+    closing the loop for bandit/budget policies.
+  * RETIRE / ADMIT each tick: finished slots are grouped by their decided
+    action and freed; queued requests are admitted into the freed slots.  Identical prompts admitted in the same
     tick (or while a matching request is still in flight) are COALESCED:
     one leader decodes, the rest are served from its result through the
     semantic cache — restoring the sequential engine's behavior.  On the
@@ -54,10 +65,10 @@ tokens) but executes them slot-based and batched:
     victim re-enters at the head of admission order — so no request can
     starve and no permanent deferral exists (the old defer-forever path is
     gone).
-  * ESCALATION runs GROUPED: all slots retired-uncertain in a tick share
-    one batched cloud decode ("cloud"), one batched skeleton + batched edge
-    completion ("skeleton"), or one ``BatchedSpecDecoder`` group
-    ("speculative").  Groups are padded to ``batch_size`` so every jitted
+  * ESCALATION runs GROUPED: all slots retired into the same action in a
+    tick share one batched cloud decode ("cloud"), one batched skeleton +
+    batched edge completion ("skeleton"), or one ``BatchedSpecDecoder``
+    group ("speculative").  Groups are padded to ``batch_size`` so every jitted
     shape is compiled once.  Speculative rewind is a ``pos`` write on KV
     layouts and a batched accepted-prefix replay (``Model.replay_step``) on
     recurrent layouts — EVERY family pair, mixed ones included (e.g. mamba2
@@ -77,6 +88,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import SemanticCache, embed_tokens_mean
+from repro.core.policy import (ACTIONS, LANES, cloud_tokens, resolve_policy,
+                               trace_quality)
 from repro.core.seq_state import (Lane, layout_for,  # noqa: F401 (re-export)
                                   pow2_steps, resolve_kv_layout,
                                   stack_slot_caches, write_slot, write_slots)
@@ -99,6 +112,7 @@ class _Request:
     prompt: np.ndarray
     max_new: int
     key: Optional[np.ndarray] = None    # semantic-cache key (set at admit)
+    lane: Optional[str] = None          # policy.assign outcome (once per req)
 
 
 @dataclasses.dataclass
@@ -110,10 +124,23 @@ class _Slot:
 class BatchedEngine:
     """Slot-based collaborative serving engine (see module docstring).
 
-    Mirrors ``CollaborativeEngine``'s decision semantics exactly — same
-    estimator, threshold, escalation modes, semantic cache — so greedy
+    Collaboration decisions are delegated to ``policy`` (a
+    ``core/policy.py::CollabPolicy``): task assignment at admission,
+    per-wave escalation actions at retirement, completion feedback.  The
+    default ``SpeculativePolicy(threshold=0.6)`` mirrors
+    ``CollaborativeEngine``'s historical decision semantics exactly — same
+    estimator, threshold, escalation grouping, semantic cache — so greedy
     traces match the per-request engine token for token, on every KV
-    layout and model family.
+    layout and model family.  The legacy ``escalation=`` /
+    ``escalate_threshold=`` kwargs still work for one release
+    (``DeprecationWarning``) and construct the matching policy.
+
+    Policy feature dicts: ``assign`` sees ``{rid, prompt, prompt_len,
+    max_new, queue_depth, free_slots, inflight}`` (prompt features + live
+    load stats); ``feedback`` sees ``{rid, unc, steps, budget, lane}`` —
+    the middle three matching the aligned arrays ``decide`` saw for that
+    request, ``lane`` distinguishing decided actions from lane-assigned
+    completions that never reached ``decide``.
 
     KV layout knobs:
       * ``kv_layout``: "auto" (paged where both models' cache families
@@ -128,8 +155,10 @@ class BatchedEngine:
 
     def __init__(self, edge_model, cloud_model, *, batch_size: int = 8,
                  gamma: int = 4, temperature: float = 0.0,
-                 escalate_threshold: float = 0.6, estimator: str = "entropy",
-                 escalation: str = "speculative", use_cache: bool = True,
+                 escalate_threshold: Optional[float] = None,
+                 estimator: str = "entropy",
+                 escalation: Optional[str] = None, policy=None,
+                 use_cache: bool = True,
                  cache_threshold: float = 0.95, skeleton_len: int = 8,
                  tick_tokens: int = 16, seed: int = 0,
                  kv_layout: str = "auto", kv_block_size: int = 32,
@@ -138,12 +167,10 @@ class BatchedEngine:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if tick_tokens < 1:
             raise ValueError(f"tick_tokens must be >= 1, got {tick_tokens}")
-        if escalation not in ("speculative", "cloud", "skeleton"):
-            raise ValueError(f"unknown escalation mode {escalation!r}; "
-                             "known: speculative | cloud | skeleton")
         if kv_block_size < 1:
             raise ValueError(f"kv_block_size must be >= 1, got "
                              f"{kv_block_size}")
+        self.policy = resolve_policy(policy, escalation, escalate_threshold)
         self.kv_layout = resolve_kv_layout(edge_model, cloud_model, kv_layout)
         self.kv_block_size = kv_block_size
         self.kv_blocks = kv_blocks
@@ -152,11 +179,12 @@ class BatchedEngine:
         self.batch_size = batch_size
         self.gamma = gamma
         self.temperature = temperature
-        self.threshold = escalate_threshold
-        self.escalation = escalation
         self.skeleton_len = skeleton_len
         self.tick_tokens = tick_tokens
         self.seed = seed
+        self._esc_fns = {"cloud": self._cloud_escalate,
+                         "skeleton": self._skeleton_escalate,
+                         "speculative": self._spec_escalate}
         self.edge = Lane(edge_model, estimator, temperature,
                          layout=layout_for(edge_model, self.kv_layout),
                          block_size=kv_block_size)
@@ -255,6 +283,12 @@ class BatchedEngine:
             # strict arrival order (it resumes within a bounded number of
             # ticks as in-flight slots retire).
             deferred = False
+            assigned_cloud: List[_Request] = []
+            # NOTE: lane assignment happens inside the slot-gated admission
+            # wave, so a cloud-lane request still waits for a free edge
+            # slot to be *considered* even though it never occupies one —
+            # acceptable head-of-line latency today; probing queue heads
+            # independently of free slots is a known follow-on
             if free and self._queue and not stalled:
                 cands = [self._queue.popleft()
                          for _ in range(min(len(free), len(self._queue)))]
@@ -280,6 +314,35 @@ class BatchedEngine:
                             self._followers.setdefault(lid, []).append(r)
                             self.cache.hits += 1
                             continue
+                    # task assignment: the policy picks this request's lane
+                    # from prompt features + live load stats — ONCE per
+                    # request (a deferred request keeps its lane, so
+                    # stateful policies never see phantom duplicates)
+                    if r.lane is None:
+                        r.lane = self.policy.assign({
+                            "rid": r.rid, "prompt": r.prompt,
+                            "prompt_len": int(r.prompt.size),
+                            "max_new": int(r.max_new),
+                            "queue_depth": len(self._queue),
+                            "free_slots": len(free),
+                            "inflight": sum(s.req is not None
+                                            for s in slots)})
+                        if r.lane not in LANES:
+                            raise ValueError(
+                                f"policy {self.policy.name!r} assigned "
+                                f"unknown lane {r.lane!r}; known: "
+                                f"{' | '.join(LANES)}")
+                    if r.lane == "cloud":
+                        # cloud-only: skip the edge decode entirely; served
+                        # by one grouped batched cloud generation below.
+                        # Register as a leader so identical prompts later
+                        # in this wave coalesce instead of paying a second
+                        # cloud generation (resolved in _finish this wave)
+                        if self.cache is not None:
+                            self._leaders.append(
+                                (SemanticCache._norm(r.key), r.rid))
+                        assigned_cloud.append(r)
+                        continue
                     b = free.pop(0)
                     need = r.prompt.size - 1 + r.max_new
                     ok = state.admit(b, r.prompt, need)
@@ -339,6 +402,18 @@ class BatchedEngine:
                     steps = steps.at[idx].set(jnp.asarray(news, jnp.int32))
                     unc = unc.at[idx].set(0.0)
 
+            if assigned_cloud:
+                # cloud-assigned lane: one grouped batched cloud generation
+                # for the wave (task assignment at admission)
+                rng, r_ = jax.random.split(rng)
+                toks = self._group_generate(
+                    self.cloud, cloud_params,
+                    [q.prompt for q in assigned_cloud],
+                    [q.max_new for q in assigned_cloud], r_)
+                for q, t in zip(assigned_cloud, toks):
+                    self._finish(results, q, RequestTrace(
+                        "cloud", cloud_passes=q.max_new, tokens=t))
+
             occupied = [b for b in range(B) if slots[b].req is not None]
             if not occupied:
                 if deferred or stalled:
@@ -364,30 +439,66 @@ class BatchedEngine:
                 slots[b].tokens.extend(
                     int(t) for t, a in zip(toks_h[:, b], act_h[:, b]) if a)
 
-            # ---- retire finished slots; group the uncertain ones
+            # ---- retire finished slots; the policy names each one's action
             steps_h, unc_h = np.asarray(steps), np.asarray(unc)
-            group: List[Tuple[_Request, float]] = []
+            retiring: List[Tuple[_Request, float, List[int]]] = []
             for b in occupied:
                 if steps_h[b] > 0:
                     continue
                 req = slots[b].req
                 u = float(unc_h[b]) / req.max_new
-                if u <= self.threshold:
-                    self._finish(results, req, RequestTrace(
-                        "edge", edge_calls=req.max_new, uncertainty=u,
-                        tokens=slots[b].tokens[:req.max_new]))
-                else:
-                    # edge tokens are discarded — escalation regenerates
-                    # with cloud involvement (same as the reference engine)
-                    group.append((req, u))
+                retiring.append((req, u, slots[b].tokens[:req.max_new]))
                 slots[b] = _Slot()
                 state.retire(b)
 
-            if group:
-                rng, r = jax.random.split(rng)
-                for req, tr in self._escalate(edge_params, cloud_params,
-                                              group, r):
-                    self._finish(results, req, tr)
+            if retiring:
+                # one vectorized decide over the wave's collaborative
+                # requests; edge-assigned ones force-accept their output.
+                # Today slots retire only with their budget exhausted, so
+                # steps spent == budget; the two arrays diverge once early
+                # retirement lands (policies must not rely on equality)
+                actions = ["accept"] * len(retiring)
+                decided = [i for i, (rq, _, _) in enumerate(retiring)
+                           if rq.lane != "edge"]
+                if decided:
+                    acts = list(self.policy.decide(
+                        np.asarray([retiring[i][1] for i in decided],
+                                   np.float32),
+                        np.asarray([retiring[i][0].max_new
+                                    for i in decided], np.int32),
+                        np.asarray([retiring[i][0].max_new
+                                    for i in decided], np.int32)))
+                    if len(acts) != len(decided):
+                        raise ValueError(
+                            f"policy {self.policy.name!r} decided "
+                            f"{len(acts)} actions for a wave of "
+                            f"{len(decided)}")
+                    for i, a in zip(decided, acts):
+                        a = str(a)
+                        if a not in ACTIONS:
+                            raise ValueError(
+                                f"policy {self.policy.name!r} decided "
+                                f"unknown action {a!r}; known: "
+                                f"{' | '.join(ACTIONS)}")
+                        actions[i] = a
+                groups: Dict[str, List[Tuple[_Request, float]]] = {}
+                for (req, u, toks), a in zip(retiring, actions):
+                    if a == "accept":
+                        self._finish(results, req, RequestTrace(
+                            "edge", edge_calls=req.max_new, uncertainty=u,
+                            tokens=toks))
+                    else:
+                        # edge tokens are discarded — escalation
+                        # regenerates with cloud involvement (same as the
+                        # reference engine)
+                        groups.setdefault(a, []).append((req, u))
+                # one batched group per decided action (a wave can mix)
+                for a, grp in groups.items():
+                    rng, r = jax.random.split(rng)
+                    for req, tr in self._esc_fns[a](
+                            edge_params, cloud_params,
+                            [g[0] for g in grp], [g[1] for g in grp], r):
+                        self._finish(results, req, tr)
 
         self._kv_stats["kv_peak_bytes"] = state.peak_bytes
         self._kv_stats["kv_capacity_bytes"] = state.capacity_bytes
@@ -429,6 +540,19 @@ class BatchedEngine:
 
     # ------------------------------------------------------------ internals
     def _finish(self, results, req: _Request, tr: RequestTrace):
+        if tr.path != "cache":
+            # completion feedback: realized quality proxy + cloud-token
+            # cost close the loop for learning (bandit/budget) policies.
+            # features carry the request's lane so policies can tell a
+            # decided action from a lane-assigned completion (which never
+            # went through decide)
+            self.policy.feedback(
+                "accept" if tr.path == "edge" else tr.path,
+                trace_quality(tr, req.max_new),
+                cloud_tokens(tr, self.gamma),
+                {"rid": req.rid, "unc": tr.uncertainty,
+                 "steps": req.max_new, "budget": req.max_new,
+                 "lane": req.lane})
         if self.cache is not None and tr.tokens is not None \
                 and req.key is not None:
             self.cache.insert(req.key, tr.tokens)
@@ -471,40 +595,35 @@ class BatchedEngine:
         return [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i]) if a]
                 for i in range(len(prompts))]
 
-    def _escalate(self, edge_params, cloud_params, group, rng):
-        """Batched escalation of the slots retired-uncertain this tick.
-        group: list of (request, mean uncertainty)."""
-        reqs = [g[0] for g in group]
-        uncs = [g[1] for g in group]
+    def _cloud_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
+        """Grouped full-cloud regeneration (task assignment)."""
         out: List[Tuple[_Request, RequestTrace]] = []
+        toks = self._group_generate(self.cloud, cloud_params,
+                                    [r.prompt for r in reqs],
+                                    [r.max_new for r in reqs], rng)
+        for r, u, t in zip(reqs, uncs, toks):
+            out.append((r, RequestTrace(
+                "cloud", edge_calls=r.max_new, cloud_passes=r.max_new,
+                uncertainty=u, tokens=t)))
+        return out
 
-        if self.escalation == "cloud":
-            toks = self._group_generate(self.cloud, cloud_params,
-                                        [r.prompt for r in reqs],
-                                        [r.max_new for r in reqs], rng)
-            for r, u, t in zip(reqs, uncs, toks):
-                out.append((r, RequestTrace(
-                    "cloud", edge_calls=r.max_new, cloud_passes=r.max_new,
-                    uncertainty=u, tokens=t)))
-
-        elif self.escalation == "skeleton":
-            r1, r2 = jax.random.split(rng)
-            ks = [min(self.skeleton_len, r.max_new) for r in reqs]
-            skels = self._group_generate(self.cloud, cloud_params,
-                                         [r.prompt for r in reqs], ks, r1)
-            exts = [np.concatenate([r.prompt, np.asarray(s, np.int32)])
-                    for r, s in zip(reqs, skels)]
-            rests = self._group_generate(
-                self.edge, edge_params, exts,
-                [r.max_new - k for r, k in zip(reqs, ks)], r2)
-            for r, u, k, s, rest in zip(reqs, uncs, ks, skels, rests):
-                out.append((r, RequestTrace(
-                    "skeleton", edge_calls=r.max_new + (r.max_new - k),
-                    cloud_passes=k, uncertainty=u, tokens=s + rest)))
-
-        else:   # speculative: one grouped draft/verify for EVERY family pair
-            out.extend(self._spec_escalate(edge_params, cloud_params,
-                                           reqs, uncs, rng))
+    def _skeleton_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
+        """Grouped skeleton division: one batched cloud skeleton pass plus
+        one batched edge completion pass for the whole group."""
+        out: List[Tuple[_Request, RequestTrace]] = []
+        r1, r2 = jax.random.split(rng)
+        ks = [min(self.skeleton_len, r.max_new) for r in reqs]
+        skels = self._group_generate(self.cloud, cloud_params,
+                                     [r.prompt for r in reqs], ks, r1)
+        exts = [np.concatenate([r.prompt, np.asarray(s, np.int32)])
+                for r, s in zip(reqs, skels)]
+        rests = self._group_generate(
+            self.edge, edge_params, exts,
+            [r.max_new - k for r, k in zip(reqs, ks)], r2)
+        for r, u, k, s, rest in zip(reqs, uncs, ks, skels, rests):
+            out.append((r, RequestTrace(
+                "skeleton", edge_calls=r.max_new + (r.max_new - k),
+                cloud_passes=k, uncertainty=u, tokens=s + rest)))
         return out
 
     def _spec_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
@@ -545,4 +664,5 @@ class BatchedEngine:
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, Any]:
         return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0,
-                **self._kv_stats}
+                "policy": self.policy.name,
+                **self.policy.stats(), **self._kv_stats}

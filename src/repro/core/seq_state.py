@@ -297,10 +297,14 @@ class PagedKV(SequenceState):
 
     SWAP: ``swap_out`` stages a slot's blocks to host memory
     (``jax.device_get``) and releases them; ``swap_in`` restores the
-    content into freshly allocated blocks bit-for-bit, so a preempted
-    request resumes mid-decode with identical tokens.  Swapped content is
-    re-admitted without re-sharing (a swapped twin pays its own blocks —
-    acceptable, since swap only fires under pool pressure).
+    content bit-for-bit, so a preempted request resumes mid-decode with
+    identical tokens.  On restore, ``swap_in`` RE-CONSULTS the prefix-block
+    index: the full blocks of the victim's prompt that are still live (a
+    resident twin, a shared system prefix) are re-shared via refcount bumps
+    instead of paying private copies — only the tail past the indexed
+    prefix is re-allocated and re-written.  Shared full prompt blocks are
+    never decode-written by the resumed slot (its write frontier sits past
+    the prompt), so no CoW reservation is needed on restore.
     """
 
     layout = "paged"
@@ -321,6 +325,7 @@ class PagedKV(SequenceState):
                              self.caches["v"].nbytes) // num_blocks
         self._len = [0] * batch     # real cache entries written per slot
         self._commit = [0] * batch  # blocks reserved for future growth
+        self._entries: List[Optional[np.ndarray]] = [None] * batch  # prompts
         self._stale: set = set()    # retired slots awaiting a trap row
         self._pend: List[Tuple[int, np.ndarray, int]] = []  # (b, row, pos)
         # prefix-block index: prompt-entry bytes -> block ids holding them
@@ -504,6 +509,7 @@ class PagedKV(SequenceState):
         row[:len(mine)] = mine
         self._pend.append((b, row, E))
         self._len[b] = E
+        self._entries[b] = entries
         self._stale.discard(b)
         self._register(entries, mine)
         return True
@@ -521,10 +527,14 @@ class PagedKV(SequenceState):
         return False
 
     def swappable(self, b: int) -> bool:
-        """A victim is only worth swapping if its restore is guaranteed:
-        ``swap_in`` re-allocates every LOGICAL block privately (shared
-        prefixes are not re-shared), so a slot admitted over a prefix
-        larger than the pool could never come back."""
+        """A victim is only worth swapping if its restore is GUARANTEED.
+        ``swap_in`` does re-share still-indexed full prompt blocks, but
+        that is opportunistic — the index entries can die while the victim
+        sits on the host (the twin retires, a block is written) — so the
+        guarantee must assume the worst case: every logical block restored
+        privately.  A slot admitted only thanks to prefix sharing, with a
+        private footprint larger than the pool, could otherwise never come
+        back."""
         rsv = sum(b in lst for lst in self._cow_rsv.values())
         return (len(self.pool.owned(b)) + self._commit[b] - rsv
                 <= self.pool.num_blocks - 1)
@@ -594,6 +604,7 @@ class PagedKV(SequenceState):
         self._purge_blocks(self.pool.free(b))
         self._len[b] = 0
         self._commit[b] = 0
+        self._entries[b] = None
         self._stale.add(b)
 
     # ------------------------------------------------------------ swap
@@ -609,32 +620,65 @@ class PagedKV(SequenceState):
                                 jnp.asarray(ids, jnp.int32))
         commit = max(self._commit[b] - self._drop_cow_rsv(b), 0)
         handle = {"k": jax.device_get(k), "v": jax.device_get(v),
-                  "len": self._len[b], "commit": commit}
+                  "len": self._len[b], "commit": commit,
+                  "entries": self._entries[b]}
         self._purge_blocks(self.pool.free(b))
         self._len[b] = 0
         self._commit[b] = 0
+        self._entries[b] = None
         self._stale.add(b)
         self._swaps += 1
         return handle
 
     def swap_in(self, b: int, handle: dict) -> bool:
         """Restore a swapped-out slot into ``b``; False when the pool
-        cannot back its blocks + outstanding reservation yet."""
+        cannot back its blocks + outstanding reservation yet.
+
+        Re-consults the prefix-block index over the victim's prompt: FULL
+        prompt blocks still live in the index (a resident twin's, a shared
+        system prefix) are mapped back by refcount bump instead of a
+        private re-allocation + re-write.  Only full-block matches are
+        taken — the restored content past the indexed prefix (partial tail
+        block, generated tokens) is private by construction, and the
+        resumed slot's write frontier (``len >= prompt entries``) can
+        never land in a shared full prompt block, so no CoW reservation is
+        needed."""
         nb = handle["k"].shape[1]
-        if not self.pool.can_alloc(nb + handle["commit"]
+        entries = handle.get("entries")
+        ns, shared = 0, []
+        if entries is not None:
+            m, cand = self._lookup_prefix(entries)
+            ns = min(m // self.block_size, nb)
+            shared = cand[:ns]
+        if not self.pool.can_alloc((nb - ns) + handle["commit"]
                                    + sum(self._commit)):
             return False
-        blocks = self.pool.alloc(b, nb)
+        if shared:
+            self.pool.share(b, shared)
+            self._prefix_hits += 1
+            self._shared_blocks += ns
+        blocks = self.pool.alloc(b, nb - ns) if nb > ns else []
         self._commit[b] = handle["commit"]
-        self.caches["k"], self.caches["v"] = write_pool_blocks(
-            self.caches["k"], self.caches["v"],
-            jnp.asarray(blocks, jnp.int32),
-            jnp.asarray(handle["k"]), jnp.asarray(handle["v"]))
+        if nb > ns:
+            self.caches["k"], self.caches["v"] = write_pool_blocks(
+                self.caches["k"], self.caches["v"],
+                jnp.asarray(blocks, jnp.int32),
+                jnp.asarray(handle["k"][:, ns:]),
+                jnp.asarray(handle["v"][:, ns:]))
+        mine = self.pool.owned(b)
         row = np.zeros((self.max_blocks,), np.int32)
-        row[:nb] = blocks
+        row[:nb] = mine
         self._pend.append((b, row, handle["len"]))
         self._len[b] = handle["len"]
+        self._entries[b] = entries
         self._stale.discard(b)
+        if entries is not None:
+            # restored PROMPT blocks are index-worthy again (first
+            # registrant wins, so a live twin's entries are untouched);
+            # generated-token blocks past the prompt stay out of the index
+            # so their first write keeps the O(1) purge fast path
+            self._register(entries, mine[:blocks_for(entries.size,
+                                                     self.block_size)])
         return True
 
     @property

@@ -1,10 +1,18 @@
 """Collaborative serving launcher: edge SLM + cloud LLM behind the batched
-continuous-batching scheduler (task-level mixture with speculative
-escalation).
+continuous-batching scheduler, with the collaboration decision surface
+picked by ``--policy`` (a ``core/policy.py::CollabPolicy``).
 
     PYTHONPATH=src python -m repro.launch.serve --edge smollm-135m \
         --cloud granite-8b --requests 32 --reduced \
-        --scheduler batched --batch-size 8
+        --scheduler batched --batch-size 8 --policy cascade
+
+Shipped policies: ``threshold`` (confidence gate -> cloud regen),
+``speculative`` / ``skeleton`` (same gate into token-level mixture / task
+division), ``cascade`` (cost-ordered multi-tier cascade), ``bandit``
+(UCB/LinUCB online routing learned from completion feedback), ``budget``
+(per-request cloud-token budget with SLA classes, degrading to edge-accept
+when spent).  ``--escalation`` survives as a deprecated alias mapping onto
+the matching policy.
 
 ``--scheduler per-request`` runs the legacy one-at-a-time reference loop
 (useful for tracing and as the baseline the batched numbers are quoted
@@ -44,9 +52,33 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engine import CollaborativeEngine
+from repro.core.policy import (POLICIES, ThresholdPolicy, make_policy,
+                               policy_from_legacy)
 from repro.core.scheduler import BatchedEngine
 from repro.data import SyntheticLM
 from repro.models import Model
+
+
+def build_policy(args):
+    """Construct the ``CollabPolicy`` named by ``--policy`` (or by the
+    deprecated ``--escalation`` alias) from its CLI kwargs."""
+    if args.escalation is not None:
+        if args.policy is not None:
+            raise SystemExit("pass --policy or --escalation, not both")
+        pol = policy_from_legacy(args.escalation, args.threshold)
+        print(f"--escalation is deprecated; use --policy {pol.name}")
+        return pol
+    name = args.policy or "speculative"
+    if name in ("threshold", "speculative", "skeleton"):
+        return make_policy(name, threshold=args.threshold)
+    if name == "cascade":
+        ts = tuple(float(t) for t in args.cascade_thresholds.split(","))
+        return make_policy(name, thresholds=ts)
+    if name == "bandit":
+        return make_policy(name, kind=args.bandit_kind,
+                           cost_weight=args.bandit_cost_weight)
+    return make_policy(name, threshold=args.threshold,   # budget
+                       tokens_per_request=args.budget_tokens)
 
 
 def main():
@@ -57,9 +89,25 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--gamma", type=int, default=4)
-    ap.add_argument("--threshold", type=float, default=0.6)
-    ap.add_argument("--escalation", default="speculative",
-                    choices=["speculative", "cloud", "skeleton"])
+    ap.add_argument("--policy", default=None, choices=sorted(POLICIES),
+                    help="collaboration policy (CollabPolicy); default: "
+                         "speculative")
+    ap.add_argument("--threshold", type=float, default=0.6,
+                    help="uncertainty gate (threshold-family and budget "
+                         "policies)")
+    ap.add_argument("--cascade-thresholds", default="0.45,0.25",
+                    help="comma-separated per-tier acceptance thresholds "
+                         "(cascade policy)")
+    ap.add_argument("--bandit-kind", default="ucb",
+                    choices=["ucb", "linucb"])
+    ap.add_argument("--bandit-cost-weight", type=float, default=0.3,
+                    help="reward = quality - w * cloud-token share")
+    ap.add_argument("--budget-tokens", type=float, default=8.0,
+                    help="cloud tokens accrued per admitted request "
+                         "(budget policy)")
+    ap.add_argument("--escalation", default=None,
+                    choices=["speculative", "cloud", "skeleton"],
+                    help="DEPRECATED: legacy mode name; use --policy")
     ap.add_argument("--scheduler", default="batched",
                     choices=["batched", "per-request"],
                     help="batched continuous-batching scheduler vs the "
@@ -104,11 +152,19 @@ def main():
                for i in range(args.requests)]
     paths = {}
 
+    policy = build_policy(args)
+    if args.scheduler == "per-request" and not isinstance(policy,
+                                                          ThresholdPolicy):
+        # serve_reference is the legacy per-token oracle: it cannot honor
+        # the assign/decide/feedback hooks, so running it would silently
+        # serve speculative@0.6 while reporting this policy's name
+        raise SystemExit(
+            f"--scheduler per-request only honors the threshold-family "
+            f"policies; run --policy {policy.name} on --scheduler batched")
     if args.scheduler == "batched":
         eng = BatchedEngine(edge, cloud, batch_size=args.batch_size,
                             gamma=args.gamma, temperature=0.0,
-                            escalate_threshold=args.threshold,
-                            escalation=args.escalation,
+                            policy=policy,
                             tick_tokens=args.tick_tokens,
                             kv_layout=args.kv_layout,
                             kv_block_size=args.kv_block_size,
@@ -123,9 +179,7 @@ def main():
         stats = eng.stats()
     else:
         eng = CollaborativeEngine(edge, cloud, gamma=args.gamma,
-                                  temperature=0.0,
-                                  escalate_threshold=args.threshold,
-                                  escalation=args.escalation)
+                                  temperature=0.0, policy=policy)
         t0 = time.time()
         for i, prompt in enumerate(prompts):
             tr = eng.serve_reference(ep, cp, prompt, args.max_new)
@@ -139,6 +193,9 @@ def main():
     print(f"\n{args.requests} requests in {dt:.1f}s "
           f"({args.requests / dt:.2f} req/s, {toks / dt:.1f} tok/s); "
           f"paths: {paths}; cache hit rate {stats['cache_hit_rate']:.2f}")
+    print(f"policy: {stats['policy']} "
+          + " ".join(f"{k.removeprefix('policy_')}={v}"
+                     for k, v in stats.items() if k.startswith("policy_")))
     if "kv_peak_bytes" in stats:
         print(f"kv: layout={stats['kv_layout']} "
               f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "

@@ -13,6 +13,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.engine import CollaborativeEngine
+from repro.core.policy import SpeculativePolicy, policy_from_legacy
 from repro.core.paged_cache import TRAP_BLOCK, BlockPool, blocks_for
 from repro.core.scheduler import BatchedEngine
 from repro.models import Model
@@ -125,8 +126,8 @@ def test_paged_edge_parity_staggered(pair):
     prompts = _prompts(edge.cfg.vocab_size,
                        [(8, 0), (6, 3), (10, 5), (7, 11), (5, 2)])
     budgets = [3, 11, 6, 9, 4]
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1))
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1))
     dts = dense.serve_batch(ep, cp, prompts, budgets)
     pts = paged.serve_batch(ep, cp, prompts, budgets)
     for dt, pt in zip(dts, pts):
@@ -143,10 +144,10 @@ def test_paged_escalation_parity(pair, esc):
     becomes a ``pos`` write against block tables."""
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5)])
-    dense = _engine(edge, cloud, "dense", escalate_threshold=-1.0,
-                    escalation=esc, skeleton_len=4)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=-1.0,
-                    escalation=esc, skeleton_len=4)
+    dense = _engine(edge, cloud, "dense", policy=policy_from_legacy(esc, -1.0),
+                    skeleton_len=4)
+    paged = _engine(edge, cloud, "paged", policy=policy_from_legacy(esc, -1.0),
+                    skeleton_len=4)
     dts = dense.serve_batch(ep, cp, prompts, 8)
     pts = paged.serve_batch(ep, cp, prompts, 8)
     for dt, pt in zip(dts, pts):
@@ -160,10 +161,10 @@ def test_paged_mixed_paths_match_reference(pair):
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
     ref = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=0.9915, use_cache=False,
+                              policy=SpeculativePolicy(0.9915), use_cache=False,
                               kv_layout="dense")
     paged = _engine(edge, cloud, "paged", batch_size=4,
-                    escalate_threshold=0.9915, tick_tokens=16)
+                    policy=SpeculativePolicy(0.9915), tick_tokens=16)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     pts = paged.serve_batch(ep, cp, prompts, 8)
     assert [pt.path for pt in pts] == [rt.path for rt in rts]
@@ -176,10 +177,10 @@ def test_paged_deferred_admission_under_small_pool(pair):
     every request still completes with dense-identical tokens."""
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(24, 0), (6, 3), (6, 9), (8, 5)])
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1),
                     batch_size=3)
     # enough for the long prompt + one short neighbour, not three slots
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=3, kv_blocks=8)
     dts = dense.serve_batch(ep, cp, prompts, 6)
     pts = paged.serve_batch(ep, cp, prompts, 6)
@@ -192,7 +193,7 @@ def test_paged_deferred_admission_under_small_pool(pair):
 def test_paged_pool_too_small_raises(pair):
     edge, ep, cloud, cp = pair
     (p,) = _prompts(edge.cfg.vocab_size, [(33, 0)])
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=1, kv_blocks=3)
     with pytest.raises(RuntimeError, match="kv_blocks|pool"):
         paged.serve_batch(ep, cp, [p], 4)
@@ -220,8 +221,8 @@ def test_paged_sliding_window_parity():
     ep = edge.init(jax.random.PRNGKey(0))
     cp = cloud.init(jax.random.PRNGKey(1))
     prompts = _prompts(e_cfg.vocab_size, [(10, 0), (6, 3)])
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1))
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1))
     dts = dense.serve_batch(ep, cp, prompts, 8)
     pts = paged.serve_batch(ep, cp, prompts, 8)
     for dt, pt in zip(dts, pts):
@@ -247,7 +248,7 @@ def test_paged_sliding_window_uses_kernel_path(monkeypatch):
         raise AssertionError("masked gather used on the T=1 decode path")
     monkeypatch.setattr(L, "paged_extend_attention", _boom)
     prompts = _prompts(e_cfg.vocab_size, [(10, 0), (6, 3)])
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1))
     pts = paged.serve_batch(ep, cp, prompts, 8)
     assert all(pt.path == "edge" and len(pt.tokens) == 8 for pt in pts)
 
@@ -267,8 +268,8 @@ def test_prefix_sharing_across_ticks(pair):
     # the long-budget leader keeps the prefix blocks live while the other
     # four rotate through the second slot across later ticks
     budgets = [16, 4, 4, 4, 4]
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1))
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1))
     dts = dense.serve_batch(ep, cp, prompts, budgets)
     pts = paged.serve_batch(ep, cp, prompts, budgets)
     for dt, pt in zip(dts, pts):
@@ -286,8 +287,8 @@ def test_twin_prompts_cow_on_divergent_write(pair):
     tokens."""
     edge, ep, cloud, cp = pair
     (p,) = _prompts(edge.cfg.vocab_size, [(10, 0)])         # 9 entries: partial tail
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1)
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1))
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1))
     dts = dense.serve_batch(ep, cp, [p, p.copy()], 6)
     pts = paged.serve_batch(ep, cp, [p, p.copy()], 6)
     for dt, pt in zip(dts, pts):
@@ -305,9 +306,9 @@ def test_shared_prefix_peak_below_unshared(pair):
     prompts = [np.concatenate([pref,
                                ((np.arange(6) * 5 + o) % v).astype(np.int32)])
                for o in range(6)]
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1),
                     batch_size=3)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=3)
     dts = dense.serve_batch(ep, cp, prompts, 6)
     pts = paged.serve_batch(ep, cp, prompts, 6)
@@ -327,9 +328,9 @@ def test_preemption_under_overcommitted_pool(pair):
     prompts = _prompts(edge.cfg.vocab_size,
                        [(16, 0), (16, 3), (16, 6), (16, 9), (16, 12)])
     per_req = blocks_for(15 + 8, 8)             # blocks per request
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1),
                     batch_size=2)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=2, kv_blocks=per_req + per_req // 2 + 1)
     dts = dense.serve_batch(ep, cp, prompts, 8)
     pts = paged.serve_batch(ep, cp, prompts, 8)
@@ -338,6 +339,44 @@ def test_preemption_under_overcommitted_pool(pair):
         assert pt.tokens == dt.tokens
     s = paged.stats()
     assert s["preemptions"] > 0 and s["kv_swaps"] == s["preemptions"]
+
+
+def test_swap_in_reshares_prompt_blocks(pair):
+    """ROADMAP paged polish: ``swap_in`` re-consults the prefix-block
+    index, so a swapped twin re-SHARES its full prompt blocks (refcount
+    bumps against the resident twin) instead of paying private copies on
+    resume.  Pins the refcounts and the physical block count."""
+    edge, ep, _, _ = pair
+    from repro.core.seq_state import Lane
+    lane = Lane(edge, "entropy", 0.0, layout="paged", block_size=8)
+    st = lane.make_state(ep, 2, 64, num_blocks=16)
+    v = edge.cfg.vocab_size
+    prompt = ((np.arange(17) * 7) % v).astype(np.int32)   # 16 entries: 2 full blocks
+    assert st.admit(0, prompt, 24)
+    assert st.admit(1, prompt, 24)          # twin: shares both prompt blocks
+    st.flush()
+    shared = st.pool.owned(0)[:2]
+    assert st.pool.owned(1)[:2] == shared
+    assert all(st.pool.refcount(blk) == 2 for blk in shared)
+    used_before = st.pool.used
+    handle = st.swap_out(1)
+    assert all(st.pool.refcount(blk) == 1 for blk in shared)
+    assert st.swap_in(1, handle)
+    st.flush()
+    # the resumed twin maps the SAME physical prompt blocks again
+    assert st.pool.owned(1)[:2] == shared
+    assert all(st.pool.refcount(blk) == 2 for blk in shared)
+    assert st.pool.used == used_before      # no private copies paid
+    assert st.stats()["kv_shared_blocks"] == 4      # 2 at admit + 2 at resume
+    # grow past the prompt, swap again: the generated-token block restores
+    # privately and must stay OUT of the prefix index (O(1) purge path)
+    st.prepare_tick([1], np.asarray([0, 8]), 8)
+    h2 = st.swap_out(1)
+    assert st.swap_in(1, h2)
+    st.flush()
+    assert st.pool.owned(1)[:2] == shared
+    gen = st.pool.owned(1)[2]
+    assert gen not in st._indexed
 
 
 def test_cow_reservation_survives_twin_retirement(pair):
@@ -353,9 +392,9 @@ def test_cow_reservation_survives_twin_retirement(pair):
     other = ((np.arange(17) * 5 + 3) % v).astype(np.int32)
     prompts = [twin, twin.copy(), other]
     budgets = [10, 2, 6]
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1),
                     batch_size=3, tick_tokens=2)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=3, tick_tokens=2, kv_blocks=6)
     dts = dense.serve_batch(ep, cp, prompts, budgets)
     pts = paged.serve_batch(ep, cp, prompts, budgets)
@@ -373,10 +412,10 @@ def test_giant_prompt_cannot_starve(pair):
     v = edge.cfg.vocab_size
     prompts = _prompts(v, [(8, 0), (8, 3), (40, 5), (8, 9)])
     budgets = [12, 12, 4, 6]
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1),
                     batch_size=3)
     # pool fits the giant + one small neighbour, not the giant + two
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=3, kv_blocks=blocks_for(39 + 4, 8) + 4)
     dts = dense.serve_batch(ep, cp, prompts, budgets)
     pts = paged.serve_batch(ep, cp, prompts, budgets)
@@ -393,9 +432,9 @@ def test_paged_peak_bytes_below_dense_on_skewed_mix(pair):
     edge, ep, cloud, cp = pair
     v = edge.cfg.vocab_size
     prompts = _prompts(v, [(8, 0), (8, 3), (8, 6), (32, 1), (8, 9), (8, 4)])
-    dense = _engine(edge, cloud, "dense", escalate_threshold=1.1,
+    dense = _engine(edge, cloud, "dense", policy=SpeculativePolicy(1.1),
                     batch_size=3)
-    paged = _engine(edge, cloud, "paged", escalate_threshold=1.1,
+    paged = _engine(edge, cloud, "paged", policy=SpeculativePolicy(1.1),
                     batch_size=3)
     dts = dense.serve_batch(ep, cp, prompts, 6)
     pts = paged.serve_batch(ep, cp, prompts, 6)
@@ -414,7 +453,7 @@ def test_intra_batch_dedup_regression(pair):
     edge, ep, cloud, cp = pair
     (p,) = _prompts(edge.cfg.vocab_size, [(8, 0)])
     be = BatchedEngine(edge, cloud, batch_size=4, temperature=0.0,
-                       escalate_threshold=1.1, cache_threshold=0.99,
+                       policy=SpeculativePolicy(1.1), cache_threshold=0.99,
                        tick_tokens=4)
     t1, t2, t3 = be.serve_batch(ep, cp, [p, p.copy(), p.copy()], 8)
     assert t1.path == "edge"
@@ -428,7 +467,7 @@ def test_dedup_distinct_prompts_not_coalesced(pair):
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (8, 11)])
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=1.1, cache_threshold=0.999,
+                       policy=SpeculativePolicy(1.1), cache_threshold=0.999,
                        tick_tokens=4)
     t1, t2 = be.serve_batch(ep, cp, prompts, 8)
     assert t1.path == "edge" and t2.path == "edge"
@@ -442,7 +481,7 @@ def test_dedup_follower_waits_for_inflight_leader(pair):
     (p,) = _prompts(edge.cfg.vocab_size, [(8, 0)])
     q = _prompts(edge.cfg.vocab_size, [(6, 5)])[0]
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=1.1, cache_threshold=0.99,
+                       policy=SpeculativePolicy(1.1), cache_threshold=0.99,
                        tick_tokens=2)
     t1, t2, t3 = be.serve_batch(ep, cp, [p, q, p.copy()], [12, 2, 4])
     assert t1.path == "edge" and t2.path == "edge"

@@ -1,0 +1,408 @@
+"""CollabPolicy API: the pluggable task-assignment / task-division /
+mixture-policy surface over the batched scheduler (survey taxonomy as the
+policy axis orthogonal to execution).
+
+Covers: the deprecation shim (legacy ``escalation=``/``escalate_threshold=``
+kwargs warn and produce byte-identical tokens vs the policy-object
+spelling), admission-lane task assignment, per-wave mixed actions (which
+the legacy string API could not express), and the routing-layer bandits /
+cascade exercised THROUGH the policy hooks rather than in isolation.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import CollaborativeEngine
+from repro.core.policy import (ACTIONS, BanditPolicy, BudgetPolicy,
+                               CascadePolicy, CollabPolicy, SkeletonPolicy,
+                               SpeculativePolicy, ThresholdPolicy,
+                               cloud_tokens, make_policy,
+                               policy_from_legacy, trace_quality)
+from repro.core.scheduler import BatchedEngine
+from repro.core.speculative import autoregressive_baseline
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, specs):
+    return [((np.arange(n) * 7 + off) % vocab).astype(np.int32)
+            for n, off in specs]
+
+
+# ---------------------------------------------------------------- shim
+@pytest.mark.parametrize("esc", ["speculative", "cloud", "skeleton"])
+def test_legacy_kwargs_warn_and_match_policy_spelling(pair, esc):
+    """``escalation=``/``escalate_threshold=`` still construct the matching
+    policy, emit ``DeprecationWarning``, and produce byte-identical tokens
+    vs the policy-object spelling."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3)])
+    with pytest.warns(DeprecationWarning):
+        old = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                            escalation=esc, escalate_threshold=-1.0,
+                            use_cache=False, skeleton_len=4, tick_tokens=4)
+    assert type(old.policy) is type(policy_from_legacy(esc, 0.0))
+    new = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                        policy=policy_from_legacy(esc, -1.0), use_cache=False,
+                        skeleton_len=4, tick_tokens=4)
+    ots = old.serve_batch(ep, cp, prompts, 8)
+    nts = new.serve_batch(ep, cp, prompts, 8)
+    for ot, nt in zip(ots, nts):
+        assert ot.path == nt.path == esc
+        assert ot.tokens == nt.tokens
+
+
+def test_legacy_kwargs_and_policy_mutually_exclusive(pair):
+    edge, _, cloud, _ = pair
+    with pytest.raises(ValueError, match="not both"):
+        BatchedEngine(edge, cloud, policy=SpeculativePolicy(0.5),
+                      escalate_threshold=0.5)
+    with pytest.raises(ValueError, match="unknown escalation mode"):
+        with pytest.warns(DeprecationWarning):
+            BatchedEngine(edge, cloud, escalation="nope")
+
+
+def test_collaborative_engine_shim_warns(pair):
+    edge, _, cloud, _ = pair
+    with pytest.warns(DeprecationWarning):
+        eng = CollaborativeEngine(edge, cloud, escalation="skeleton",
+                                  escalate_threshold=0.3)
+    assert type(eng.policy) is SkeletonPolicy
+    assert eng.threshold == 0.3 and eng.escalation == "skeleton"
+    # defaults stay warning-free and keep the historical behavior
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng2 = CollaborativeEngine(edge, cloud)
+    assert type(eng2.policy) is SpeculativePolicy
+    assert eng2.policy.threshold == 0.6
+
+
+def test_make_policy_names():
+    assert type(make_policy("threshold", threshold=0.4)) is ThresholdPolicy
+    assert type(make_policy("bandit", kind="ucb")) is BanditPolicy
+    with pytest.raises(KeyError):
+        make_policy("nope")
+
+
+# ---------------------------------------------------------------- lanes
+class _PinnedLane(CollabPolicy):
+    """Test policy: pin every request to one admission lane."""
+
+    name = "pinned"
+
+    def __init__(self, lane):
+        self.lane = lane
+        self.decides = 0
+
+    def assign(self, features):
+        return self.lane
+
+    def decide(self, unc, steps, budget):
+        self.decides += 1
+        # deliberately escalate: an "edge"-assigned request must bypass this
+        return ["cloud"] * len(np.reshape(unc, (-1,)))
+
+
+def test_assign_cloud_lane_skips_edge(pair):
+    """Cloud-lane task assignment at admission: no edge decode, output is
+    cloud-greedy exactly."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5)])
+    pol = _PinnedLane("cloud")
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=pol, use_cache=False, tick_tokens=4)
+    bts = be.serve_batch(ep, cp, prompts, 6)
+    for p, bt in zip(prompts, bts):
+        assert bt.path == "cloud" and bt.edge_calls == 0
+        assert bt.tokens == autoregressive_baseline(cloud, cp, p, 6,
+                                                    temperature=0.0)
+    assert pol.decides == 0                 # nothing reached retirement
+
+
+def test_assign_edge_lane_forces_accept(pair):
+    """Edge-lane assignment accepts the SLM output unconditionally — the
+    decide hook (which would escalate everything) is bypassed."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3)])
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              policy=ThresholdPolicy(1.1), use_cache=False)
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=_PinnedLane("edge"), use_cache=False,
+                       tick_tokens=4)
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for p, bt in zip(prompts, bts):
+        rt = ref.serve_reference(ep, cp, p, 8)
+        assert bt.path == "edge"
+        assert bt.tokens == rt.tokens
+
+
+def test_assign_cloud_lane_twins_coalesce(pair):
+    """Identical prompts in one admission wave coalesce even on the cloud
+    lane: the first is the leader's single grouped cloud generation, the
+    twin is served from it (no second cloud pass)."""
+    edge, ep, cloud, cp = pair
+    p = _prompts(edge.cfg.vocab_size, [(8, 0)])[0]
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=_PinnedLane("cloud"), cache_threshold=0.99,
+                       tick_tokens=4)
+    t1, t2 = be.serve_batch(ep, cp, [p, p.copy()], 6)
+    assert t1.path == "cloud" and t2.path == "cache"
+    assert t2.tokens == t1.tokens
+
+
+def test_bandit_ignores_lane_assigned_feedback():
+    """Feedback for a completion that never went through ``decide`` (a
+    lane-assigned request) must not consume a pending pull or move the
+    arm estimates."""
+    pol = BanditPolicy(arms=("accept", "cloud"), kind="ucb")
+    [a] = pol.decide([0.5], [8], [8])
+    pol.feedback("accept", 1.0, 0.0, {"budget": 8, "lane": "edge"})
+    assert pol.router.n.sum() == 0          # no reward landed
+    assert pol._pending.sum() == 1          # the real pull still pending
+    pol.feedback(a, 1.0, 0.0, {"budget": 8, "lane": "collab"})
+    assert pol.router.n.sum() == 1 and pol._pending.sum() == 0
+
+
+def test_serve_reference_keeps_defaults_for_non_threshold_policies(pair):
+    """The per-token reference loop cannot honor budget/bandit hooks; a
+    non-threshold policy must leave it on the historical defaults instead
+    of duck-typing the policy's unrelated threshold/action attributes —
+    and calling it must WARN rather than silently misattribute."""
+    edge, ep, cloud, cp = pair
+    eng = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              use_cache=False,
+                              policy=BudgetPolicy(threshold=-1.0,
+                                                  tokens_per_request=0.0))
+    assert eng.threshold == 0.6 and eng.escalation == "speculative"
+    with pytest.warns(RuntimeWarning, match="cannot honor"):
+        eng.serve_reference(ep, cp,
+                            _prompts(edge.cfg.vocab_size, [(8, 0)])[0], 4)
+
+
+class _Alternating(CollabPolicy):
+    """Test policy: one wave mixing per-request actions — something the
+    legacy single-mode string API could not express."""
+
+    name = "alternating"
+
+    def decide(self, unc, steps, budget):
+        n = len(np.reshape(unc, (-1,)))
+        return [("cloud" if i % 2 == 0 else "skeleton") for i in range(n)]
+
+
+def test_mixed_actions_in_one_wave(pair):
+    """A single retirement wave splits into per-action groups; each request
+    matches the reference engine running that mode alone."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
+    be = BatchedEngine(edge, cloud, batch_size=4, temperature=0.0,
+                       policy=_Alternating(), use_cache=False,
+                       skeleton_len=4, tick_tokens=16)
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for i, (p, bt) in enumerate(zip(prompts, bts)):
+        esc = "cloud" if i % 2 == 0 else "skeleton"
+        ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                                  policy=policy_from_legacy(esc, -1.0), use_cache=False,
+                                  skeleton_len=4)
+        rt = ref.serve_reference(ep, cp, p, 8)
+        assert bt.path == rt.path == esc
+        assert bt.tokens == rt.tokens
+
+
+def test_assign_called_once_per_request_even_when_deferred(pair):
+    """The scheduler invokes ``assign`` exactly once per request — a
+    request deferred by pool pressure keeps its lane instead of being
+    re-assigned every retry tick (stateful policies must not see phantom
+    duplicates)."""
+    edge, ep, cloud, cp = pair
+    calls = []
+
+    class Counting(CollabPolicy):
+        name = "counting"
+
+        def assign(self, features):
+            calls.append(features["rid"])
+            return "collab"
+
+        def decide(self, unc, steps, budget):
+            return ["accept"] * len(np.reshape(unc, (-1,)))
+
+    prompts = _prompts(edge.cfg.vocab_size, [(17, 0), (17, 3)])
+    # 4-usable-block pool: request 0 admits (2 blocks + 1 reserve), the
+    # same-wave request 1 cannot (its victim is wave-exempt) and defers
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=Counting(), use_cache=False, tick_tokens=4,
+                       kv_layout="paged", kv_block_size=8, kv_blocks=5)
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    assert all(bt.path == "edge" and len(bt.tokens) == 8 for bt in bts)
+    assert sorted(calls) == [0, 1]          # once each, deferral included
+
+
+def test_unknown_action_rejected(pair):
+    edge, ep, cloud, cp = pair
+
+    class Bad(CollabPolicy):
+        def decide(self, unc, steps, budget):
+            return ["teleport"] * len(np.reshape(unc, (-1,)))
+
+    be = BatchedEngine(edge, cloud, batch_size=1, temperature=0.0,
+                       policy=Bad(), use_cache=False, tick_tokens=4)
+    with pytest.raises(ValueError, match="unknown action"):
+        be.serve_batch(ep, cp, _prompts(edge.cfg.vocab_size, [(8, 0)]), 4)
+
+
+# ---------------------------------------------------------------- cascade
+def test_cascade_respects_cost_ordering():
+    """The cascade never takes a costlier tier while a cheaper one is
+    confident, pays tier costs cumulatively in cost order, and rejects a
+    non-ascending cost vector outright — exercised through
+    ``CascadePolicy`` driving ``CascadeRouter.route``."""
+    pol = CascadePolicy(thresholds=(0.3, 0.25), costs=(0.0, 1.0, 4.0),
+                        relief=0.5)
+    acts = pol.decide([0.1, 0.45, 0.6], [8, 8, 8], [8, 8, 8])
+    assert acts == ["accept", "speculative", "cloud"]
+    # cumulative spend: 0 (tier 0) + 0+1 (tier 1) + 0+1+4 (tier 2)
+    assert pol.stats()["policy_cascade_cost"] == 6.0
+    assert pol.stats()["policy_tier_counts"] == {"accept": 1,
+                                                 "speculative": 1, "cloud": 1}
+    # actions are monotone in uncertainty: sweeping u upward never falls
+    # back to a cheaper tier
+    sweep = CascadePolicy(thresholds=(0.3, 0.25), costs=(0.0, 1.0, 4.0),
+                          relief=0.5)
+    order = {a: i for i, a in enumerate(sweep.tiers)}
+    picked = sweep.decide(np.linspace(0.0, 1.0, 21), [8] * 21, [8] * 21)
+    idxs = [order[a] for a in picked]
+    assert idxs == sorted(idxs)
+    # the DEFAULT configuration keeps every tier reachable on [0, 1]
+    dflt = CascadePolicy()
+    assert dflt.decide([0.2, 0.6, 0.9], [8] * 3, [8] * 3) == \
+        ["accept", "speculative", "cloud"]
+    with pytest.raises(ValueError, match="cost-ordered"):
+        CascadePolicy(thresholds=(0.3, 0.25), costs=(0.0, 4.0, 1.0))
+
+
+# ---------------------------------------------------------------- bandits
+QUAL = {"accept": 0.9, "speculative": 0.6, "cloud": 0.3}
+
+
+def test_ucb_regret_shrinks_via_feedback():
+    """UCB routing through ``BanditPolicy.decide``/``feedback`` under
+    stationary rewards: per-step regret shrinks as the best arm (accept,
+    here the highest stationary quality at zero cost) takes over."""
+    pol = BanditPolicy(arms=tuple(QUAL), kind="ucb", cost_weight=0.0, c=0.8)
+    rng = np.random.default_rng(0)
+    chosen = []
+    for _ in range(600):
+        [a] = pol.decide([0.5], [8], [8])
+        pol.feedback(a, QUAL[a] + rng.normal(0.0, 0.05), 0.0, {"budget": 8})
+        chosen.append(a)
+    assert pol.router.n.sum() == 600        # every pull got its reward
+    regret = np.cumsum([QUAL["accept"] - QUAL[a] for a in chosen])
+    assert regret[-1] / 600 < 0.5 * (regret[59] / 60)
+    assert max(pol.stats()["policy_pulls"],
+               key=pol.stats()["policy_pulls"].get) == "accept"
+
+
+def test_ucb_cold_start_round_robins_within_a_wave():
+    """One big wave decided before any feedback lands must spread pulls
+    round-robin over the arms (outstanding pulls count), not pile onto
+    arm 0."""
+    for kind in ("ucb", "linucb"):
+        pol = BanditPolicy(arms=("accept", "speculative", "cloud"),
+                           kind=kind)
+        acts = pol.decide([0.5] * 7, [8] * 7, [8] * 7)
+        assert set(acts[:3]) == {"accept", "speculative", "cloud"}, kind
+        counts = {a: acts.count(a) for a in pol.arms}
+        assert max(counts.values()) - min(counts.values()) <= 1, kind
+
+
+def test_linucb_routes_on_context_via_feedback():
+    """LinUCB learns a context-dependent routing — accept easy (low-unc)
+    requests, cloud-escalate hard ones — purely from the feedback loop."""
+    pol = BanditPolicy(arms=("accept", "cloud"), kind="linucb",
+                       cost_weight=0.0, alpha=0.3)
+    rng = np.random.default_rng(0)
+    for _ in range(400):
+        u = 0.1 if rng.uniform() < 0.5 else 0.9
+        [a] = pol.decide([u], [8], [8])
+        good = "accept" if u < 0.5 else "cloud"
+        pol.feedback(a, 1.0 if a == good else 0.0, 0.0,
+                     {"unc": u, "steps": 8, "budget": 8})
+    assert pol.decide([0.1], [8], [8]) == ["accept"]
+    assert pol.decide([0.9], [8], [8]) == ["cloud"]
+
+
+def test_bandit_closes_loop_through_engine(pair):
+    """End-to-end: ``BanditPolicy`` serves real traffic through the
+    scheduler, every completion lands a reward, all arms are real paths."""
+    edge, ep, cloud, cp = pair
+    pol = BanditPolicy(arms=("accept", "cloud"), kind="ucb",
+                       cost_weight=2.0, c=0.05)
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=pol, use_cache=False, tick_tokens=4)
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
+    bts = be.serve_batch(ep, cp, prompts, 6)
+    assert all(bt.path in ("edge", "cloud") for bt in bts)
+    assert int(pol.router.n.sum()) == len(prompts)
+    assert be.stats()["policy"] == "bandit"
+    assert sum(be.stats()["policy_pulls"].values()) == len(prompts)
+
+
+# ---------------------------------------------------------------- budget
+def test_budget_policy_degrades_when_spent():
+    """Per-request cloud-token budgeting: escalations are granted while the
+    accrued pool covers them, then DEGRADE to edge-accept; feedback
+    reconciles the reserved estimate against the realized spend."""
+    pol = BudgetPolicy(threshold=0.5, tokens_per_request=4.0)
+    for rid in range(4):
+        assert pol.assign({"rid": rid, "max_new": 8}) == "collab"
+    assert pol.stats()["policy_cloud_pool"] == 16.0  # one accrual each
+    acts = pol.decide([0.9, 0.9, 0.9, 0.9], [8] * 4, [8] * 4)
+    assert acts == ["cloud", "cloud", "accept", "accept"]
+    assert pol.stats()["policy_degraded"] == 2
+    pol.feedback("cloud", 1.0, 6.0, {"budget": 8, "rid": 0})
+    assert pol.stats()["policy_cloud_pool"] == 2.0   # spent less than est
+    pol.feedback("cloud", 1.0, 8.0)     # no features: reservation stands
+    assert pol.stats()["policy_cloud_pool"] == 2.0   # no double charge
+    confident = pol.decide([0.1], [8], [8])          # under threshold
+    assert confident == ["accept"] and pol.stats()["policy_degraded"] == 2
+
+
+def test_budget_policy_sla_classes():
+    """SLA classes scale each request's accrual; the classifier sees the
+    admission feature dict."""
+    pol = BudgetPolicy(threshold=0.5, tokens_per_request=4.0,
+                       sla={"premium": 2.0, "batch": 0.0},
+                       classify=lambda f: "premium" if f["max_new"] > 8
+                       else "batch")
+    pol.assign({"rid": 0, "max_new": 16})
+    pol.assign({"rid": 1, "max_new": 4})
+    s = pol.stats()
+    assert s["policy_cloud_pool"] == 8.0
+    assert s["policy_sla_classes"] == {"premium": 1, "batch": 1}
+
+
+# ---------------------------------------------------------------- metrics
+def test_trace_metrics_helpers():
+    from repro.core.scheduler import RequestTrace
+    spec = RequestTrace("speculative", cloud_passes=3, uncertainty=0.4)
+    assert cloud_tokens(spec, gamma=4) == 15
+    assert trace_quality(spec, 8) == 1.0
+    edge = RequestTrace("edge", uncertainty=0.3)
+    assert cloud_tokens(edge, gamma=4) == 0
+    assert abs(trace_quality(edge, 8) - 0.7) < 1e-9
+    skel = RequestTrace("skeleton", cloud_passes=4, uncertainty=0.5)
+    assert cloud_tokens(skel, gamma=4) == 4
+    assert abs(trace_quality(skel, 8) - (0.5 + 0.5 * 0.5)) < 1e-9
+    assert set(ACTIONS) == {"accept", "cloud", "skeleton", "speculative"}

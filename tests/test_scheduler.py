@@ -14,6 +14,8 @@ import pytest
 from repro.configs import get_config
 from repro.core.cache import SemanticCache
 from repro.core.engine import CollaborativeEngine
+from repro.core.policy import (SpeculativePolicy, ThresholdPolicy,
+                               policy_from_legacy)
 from repro.core.scheduler import BatchedEngine, stack_slot_caches, write_slot
 from repro.core.speculative import autoregressive_baseline
 from repro.core.uncertainty import get_batched_estimator
@@ -44,9 +46,9 @@ def test_edge_token_parity_with_reference(pair):
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
     ref = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=1.1, use_cache=False)
+                              policy=ThresholdPolicy(1.1), use_cache=False)
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=1.1, use_cache=False,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
                        tick_tokens=4)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 8)
@@ -65,9 +67,9 @@ def test_staggered_budgets_admit_retire(pair):
     prompts = _prompts(edge.cfg.vocab_size, specs)
     budgets = [3, 11, 6, 9, 4]
     ref = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=1.1, use_cache=False)
+                              policy=ThresholdPolicy(1.1), use_cache=False)
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=1.1, use_cache=False,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
                        tick_tokens=4)
     bts = be.serve_batch(ep, cp, prompts, budgets)
     for p, m, bt in zip(prompts, budgets, bts):
@@ -84,10 +86,10 @@ def test_escalation_parity_with_reference(pair, esc):
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5)])
     ref = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=-1.0, escalation=esc,
+                              policy=policy_from_legacy(esc, -1.0),
                               use_cache=False, skeleton_len=4)
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=-1.0, escalation=esc,
+                       policy=policy_from_legacy(esc, -1.0),
                        use_cache=False, skeleton_len=4, tick_tokens=4)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 8)
@@ -102,7 +104,7 @@ def test_speculative_escalation_lossless_batched(pair):
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3)])
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=-1.0, use_cache=False)
+                       policy=SpeculativePolicy(-1.0), use_cache=False)
     bts = be.serve_batch(ep, cp, prompts, 8)
     for p, bt in zip(prompts, bts):
         base = autoregressive_baseline(cloud, cp, p, 8, temperature=0.0)
@@ -116,9 +118,9 @@ def test_mixed_paths_one_batch(pair):
     edge, ep, cloud, cp = pair
     prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5), (7, 11)])
     ref = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=0.9915, use_cache=False)
+                              policy=SpeculativePolicy(0.9915), use_cache=False)
     be = BatchedEngine(edge, cloud, batch_size=4, temperature=0.0,
-                       escalate_threshold=0.9915, use_cache=False)
+                       policy=SpeculativePolicy(0.9915), use_cache=False)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 8)
     assert [bt.path for bt in bts] == [rt.path for rt in rts]
@@ -130,7 +132,7 @@ def test_mixed_paths_one_batch(pair):
 def test_cache_hit_path(pair):
     edge, ep, cloud, cp = pair
     be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
-                       escalate_threshold=1.1, cache_threshold=0.99)
+                       policy=ThresholdPolicy(1.1), cache_threshold=0.99)
     p = _prompts(edge.cfg.vocab_size, [(8, 0)])[0]
     t1 = be.serve_batch(ep, cp, [p], 8)[0]
     t2 = be.serve_batch(ep, cp, [p], 8)[0]

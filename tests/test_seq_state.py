@@ -16,6 +16,8 @@ import pytest
 from repro.core import speculative as spec_mod
 from repro.configs import get_config
 from repro.core.engine import CollaborativeEngine
+from repro.core.policy import (SpeculativePolicy, ThresholdPolicy,
+                               policy_from_legacy)
 from repro.core.scheduler import BatchedEngine
 from repro.core.seq_state import layout_for
 from repro.core.speculative import autoregressive_baseline
@@ -80,9 +82,9 @@ def test_recurrent_edge_parity_staggered(fam, edges, cloud):
     prompts = _prompts(512, [(8, 0), (6, 3), (9, 7), (5, 2)])
     budgets = [3, 9, 6, 8]
     ref = CollaborativeEngine(em, cm, temperature=0.0,
-                              escalate_threshold=1.1, use_cache=False)
+                              policy=ThresholdPolicy(1.1), use_cache=False)
     be = BatchedEngine(em, cm, batch_size=2, temperature=0.0,
-                       escalate_threshold=1.1, use_cache=False,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
                        tick_tokens=4)
     bts = be.serve_batch(ep, cp, prompts, budgets)
     for p, m, bt in zip(prompts, budgets, bts):
@@ -101,10 +103,10 @@ def test_recurrent_escalation_parity(esc, edges, cloud):
     cm, cp = cloud
     prompts = _prompts(512, [(8, 0), (6, 3), (10, 5)])
     ref = CollaborativeEngine(em, cm, temperature=0.0,
-                              escalate_threshold=-1.0, escalation=esc,
+                              policy=policy_from_legacy(esc, -1.0),
                               use_cache=False, skeleton_len=4)
     be = BatchedEngine(em, cm, batch_size=2, temperature=0.0,
-                       escalate_threshold=-1.0, escalation=esc,
+                       policy=policy_from_legacy(esc, -1.0),
                        use_cache=False, skeleton_len=4, tick_tokens=4)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 8)
@@ -123,9 +125,9 @@ def test_all_family_speculative_parity(fam, edges, cloud):
     cm, cp = cloud
     prompts = _prompts(512, [(8, 0), (6, 3)])
     ref = CollaborativeEngine(em, cm, gamma=3, temperature=0.0,
-                              escalate_threshold=-1.0, use_cache=False)
+                              policy=SpeculativePolicy(-1.0), use_cache=False)
     be = BatchedEngine(em, cm, batch_size=2, gamma=3, temperature=0.0,
-                       escalate_threshold=-1.0, use_cache=False,
+                       policy=SpeculativePolicy(-1.0), use_cache=False,
                        tick_tokens=4)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 8)
@@ -142,7 +144,7 @@ def test_recurrent_speculation_lossless(fam, edges, cloud):
     cm, cp = cloud
     prompts = _prompts(512, [(8, 0), (6, 3)])
     be = BatchedEngine(em, cm, batch_size=2, temperature=0.0,
-                       escalate_threshold=-1.0, use_cache=False)
+                       policy=SpeculativePolicy(-1.0), use_cache=False)
     bts = be.serve_batch(ep, cp, prompts, 8)
     for p, bt in zip(prompts, bts):
         base = autoregressive_baseline(cm, cp, p, 8, temperature=0.0)
@@ -156,9 +158,9 @@ def test_recurrent_cloud_side_replay(edges, cloud):
     cm, cp = edges["hybrid"]
     prompts = _prompts(512, [(8, 0), (6, 3)])
     ref = CollaborativeEngine(em, cm, temperature=0.0,
-                              escalate_threshold=-1.0, use_cache=False)
+                              policy=SpeculativePolicy(-1.0), use_cache=False)
     be = BatchedEngine(em, cm, batch_size=2, temperature=0.0,
-                       escalate_threshold=-1.0, use_cache=False)
+                       policy=SpeculativePolicy(-1.0), use_cache=False)
     rts = [ref.serve_reference(ep, cp, p, 6) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 6)
     for rt, bt in zip(rts, bts):
@@ -176,7 +178,7 @@ def test_no_per_request_snapshot_replay(edges, cloud, monkeypatch):
     cm, cp = cloud
     prompts = _prompts(512, [(8, 0), (6, 3)])
     be = BatchedEngine(em, cm, batch_size=2, temperature=0.0,
-                       escalate_threshold=-1.0, use_cache=False)
+                       policy=SpeculativePolicy(-1.0), use_cache=False)
     bts = be.serve_batch(ep, cp, prompts, 6)
     assert all(bt.path == "speculative" and len(bt.tokens) == 6
                for bt in bts)
@@ -226,9 +228,9 @@ def test_cow_shared_prefix_spec_rewind_parity(layout, edges, cloud):
                                .astype(np.int32)]) for o in range(2)]
     prompts.append(prompts[0].copy())           # exact twin: partial tail
     ref = CollaborativeEngine(em, cm, gamma=3, temperature=0.0,
-                              escalate_threshold=-1.0, use_cache=False)
+                              policy=SpeculativePolicy(-1.0), use_cache=False)
     be = BatchedEngine(em, cm, batch_size=3, gamma=3, temperature=0.0,
-                       escalate_threshold=-1.0, use_cache=False,
+                       policy=SpeculativePolicy(-1.0), use_cache=False,
                        tick_tokens=4, kv_layout=layout, kv_block_size=8)
     rts = [ref.serve_reference(ep, cp, p, 8) for p in prompts]
     bts = be.serve_batch(ep, cp, prompts, 8)

@@ -13,6 +13,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.engine import CollaborativeEngine
+from repro.core.policy import SkeletonPolicy, SpeculativePolicy
 from repro.core.speculative import autoregressive_baseline
 from repro.models import Model
 
@@ -32,7 +33,7 @@ def pair():
 def test_engine_edge_path(pair):
     edge, ep, cloud, cp = pair
     eng = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=1.1)   # never escalate
+                              policy=SpeculativePolicy(1.1))
     prompt = np.arange(8) % edge.cfg.vocab_size
     tr = eng.serve(ep, cp, prompt, 8)
     assert tr.path == "edge"
@@ -42,7 +43,7 @@ def test_engine_edge_path(pair):
 def test_engine_speculative_escalation_lossless(pair):
     edge, ep, cloud, cp = pair
     eng = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=-1.0,  # always escalate
+                              policy=SpeculativePolicy(-1.0),
                               use_cache=False)
     prompt = np.arange(8) % edge.cfg.vocab_size
     tr = eng.serve(ep, cp, prompt, 8)
@@ -54,7 +55,7 @@ def test_engine_speculative_escalation_lossless(pair):
 def test_engine_cache_hit(pair):
     edge, ep, cloud, cp = pair
     eng = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=1.1, cache_threshold=0.99)
+                              policy=SpeculativePolicy(1.1), cache_threshold=0.99)
     prompt = np.arange(8) % edge.cfg.vocab_size
     t1 = eng.serve(ep, cp, prompt, 8)
     t2 = eng.serve(ep, cp, prompt, 8)
@@ -65,7 +66,7 @@ def test_engine_cache_hit(pair):
 def test_engine_skeleton_path(pair):
     edge, ep, cloud, cp = pair
     eng = CollaborativeEngine(edge, cloud, temperature=0.0,
-                              escalate_threshold=-1.0, escalation="skeleton",
+                              policy=SkeletonPolicy(-1.0),
                               use_cache=False, skeleton_len=4)
     prompt = np.arange(8) % edge.cfg.vocab_size
     tr = eng.serve(ep, cp, prompt, 8)
