@@ -11,16 +11,22 @@ the collaboration-decision surface into a pluggable protocol,
     request to ``"edge"`` (edge-only, accept whatever the SLM produces),
     ``"cloud"`` (cloud-only, skip the edge decode entirely), or
     ``"collab"`` (edge-first with a retirement-time decision).  ``features``
-    carries prompt features and live load stats (see ``BatchedEngine``).
+    carries prompt features, live load stats, and REAL deadline state from
+    the scheduler's open-loop clock — ``at_ms`` / ``now_ms`` / ``wait_ms``
+    (time already spent queueing) / ``slo_ms`` — so SLA-aware policies
+    classify against actual latency pressure, not proxies (see
+    ``BatchedEngine`` and ``deadline_classifier``).
   * ``decide(unc, steps, budget) -> actions`` per RETIREMENT WAVE (task- /
     token-granular escalation choice), VECTORIZED over the wave: per
     retiring request, ``"accept"`` the edge output, ``"cloud"``-regenerate
     (task assignment), ``"skeleton"``-divide (cloud plans a prefix, edge
     completes — task division), or ``"speculative"``-verify (token-level
     mixture).  Inputs are aligned arrays: normalized mean uncertainty,
-    edge decode steps spent, and the generation budget.
+    edge decode steps ACTUALLY spent (a stop-token hit retires a request
+    early, so ``steps`` can be < ``budget``), and the generation budget.
   * ``feedback(action, quality, cost, features)`` after COMPLETION: the
     realized quality proxy and cloud-token cost of each finished request,
+    plus the realized latencies (``ttft_ms`` / ``e2e_ms`` / ``slo_met``),
     closing the online-learning loop for bandit/budget policies.
 
 Policies are host-side control plane (NumPy) exactly like the routers in
@@ -307,6 +313,11 @@ class BudgetPolicy(CollabPolicy):
     escalation can overdraw slightly — the pool carries the debt).
     Accrual relies on the scheduler's contract that ``assign`` runs once
     per request.
+
+    ``classify`` maps the admission feature dict to an SLA class name; the
+    scheduler feeds it REAL deadline state (``wait_ms`` / ``slo_ms`` from
+    the open-loop clock), so ``deadline_classifier`` builds the common
+    case: class by fraction of the TTFT SLO already burned queueing.
     """
 
     name = "budget"
@@ -361,6 +372,33 @@ class BudgetPolicy(CollabPolicy):
                 "policy_granted": self._granted,
                 "policy_degraded": self._degraded,
                 "policy_sla_classes": dict(self._class_counts)}
+
+
+def deadline_classifier(boundaries: Dict[str, float]
+                        ) -> Callable[[Dict[str, Any]], str]:
+    """Build a ``BudgetPolicy`` SLA classifier keyed on REAL deadline
+    pressure: ``boundaries`` maps class name -> max fraction of the TTFT
+    SLO a request may already have burned queueing (``wait_ms / slo_ms``
+    from the scheduler's open-loop clock) and the first boundary that
+    covers the request wins, e.g. ``{"relaxed": 0.25, "standard": 0.5,
+    "urgent": float("inf")}``.  With no SLO configured (or in closed-loop
+    runs where ``wait_ms`` is 0) every request lands in the first class —
+    the deadline feed degrades gracefully to the legacy behavior."""
+    if not boundaries:
+        raise ValueError("boundaries must name at least one SLA class")
+    ordered = sorted(boundaries.items(), key=lambda kv: kv[1])
+
+    def classify(feats: Dict[str, Any]) -> str:
+        slo, wait = feats.get("slo_ms"), feats.get("wait_ms")
+        if not slo or wait is None:
+            return ordered[0][0]
+        frac = float(wait) / float(slo)
+        for name, bound in ordered:
+            if frac <= bound:
+                return name
+        return ordered[-1][0]
+
+    return classify
 
 
 # ---------------------------------------------------------------- factories

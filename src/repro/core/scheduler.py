@@ -16,9 +16,25 @@ tokens) but executes them slot-based and batched:
     fixed-size recurrent state (ssm / xlstm / hybrid).  The scheduler calls
     ``admit / flush / prepare_tick / retire`` and reads ``peak_bytes``; it
     never branches on layout or family itself.
-  * PREFILL on admission: the exact-length prompt is prefilled once
-    (jit-cached per prompt length) and written into the slot in one
-    batched scatter per admission wave.
+  * PREFILL on admission is LENGTH-BUCKETED and, past a threshold,
+    CHUNKED.  Short prompts prefill in one shot, their token count padded
+    to a pow2 bucket (bit-exact on KV layouts — masked scores are exactly
+    zero — and jit-cached per bucket, not per distinct length); prompts
+    longer than ``prefill_chunk`` entries (default: ``tick_tokens``)
+    prefill ONE chunk per tick into a detached cache
+    (``Lane.start_prefill`` / ``advance_prefill``) interleaved with the
+    batch's decode ticks, then land through ``SequenceState.finalize`` —
+    a long prompt no longer stalls every in-flight slot behind a
+    monolithic prefill.  Either way the finished cache reaches the slot
+    in one batched scatter per wave.
+  * OPEN-LOOP TRAFFIC + LATENCY (``core/traffic.py``): ``submit(at=...)``
+    gives every request an arrival time; admission only considers arrived
+    requests, and the engine's clock (virtual by default — deterministic
+    modeled ms; ``WallClock`` for real time) advances with decode steps
+    and prefill chunks.  Per-request lifecycle events (submit / admit /
+    first-token / retire, swap + defer counts) are stamped tick-granular
+    and rolled into p50/p99 TTFT/TPOT, SLO attainment and
+    goodput-under-SLO in ``stats()``.
   * DECODE — one jitted ``lax.scan`` of up to ``tick_tokens`` steps over
     the whole batch, with per-slot uncertainty accumulated ON DEVICE
     (``uncertainty.get_batched_estimator``).  One host sync per tick, not
@@ -94,6 +110,7 @@ from repro.core.seq_state import (Lane, layout_for,  # noqa: F401 (re-export)
                                   pow2_steps, resolve_kv_layout,
                                   stack_slot_caches, write_slot, write_slots)
 from repro.core.speculative import BatchedSpecDecoder
+from repro.core.traffic import VirtualClock, latency_rollup
 
 
 @dataclasses.dataclass
@@ -113,6 +130,8 @@ class _Request:
     max_new: int
     key: Optional[np.ndarray] = None    # semantic-cache key (set at admit)
     lane: Optional[str] = None          # policy.assign outcome (once per req)
+    at: Optional[float] = None          # arrival time, clock ms (None = now)
+    spent: int = 0                      # edge decode steps actually consumed
 
 
 @dataclasses.dataclass
@@ -136,11 +155,24 @@ class BatchedEngine:
     (``DeprecationWarning``) and construct the matching policy.
 
     Policy feature dicts: ``assign`` sees ``{rid, prompt, prompt_len,
-    max_new, queue_depth, free_slots, inflight}`` (prompt features + live
-    load stats); ``feedback`` sees ``{rid, unc, steps, budget, lane}`` —
-    the middle three matching the aligned arrays ``decide`` saw for that
-    request, ``lane`` distinguishing decided actions from lane-assigned
-    completions that never reached ``decide``.
+    max_new, queue_depth, free_slots, inflight, at_ms, now_ms, wait_ms,
+    slo_ms}`` (prompt features + live load stats + REAL deadline state —
+    ``wait_ms`` is how long the request has already queued against
+    ``slo_ms``); ``feedback`` sees ``{rid, unc, steps, budget, lane,
+    ttft_ms, e2e_ms, slo_ms, slo_met}`` — ``steps``/``budget`` matching
+    the aligned arrays ``decide`` saw for that request (``steps`` is what
+    it actually consumed; a stop-token hit makes it < ``budget``),
+    ``lane`` distinguishing decided actions from lane-assigned
+    completions that never reached ``decide``, and the latency fields
+    closing the loop for SLA/budget policies.
+
+    Serving knobs: ``clock`` (a ``core/traffic.py`` clock; default
+    ``VirtualClock()`` — deterministic modeled ms), ``slo_ms`` (TTFT SLO
+    for goodput/attainment in ``stats()`` and the policy features),
+    ``prefill_chunk`` (entries above which admission prefills chunked
+    across ticks; None = ``tick_tokens``, 0 = always whole-prompt),
+    ``stop_token`` (token id that ends a request's edge decode early;
+    None = decode the full budget).
 
     KV layout knobs:
       * ``kv_layout``: "auto" (paged where both models' cache families
@@ -162,7 +194,10 @@ class BatchedEngine:
                  cache_threshold: float = 0.95, skeleton_len: int = 8,
                  tick_tokens: int = 16, seed: int = 0,
                  kv_layout: str = "auto", kv_block_size: int = 32,
-                 kv_blocks: Optional[int] = None):
+                 kv_blocks: Optional[int] = None, clock=None,
+                 slo_ms: Optional[float] = None,
+                 prefill_chunk: Optional[int] = None,
+                 stop_token: Optional[int] = None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if tick_tokens < 1:
@@ -170,6 +205,9 @@ class BatchedEngine:
         if kv_block_size < 1:
             raise ValueError(f"kv_block_size must be >= 1, got "
                              f"{kv_block_size}")
+        if prefill_chunk is not None and prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0 (0 = whole-prompt "
+                             f"prefill), got {prefill_chunk}")
         self.policy = resolve_policy(policy, escalation, escalate_threshold)
         self.kv_layout = resolve_kv_layout(edge_model, cloud_model, kv_layout)
         self.kv_block_size = kv_block_size
@@ -182,6 +220,14 @@ class BatchedEngine:
         self.skeleton_len = skeleton_len
         self.tick_tokens = tick_tokens
         self.seed = seed
+        self.clock = clock if clock is not None else VirtualClock()
+        self.slo_ms = slo_ms
+        self.stop_token = stop_token
+        # prompts with more than this many ENTRIES prefill chunked across
+        # ticks; None = auto (tick_tokens, so prefill work per tick is
+        # bounded by decode work per tick); 0 = always whole-prompt
+        self.prefill_chunk = tick_tokens if prefill_chunk is None \
+            else prefill_chunk
         self._esc_fns = {"cloud": self._cloud_escalate,
                          "skeleton": self._skeleton_escalate,
                          "speculative": self._spec_escalate}
@@ -204,15 +250,21 @@ class BatchedEngine:
         self._kv_stats: Dict[str, Any] = {}
         self._swapped: Dict[int, dict] = {}
         self._preempts = 0
+        self._prefill_jobs: Dict[int, dict] = {}    # slot -> chunked job
+        self._events: Dict[int, dict] = {}          # rid -> lifecycle stamps
 
     # ------------------------------------------------------------ submit
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int, at: Optional[float] = None) -> int:
+        """Queue a request.  ``at`` is an OPEN-LOOP arrival time in clock
+        milliseconds (``core/traffic.py`` generators produce them): the
+        request is invisible to admission until the engine's clock reaches
+        it.  ``at=None`` (closed-loop) means "already arrived"."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 2, "scheduler needs >= 2 prompt tokens"
         assert max_new >= 1
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(_Request(rid, prompt, max_new))
+        self._queue.append(_Request(rid, prompt, max_new, at=at))
         return rid
 
     def _note_group(self, *states):
@@ -234,9 +286,20 @@ class BatchedEngine:
 
     # ------------------------------------------------------------ run
     def run(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
-        """Drain the queue; returns {rid: RequestTrace} for this drain."""
+        """Drain the queue; returns {rid: RequestTrace} for this drain.
+        Open-loop: requests with a future ``at`` stay invisible until the
+        engine's clock reaches them (idle gaps are jumped/slept over)."""
         if not self._queue:
             return {}
+        clock = self.clock
+        t0 = clock.now()
+        for r in self._queue:
+            if r.at is None:
+                r.at = t0
+        # strict ARRIVAL order (ties by rid) — closed-loop batches all
+        # "arrive" at run start, so their submission order is unchanged
+        self._queue = collections.deque(
+            sorted(self._queue, key=lambda r: (r.at, r.rid)))
         B = self.batch_size
         # slot capacity: prompt + generation + speculative overdraft margin
         # (matches SpecDecoder's max_seq so escalation reuses the same pads)
@@ -254,6 +317,11 @@ class BatchedEngine:
         self._leaders, self._followers = [], {}
         self._swapped: Dict[int, dict] = {}     # rid -> host swap handle
         self._preempts = 0
+        self._prefill_jobs = {}                 # slot -> detached chunk job
+        self._events = {r.rid: {"submit_ms": float(r.at),
+                                "swaps": 0, "defers": 0}
+                        for r in self._queue}
+        stop = jnp.int32(-1 if self.stop_token is None else self.stop_token)
 
         while self._queue or self._swapped or any(s.req is not None
                                                   for s in slots):
@@ -282,26 +350,59 @@ class BatchedEngine:
             # newcomers consume the blocks it is waiting for would break
             # strict arrival order (it resumes within a bounded number of
             # ticks as in-flight slots retire).
+            # ---- admission probe: pop every ARRIVED request in a bounded
+            # window (free slots + one batch) INDEPENDENTLY of free edge
+            # slots.  Cache hits, coalesced followers and cloud-lane
+            # requests are served without ever occupying a slot, so a full
+            # edge batch no longer head-of-line-blocks them behind slot
+            # availability; slot-needing requests that find none simply go
+            # back to the queue head.  A stalled swap-in still blocks new
+            # admissions entirely: the victim predates every queued
+            # request, so letting newcomers consume the blocks it waits
+            # for would break strict arrival order.
             deferred = False
-            assigned_cloud: List[_Request] = []
-            # NOTE: lane assignment happens inside the slot-gated admission
-            # wave, so a cloud-lane request still waits for a free edge
-            # slot to be *considered* even though it never occupies one —
-            # acceptable head-of-line latency today; probing queue heads
-            # independently of free slots is a known follow-on
-            if free and self._queue and not stalled:
-                cands = [self._queue.popleft()
-                         for _ in range(min(len(free), len(self._queue)))]
+            cloud_wave: List[_Request] = []
+            now = clock.now()
+            if self._queue and not stalled:
+                cands: List[_Request] = []
+                while self._queue and len(cands) < len(free) + B \
+                        and self._queue[0].at <= now:
+                    cands.append(self._queue.popleft())
                 hits: List[Optional[Any]] = [None] * len(cands)
-                if self.cache is not None:
+                if self.cache is not None and cands:
                     for r in cands:
-                        r.key = embed_tokens_mean(self.edge_model,
-                                                  edge_params, r.prompt)
+                        if r.key is None:
+                            r.key = embed_tokens_mean(self.edge_model,
+                                                      edge_params, r.prompt)
                     hits = self.cache.lookup_batch(
                         np.stack([r.key for r in cands]))
+                putback: List[_Request] = []
+                pend_keys: List[np.ndarray] = []
+                share = state.share_hints([r.prompt for r in cands])
+
+                def stay(r):
+                    # r stays queued; any matching request probed later
+                    # this wave must stay BEHIND it (pend_keys), or the
+                    # sequential cache/coalesce semantics would serve a
+                    # younger twin ahead of its would-be leader
+                    putback.append(r)
+                    if r.key is not None:
+                        pend_keys.append(SemanticCache._norm(r.key))
+
                 bs, lasts, news = [], [], []
-                for i, (r, hit) in enumerate(zip(cands, hits)):
+                for r, hit, sharable in zip(cands, hits, share):
+                    if deferred:
+                        putback.append(r)   # pool pressure aborts the wave
+                        continue
+                    if pend_keys and r.key is not None and any(
+                            float(SemanticCache._norm(r.key) @ k)
+                            >= self.cache.threshold for k in pend_keys):
+                        stay(r)
+                        continue
                     if hit is not None:
+                        ev = self._events[r.rid]
+                        ev["first_token_ms"] = ev["retire_ms"] = now
+                        ev["path"], ev["tokens"] = "cache", len(hit)
                         results[r.rid] = RequestTrace("cache",
                                                       tokens=list(hit))
                         continue
@@ -315,9 +416,10 @@ class BatchedEngine:
                             self.cache.hits += 1
                             continue
                     # task assignment: the policy picks this request's lane
-                    # from prompt features + live load stats — ONCE per
-                    # request (a deferred request keeps its lane, so
-                    # stateful policies never see phantom duplicates)
+                    # from prompt features + live load + REAL deadline
+                    # state — ONCE per request (a deferred request keeps
+                    # its lane, so stateful policies never see phantom
+                    # duplicates)
                     if r.lane is None:
                         r.lane = self.policy.assign({
                             "rid": r.rid, "prompt": r.prompt,
@@ -326,26 +428,46 @@ class BatchedEngine:
                             "queue_depth": len(self._queue),
                             "free_slots": len(free),
                             "inflight": sum(s.req is not None
-                                            for s in slots)})
+                                            for s in slots),
+                            "at_ms": float(r.at), "now_ms": now,
+                            "wait_ms": now - float(r.at),
+                            "slo_ms": self.slo_ms})
                         if r.lane not in LANES:
                             raise ValueError(
                                 f"policy {self.policy.name!r} assigned "
                                 f"unknown lane {r.lane!r}; known: "
                                 f"{' | '.join(LANES)}")
                     if r.lane == "cloud":
-                        # cloud-only: skip the edge decode entirely; served
-                        # by one grouped batched cloud generation below.
+                        # cloud-only: no edge slot needed — one grouped
+                        # batched cloud generation below (grouped shapes
+                        # pad to batch_size, so a wave takes at most B).
                         # Register as a leader so identical prompts later
                         # in this wave coalesce instead of paying a second
                         # cloud generation (resolved in _finish this wave)
-                        if self.cache is not None:
-                            self._leaders.append(
-                                (SemanticCache._norm(r.key), r.rid))
-                        assigned_cloud.append(r)
+                        if len(cloud_wave) < B:
+                            if self.cache is not None:
+                                self._leaders.append(
+                                    (SemanticCache._norm(r.key), r.rid))
+                            cloud_wave.append(r)
+                        else:
+                            stay(r)
+                        continue
+                    if not free:
+                        stay(r)             # collab/edge: needs a slot
                         continue
                     b = free.pop(0)
                     need = r.prompt.size - 1 + r.max_new
-                    ok = state.admit(b, r.prompt, need)
+                    # long prompts reserve now and prefill DETACHED, one
+                    # chunk per tick, landing via finalize — never stalling
+                    # the in-flight batch behind a monolithic prefill.
+                    # Prompts the layout flags as sharable take the
+                    # monolithic path: a chunked begin defers the prefix
+                    # index registration until finalize, which would cost
+                    # same-wave twins their block sharing
+                    chunked = (0 < self.prefill_chunk < r.prompt.size - 1
+                               and not sharable)
+                    admit = state.begin if chunked else state.admit
+                    ok = admit(b, r.prompt, need)
                     if not ok and not state.fits_empty(need):
                         # private footprint exceeds the whole pool: only
                         # live prefix sharing can admit this request, and
@@ -373,90 +495,145 @@ class BatchedEngine:
                                 "steps": int(np.asarray(steps[v])),
                                 "unc": float(np.asarray(unc[v])),
                             }
+                            self._events[vreq.rid]["swaps"] += 1
                             slots[v] = _Slot()
                             steps = steps.at[v].set(0)
                             free.append(v)
                             self._preempts += 1
-                            ok = state.admit(b, r.prompt, need)
+                            ok = admit(b, r.prompt, need)
                     if not ok:
                         # every preemptable victim is out and the pool is
                         # still too tight: defer this and the rest, keep
                         # arrival order (in-flight retirements will free
                         # blocks within a bounded number of ticks)
                         free.insert(0, b)
-                        for rr in reversed(cands[i:]):
-                            self._queue.appendleft(rr)
+                        self._events[r.rid]["defers"] += 1
+                        putback.append(r)
                         deferred = True
-                        break
+                        continue
                     slots[b] = _Slot(req=r)
                     wave.add(b)
-                    bs.append(b)
-                    lasts.append([[int(r.prompt[-1])]])
-                    news.append(r.max_new)
+                    self._events[r.rid]["admit_ms"] = now
+                    if chunked:
+                        self._prefill_jobs[b] = self.edge.start_prefill(
+                            edge_params, r.prompt,
+                            state.detached_len(r.prompt.size - 1),
+                            self.prefill_chunk)
+                    else:
+                        clock.on_prefill(r.prompt.size - 1)
+                        bs.append(b)
+                        lasts.append([[int(r.prompt[-1])]])
+                        news.append(r.max_new)
                     if self.cache is not None:
                         self._leaders.append((SemanticCache._norm(r.key),
                                               r.rid))
+                for r in reversed(putback):
+                    self._queue.appendleft(r)
                 if bs:
                     idx = jnp.asarray(bs, jnp.int32)
                     tok = tok.at[idx].set(jnp.asarray(lasts, jnp.int32))
                     steps = steps.at[idx].set(jnp.asarray(news, jnp.int32))
                     unc = unc.at[idx].set(0.0)
 
-            if assigned_cloud:
+            if cloud_wave:
                 # cloud-assigned lane: one grouped batched cloud generation
-                # for the wave (task assignment at admission)
+                # for the wave (task assignment at admission).  First-token
+                # time is the generation's own first step, not the (later)
+                # group completion
                 rng, r_ = jax.random.split(rng)
+                t_cw = clock.now()
                 toks = self._group_generate(
                     self.cloud, cloud_params,
-                    [q.prompt for q in assigned_cloud],
-                    [q.max_new for q in assigned_cloud], r_)
-                for q, t in zip(assigned_cloud, toks):
+                    [q.prompt for q in cloud_wave],
+                    [q.max_new for q in cloud_wave], r_)
+                for q, t in zip(cloud_wave, toks):
                     self._finish(results, q, RequestTrace(
-                        "cloud", cloud_passes=q.max_new, tokens=t))
+                        "cloud", cloud_passes=q.max_new, tokens=t),
+                        t_first=t_cw + clock.step_ms)
+
+            # ---- advance chunked prefills: one detached chunk per job per
+            # tick, interleaved with the batch's decode; a finished job
+            # lands its cache (finalize) and arms the slot for decode
+            for b in list(self._prefill_jobs):
+                job = self._prefill_jobs[b]
+                before = job["done"]
+                finished = self.edge.advance_prefill(edge_params, job)
+                clock.on_prefill(job["done"] - before)
+                if finished:
+                    state.finalize(b, job["cache"])
+                    del self._prefill_jobs[b]
+                    r = slots[b].req
+                    tok = tok.at[b, 0, 0].set(int(r.prompt[-1]))
+                    steps = steps.at[b].set(r.max_new)
+                    unc = unc.at[b].set(0.0)
 
             occupied = [b for b in range(B) if slots[b].req is not None]
             if not occupied:
-                if deferred or stalled:
+                if deferred:
                     raise RuntimeError(
                         "paged KV pool too small for the queued request "
                         "even with an empty batch; raise kv_blocks")
-                continue            # this round was all cache hits
+                if stalled:
+                    rid0 = min(self._swapped)
+                    raise RuntimeError(
+                        f"paged KV pool cannot restore swapped-out request "
+                        f"{rid0} even with an empty batch (its blocks + "
+                        "outstanding reservation exceed the pool); raise "
+                        "kv_blocks")
+                if self._queue:
+                    # nothing in flight and every queued arrival is in the
+                    # future: jump/sleep the clock to the next arrival
+                    clock.wait_until(float(self._queue[0].at))
+                continue            # all cache hits / cloud completions
             state.flush()
 
             # ---- one batched decode tick (pow2-bucketed step count: the
             # scan recompiles per static n_steps, so bucketing bounds the
             # compile set; overshoot decodes masked garbage)
             steps_h = np.asarray(steps)
-            n = pow2_steps(int(min(self.tick_tokens,
-                                   steps_h[occupied].max())),
-                           self.tick_tokens)
+            live = int(steps_h[occupied].max())
+            if live <= 0:
+                continue            # every occupied slot is mid-prefill
+            n = pow2_steps(min(self.tick_tokens, live), self.tick_tokens)
             state.prepare_tick(occupied, steps_h, n)
             rng, r = jax.random.split(rng)
             state.caches, tok, steps, unc, toks, actives = self.edge._chunk(
-                edge_params, state.caches, tok, steps, unc, r, n_steps=n)
+                edge_params, state.caches, tok, steps, unc, r, stop,
+                n_steps=n)
+            clock.on_steps(n)
+            t_tick = clock.now()
             toks_h, act_h = np.asarray(toks), np.asarray(actives)
             for b in occupied:
-                slots[b].tokens.extend(
-                    int(t) for t, a in zip(toks_h[:, b], act_h[:, b]) if a)
+                new = [int(t) for t, a in zip(toks_h[:, b], act_h[:, b])
+                       if a]
+                if new and not slots[b].tokens:
+                    # tick-granular first-token stamp (end of the emitting
+                    # tick); escalated requests are re-stamped in _finish
+                    self._events[slots[b].req.rid]["first_token_ms"] = t_tick
+                slots[b].tokens.extend(new)
 
             # ---- retire finished slots; the policy names each one's action
             steps_h, unc_h = np.asarray(steps), np.asarray(unc)
             retiring: List[Tuple[_Request, float, List[int]]] = []
             for b in occupied:
-                if steps_h[b] > 0:
+                if steps_h[b] > 0 or b in self._prefill_jobs:
                     continue
                 req = slots[b].req
-                u = float(unc_h[b]) / req.max_new
-                retiring.append((req, u, slots[b].tokens[:req.max_new]))
+                # steps actually spent: every ACTIVE emission appended one
+                # token, and a stop-token hit zeroes the budget early — so
+                # spent < max_new is a real state decide/feedback must see
+                req.spent = min(len(slots[b].tokens), req.max_new)
+                u = float(unc_h[b]) / max(req.spent, 1)
+                retiring.append((req, u, slots[b].tokens[:req.spent]))
                 slots[b] = _Slot()
                 state.retire(b)
 
             if retiring:
                 # one vectorized decide over the wave's collaborative
                 # requests; edge-assigned ones force-accept their output.
-                # Today slots retire only with their budget exhausted, so
-                # steps spent == budget; the two arrays diverge once early
-                # retirement lands (policies must not rely on equality)
+                # steps = what each request actually consumed (early stop
+                # makes it < budget); budget = its max_new grant — distinct
+                # arrays, no aliasing
                 actions = ["accept"] * len(retiring)
                 decided = [i for i, (rq, _, _) in enumerate(retiring)
                            if rq.lane != "edge"]
@@ -464,7 +641,7 @@ class BatchedEngine:
                     acts = list(self.policy.decide(
                         np.asarray([retiring[i][1] for i in decided],
                                    np.float32),
-                        np.asarray([retiring[i][0].max_new
+                        np.asarray([retiring[i][0].spent
                                     for i in decided], np.int32),
                         np.asarray([retiring[i][0].max_new
                                     for i in decided], np.int32)))
@@ -485,20 +662,24 @@ class BatchedEngine:
                 for (req, u, toks), a in zip(retiring, actions):
                     if a == "accept":
                         self._finish(results, req, RequestTrace(
-                            "edge", edge_calls=req.max_new, uncertainty=u,
+                            "edge", edge_calls=req.spent, uncertainty=u,
                             tokens=toks))
                     else:
                         # edge tokens are discarded — escalation
                         # regenerates with cloud involvement (same as the
                         # reference engine)
                         groups.setdefault(a, []).append((req, u))
-                # one batched group per decided action (a wave can mix)
+                # one batched group per decided action (a wave can mix).
+                # The escalation's own first step is the client-visible
+                # first token (the edge stream it replaces was discarded)
                 for a, grp in groups.items():
                     rng, r = jax.random.split(rng)
+                    t_esc = clock.now()
                     for req, tr in self._esc_fns[a](
                             edge_params, cloud_params,
                             [g[0] for g in grp], [g[1] for g in grp], r):
-                        self._finish(results, req, tr)
+                        self._finish(results, req, tr,
+                                     t_first=t_esc + clock.step_ms)
 
         self._kv_stats["kv_peak_bytes"] = state.peak_bytes
         self._kv_stats["kv_capacity_bytes"] = state.capacity_bytes
@@ -514,11 +695,14 @@ class BatchedEngine:
         flushed yet, and exempting them prevents same-tick swap thrash.
         Slots whose swap-in restore could never fit the pool (admitted
         over a prefix larger than their private footprint allows) are
-        exempt too — swapping them would strand their completed work."""
+        exempt too — swapping them would strand their completed work.  So
+        are slots mid-chunked-prefill: their device blocks hold garbage
+        until finalize, and swapping would checkpoint that garbage."""
         steps_h = np.asarray(steps)
         best = None
         for b, s in enumerate(slots):
-            if s.req is None or b in wave or not state.swappable(b):
+            if s.req is None or b in wave or b in self._prefill_jobs \
+                    or not state.swappable(b):
                 continue
             key = (int(steps_h[b]), s.req.rid)
             if best is None or key > best[0]:
@@ -539,20 +723,40 @@ class BatchedEngine:
         return [results[rid] for rid in rids]
 
     # ------------------------------------------------------------ internals
-    def _finish(self, results, req: _Request, tr: RequestTrace):
+    def _finish(self, results, req: _Request, tr: RequestTrace, *,
+                t_first: Optional[float] = None):
+        """Complete ``req``: stamp lifecycle events, fire policy feedback,
+        warm the cache, resolve followers.  ``t_first`` overrides the
+        first-token stamp (escalations/cloud lanes — their client stream
+        starts with the regeneration, not the discarded edge decode)."""
+        now = self.clock.now()
+        ev = self._events.setdefault(
+            req.rid, {"submit_ms": now, "swaps": 0, "defers": 0})
+        if t_first is not None:
+            ev["first_token_ms"] = t_first
+        elif "first_token_ms" not in ev:
+            ev["first_token_ms"] = now
+        ev["retire_ms"] = now
+        ev["path"] = tr.path
+        ev["tokens"] = len(tr.tokens) if tr.tokens else 0
         if tr.path != "cache":
             # completion feedback: realized quality proxy + cloud-token
             # cost close the loop for learning (bandit/budget) policies.
             # features carry the request's lane so policies can tell a
             # decided action from a lane-assigned completion (which never
-            # went through decide)
+            # went through decide), plus the realized deadline outcome so
+            # SLA policies reconcile against REAL latencies, not proxies
+            ttft = ev["first_token_ms"] - ev["submit_ms"]
             self.policy.feedback(
                 "accept" if tr.path == "edge" else tr.path,
                 trace_quality(tr, req.max_new),
                 cloud_tokens(tr, self.gamma),
                 {"rid": req.rid, "unc": tr.uncertainty,
-                 "steps": req.max_new, "budget": req.max_new,
-                 "lane": req.lane})
+                 "steps": req.spent if req.spent else req.max_new,
+                 "budget": req.max_new, "lane": req.lane,
+                 "ttft_ms": ttft, "e2e_ms": now - ev["submit_ms"],
+                 "slo_ms": self.slo_ms,
+                 "slo_met": self.slo_ms is None or ttft <= self.slo_ms})
         if self.cache is not None and tr.tokens is not None \
                 and req.key is not None:
             self.cache.insert(req.key, tr.tokens)
@@ -562,6 +766,11 @@ class BatchedEngine:
         self._leaders = [(k, rid) for k, rid in self._leaders
                          if rid != req.rid]
         for f in self._followers.pop(req.rid, []):
+            fev = self._events.setdefault(
+                f.rid, {"submit_ms": now, "swaps": 0, "defers": 0})
+            fev.setdefault("first_token_ms", now)
+            fev["retire_ms"] = now
+            fev["path"], fev["tokens"] = "cache", ev["tokens"]
             results[f.rid] = RequestTrace(
                 "cache", tokens=list(tr.tokens) if tr.tokens else None)
 
@@ -582,14 +791,18 @@ class BatchedEngine:
             if m <= 0:
                 continue
             state.admit(i, p, len(p) - 1 + m)
+            self.clock.on_prefill(len(p) - 1)
             members.append(i)
             tok = tok.at[i, 0, 0].set(int(p[-1]))
             steps = steps.at[i].set(m)
         state.flush()
         state.prepare_tick(members, np.asarray(steps), n)
+        # escalation/cloud groups never stop early: their budgets come
+        # from the retirement wave, so stop stays disarmed (-1)
         _, _, _, _, toks, actives = lane._chunk(
             params, state.caches, tok, steps, jnp.zeros((G,), jnp.float32),
-            rng, n_steps=n)
+            rng, jnp.int32(-1), n_steps=n)
+        self.clock.on_steps(n)
         self._note_group(state)
         toks_h, act_h = np.asarray(toks), np.asarray(actives)
         return [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i]) if a]
@@ -648,9 +861,15 @@ class BatchedEngine:
             st.flush()
             st.prepare_tick(list(range(len(reqs))), overdraft, 1 << 30)
         max_news = [r.max_new for r in reqs] + [0] * (G - len(reqs))
+        for r in reqs:
+            self.clock.on_prefill(r.prompt.size - 1)
         outs, stats = self.spec.generate_group(
             edge_params, cloud_params, d_state.caches, t_state.caches, last,
             max_news, rng)
+        # modeled cost: the group runs the slowest member's rounds, each a
+        # draft chunk (gamma) + one verify + one commit step
+        self.clock.on_steps(max(st["rounds"] for st in stats[:len(reqs)])
+                            * (self.gamma + 2))
         self._note_group(d_state, t_state)
         res = []
         for i, (r, u) in enumerate(zip(reqs, uncs)):
@@ -662,7 +881,15 @@ class BatchedEngine:
         return res
 
     # ------------------------------------------------------------ stats
+    @property
+    def events(self) -> Dict[int, dict]:
+        """Per-request lifecycle events of the last ``run`` (rid ->
+        submit/admit/first-token/retire stamps in clock ms, swap + defer
+        counts, path, token count)."""
+        return self._events
+
     def stats(self) -> Dict[str, Any]:
         return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0,
                 "policy": self.policy.name,
-                **self.policy.stats(), **self._kv_stats}
+                **self.policy.stats(), **self._kv_stats,
+                **latency_rollup(self._events, self.slo_ms)}

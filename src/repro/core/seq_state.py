@@ -42,6 +42,7 @@ same slot/tick/escalation machinery:
 from __future__ import annotations
 
 import hashlib
+from collections import Counter
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -191,6 +192,38 @@ class SequenceState:
         (``need_tokens`` cache entries).  False = defer (capacity full)."""
         raise NotImplementedError
 
+    def begin(self, b: int, prompt, need_tokens: int) -> bool:
+        """Reserve capacity for a CHUNKED prefill of slot ``b`` without
+        staging any writes — the prompt's cache is built detached (one
+        ``Lane.advance_prefill`` chunk per tick) and lands via
+        ``finalize``.  Same return contract as ``admit``; layouts without
+        reservations accept unconditionally.  Until ``finalize``, the
+        slot's device row must stay inert (zero budget masks its decode;
+        paged layouts keep the trap row), and the slot must not be picked
+        as a preemption victim."""
+        return True
+
+    def finalize(self, b: int, cache):
+        """Land a finished detached prefill cache into slot ``b`` (staged;
+        ``flush`` batches the device writes as for ``admit``)."""
+        raise NotImplementedError
+
+    def detached_len(self, entry_count: int) -> int:
+        """Padded length of a detached chunked-prefill cache for a prompt
+        with ``entry_count`` entries (layout-dependent: dense slots pad to
+        the common slot length, paged to the prompt's own blocks)."""
+        raise NotImplementedError
+
+    def share_hints(self, prompts: List[Any]) -> List[bool]:
+        """For each prompt in an admission wave: True when admitting it
+        MONOLITHICALLY (``admit``) would likely share cache with live or
+        same-wave state, so the scheduler should skip chunked prefill for
+        it.  A chunked ``begin`` keeps the prompt out of the prefix index
+        until ``finalize`` (its blocks hold garbage until then), which
+        would silently forfeit sharing between same-wave twins.  Layouts
+        without cross-request sharing never prefer the monolithic path."""
+        return [False] * len(prompts)
+
     def flush(self):
         """Land all staged admissions/retirements in batched device writes."""
 
@@ -255,6 +288,18 @@ class DenseKV(SequenceState):
         self._pend_bs.append(b)
         self._pend_caches.append(c1)
         return True
+
+    def begin(self, b: int, prompt, need_tokens: int) -> bool:
+        return True     # dense slots are pre-reserved; nothing to stage
+
+    def finalize(self, b: int, cache):
+        # the whole-slot scatter overwrites whatever masked garbage the
+        # slot decoded while the detached prefill was in flight
+        self._pend_bs.append(b)
+        self._pend_caches.append(cache)
+
+    def detached_len(self, entry_count: int) -> int:
+        return self.slot_len
 
     def flush(self):
         if self._pend_bs:   # one scatter for the whole admission wave
@@ -338,6 +383,8 @@ class PagedKV(SequenceState):
         self._shared_blocks = 0     # physical allocations avoided
         self._cow_forks = 0
         self._swaps = 0
+        # chunked prefills in flight: slot -> (entries, new blocks, shared)
+        self._begun: Dict[int, Tuple[np.ndarray, List[int], int]] = {}
 
     # ------------------------------------------------------------ prefix
     def _prefix_keys(self, entries: np.ndarray) -> List[bytes]:
@@ -482,6 +529,25 @@ class PagedKV(SequenceState):
         count against nobody's reservation: they are live already."""
         prompt = np.asarray(prompt, np.int32)
         entries = prompt[:-1]
+        got = self._reserve(b, entries, need_tokens)
+        if got is None:
+            return False
+        ns, blocks = got
+        if blocks:                  # prefill; write only the unshared tail
+            nb = self.pool.blocks_for(entries.size)
+            _, c1 = self.lane.prefill(self.params, prompt,
+                                      nb * self.block_size)
+            self._land(b, entries, blocks, ns, c1)
+        else:
+            self._land(b, entries, blocks, ns, None)
+        return True
+
+    def _reserve(self, b: int, entries: np.ndarray,
+                 need_tokens: int) -> Optional[Tuple[int, List[int]]]:
+        """Shared half of ``admit``/``begin``: map the live shared prefix,
+        allocate the prompt's own blocks, commit worst-case growth.
+        Returns (shared block count, newly allocated block ids), or None
+        when the pool cannot back the request (nothing mutated)."""
         E = entries.size
         nb = self.pool.blocks_for(E)
         total = self.pool.blocks_for(need_tokens)
@@ -490,17 +556,27 @@ class PagedKV(SequenceState):
         cow_extra = 1 if shared and (m % self.block_size) else 0
         if not self.pool.can_alloc(own_new + (total - nb) + cow_extra
                                    + sum(self._commit)):
-            return False
+            return None
         ns = 0
         if shared:
             self.share_prefix(b, entries, _peek=(m, shared))
             ns = len(shared)
         blocks = self.pool.alloc(b, own_new) if own_new else []
         self._commit[b] = (total - nb) + cow_extra
-        if own_new:                 # prefill; write only the unshared tail
-            _, c1 = self.lane.prefill(self.params, prompt,
-                                      nb * self.block_size)
-            kb, vb = prompt_cache_to_blocks(c1, self.block_size)
+        return ns, blocks
+
+    def _land(self, b: int, entries: np.ndarray, blocks: List[int],
+              ns: int, c1) -> None:
+        """Stage a fully prefilled prompt into slot ``b``'s table row and
+        the prefix index (``c1``: the prompt's single-sequence cache, or
+        None when every block was shared)."""
+        E = entries.size
+        if blocks:
+            nb = self.pool.blocks_for(E)
+            kb, vb = prompt_cache_to_blocks(
+                {"k": c1["k"][:, :, :nb * self.block_size],
+                 "v": c1["v"][:, :, :nb * self.block_size]},
+                self.block_size)
             self.caches["k"], self.caches["v"] = write_pool_blocks(
                 self.caches["k"], self.caches["v"],
                 jnp.asarray(blocks, jnp.int32), kb[:, ns:], vb[:, ns:])
@@ -512,7 +588,47 @@ class PagedKV(SequenceState):
         self._entries[b] = entries
         self._stale.discard(b)
         self._register(entries, mine)
+
+    def begin(self, b: int, prompt, need_tokens: int) -> bool:
+        """Reserve blocks for a chunked prefill; the slot's device row
+        stays a TRAP row until ``finalize`` (it decodes masked garbage
+        while the detached prefill runs), and ``_register`` waits too —
+        the reserved blocks hold garbage until the finalize write."""
+        entries = np.asarray(prompt, np.int32)[:-1]
+        got = self._reserve(b, entries, need_tokens)
+        if got is None:
+            return False
+        ns, blocks = got
+        self._begun[b] = (entries, blocks, ns)
         return True
+
+    def finalize(self, b: int, cache):
+        entries, blocks, ns = self._begun.pop(b)
+        self._land(b, entries, blocks, ns, cache)
+
+    def detached_len(self, entry_count: int) -> int:
+        return self.pool.blocks_for(entry_count) * self.block_size
+
+    def share_hints(self, prompts: List[Any]) -> List[bool]:
+        """A prompt prefers the monolithic path when its first-block
+        prefix key is already live in the index, or at least one other
+        prompt in the same wave opens with the same block (the pair would
+        have shared had the leader landed first).  Only the first block's
+        key is probed — the cheapest sound signal: any shared prefix at
+        all implies a shared first block."""
+        firsts: List[Optional[bytes]] = []
+        for p in prompts:
+            entries = np.asarray(p, np.int32)[:-1]
+            if entries.size == 0:
+                firsts.append(None)
+                continue
+            firsts.append(hashlib.blake2b(
+                entries[:self.block_size].tobytes(),
+                digest_size=16).digest())
+        counts = Counter(k for k in firsts if k is not None)
+        return [k is not None
+                and (k in self._prefix_index or counts[k] > 1)
+                for k in firsts]
 
     def fits_empty(self, need_tokens: int, prompt=None) -> bool:
         total = self.pool.blocks_for(need_tokens)
@@ -716,15 +832,31 @@ class Lane:
         self.ops = SpecOps(model, layout)
         est = get_batched_estimator(estimator)
         step = self.ops.step
+        # KV-transformer attention masks every key row past ``pos``
+        # (score -> -inf -> exp = 0 exactly), so prefilling a prompt PADDED
+        # to a pow2 bucket and then pinning ``pos`` back to the real length
+        # is bit-identical to an exact-length prefill — that is what lets
+        # admission bucket prompt lengths instead of compiling one prefill
+        # per distinct length.  Recurrent families (ssm/xlstm/hybrid)
+        # advance state through EVERY input token, pads included, so they
+        # must keep exact-length compiles; encdec's cross-attention reads
+        # the full encoder output and is excluded for the same reason.
+        self._bucket_prefill = layout in ("dense", "paged") and \
+            model.cfg.family in ("dense", "moe", "vlm")
         self._jit_prefill = jax.jit(
             lambda p, toks, max_seq: model.prefill(
                 p, {"tokens": toks}, max_seq=max_seq),
             static_argnames=("max_seq",))
+        self._jit_extend = jax.jit(
+            lambda p, toks, cache: model.extend_step(p, toks, cache))
 
-        def chunk(params, caches, tok, steps_left, unc_sum, rng,
+        def chunk(params, caches, tok, steps_left, unc_sum, rng, stop,
                   n_steps: int):
             """n_steps decode steps over all slots in one scan.  Returns the
-            advanced state plus per-step (token, active) for the host."""
+            advanced state plus per-step (token, active) for the host.
+            ``stop`` is a traced int32 stop-token id (-1 = never): a slot
+            that emits it keeps the token but zeroes its remaining budget,
+            so it retires early with steps-spent < budget."""
             def body(carry, r):
                 caches, tok, steps_left, unc_sum = carry
                 lg, caches = step(params, tok, caches)       # (B, V)
@@ -735,7 +867,8 @@ class Lane:
                     nxt = jax.random.categorical(
                         r, lg / temperature, axis=-1).astype(jnp.int32)
                 unc_sum = unc_sum + jnp.where(active, est(lg), 0.0)
-                steps_left = steps_left - active.astype(jnp.int32)
+                steps_left = jnp.where(active & (nxt == stop),
+                                       0, steps_left - active.astype(jnp.int32))
                 return (caches, nxt[:, None, None], steps_left, unc_sum), \
                     (nxt, active)
 
@@ -748,10 +881,63 @@ class Lane:
 
     def prefill(self, params, prompt, max_seq: int):
         """Prefill ``prompt[:-1]`` into a fresh cache padded to ``max_seq``.
-        Recompiles per distinct prompt length; the jit cache makes repeats
-        free."""
-        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :-1])
-        return self._jit_prefill(params, toks, max_seq=max_seq)
+        KV-transformer lanes pad the ENTRY COUNT to a pow2 bucket (capped
+        at ``max_seq``) and pin ``pos`` back to the real length — bit-exact
+        (see ``_bucket_prefill``), and it bounds the compile set at
+        O(log max prompt) instead of one compile per distinct length.
+        Recurrent/encdec lanes still recompile per distinct prompt length."""
+        entries = np.asarray(prompt, np.int32)[:-1]
+        E = entries.size
+        Ep = min(pow2_steps(E, 1 << 30), max_seq) if self._bucket_prefill \
+            else E
+        if Ep > E:
+            entries = np.concatenate([entries, np.zeros(Ep - E, np.int32)])
+        lg, cache = self._jit_prefill(params, jnp.asarray(entries[None]),
+                                      max_seq=max_seq)
+        if Ep > E:
+            cache = {**cache, "pos": jnp.full_like(cache["pos"], E)}
+        return lg, cache
+
+    # ------------------------------------------------------------ chunked
+    def start_prefill(self, params, prompt, max_seq: int, chunk: int) -> dict:
+        """Open a CHUNKED prefill job: the prompt's entries are advanced
+        ``chunk`` tokens per ``advance_prefill`` call into a DETACHED
+        single-sequence cache (padded to ``max_seq``), so a long prompt
+        never stalls the in-flight decode batch behind one monolithic
+        prefill — the scheduler interleaves one chunk per tick with decode
+        and lands the finished cache through ``SequenceState.finalize``."""
+        entries = np.asarray(prompt, np.int32)[:-1]
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        return {"entries": entries, "done": 0, "cache": None,
+                "max_seq": max_seq, "chunk": chunk}
+
+    def advance_prefill(self, params, job: dict) -> bool:
+        """Advance one chunk of a ``start_prefill`` job; True when every
+        prompt entry is in the detached cache.  The first chunk compiles
+        like a short prompt; middle chunks share ONE extend compile per
+        chunk size; the final partial chunk pow2-pads on KV lanes (``pos``
+        pinned back, bit-exact) and runs exact-length on recurrent lanes,
+        so the whole job's compile set is O(log chunk), not O(prompt)."""
+        entries, done, C = job["entries"], job["done"], job["chunk"]
+        take = min(C, entries.size - done)
+        toks = entries[done:done + take]
+        if job["cache"] is None:
+            _, cache = self._jit_prefill(params, jnp.asarray(toks[None]),
+                                         max_seq=job["max_seq"])
+        else:
+            Tp = min(pow2_steps(take, C), job["max_seq"] - done) \
+                if self._bucket_prefill else take
+            if Tp > take:
+                toks = np.concatenate([toks, np.zeros(Tp - take, np.int32)])
+            _, cache = self._jit_extend(params, jnp.asarray(toks[None]),
+                                        job["cache"])
+            if Tp > take:
+                cache = {**cache,
+                         "pos": jnp.full_like(cache["pos"], done + take)}
+        job["cache"] = cache
+        job["done"] = done + take
+        return job["done"] >= entries.size
 
     def make_state(self, params, batch: int, slot_len: int, *,
                    need_tokens: Optional[Sequence[int]] = None,

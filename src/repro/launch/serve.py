@@ -41,6 +41,17 @@ restored bit-for-bit later) instead of deferring forever, so an
 overcommitted pool still completes every request.  The default sizes the
 pool to the dense worst case.  ``--kv-layout dense`` keeps the padded-slab
 layout as the parity oracle.
+
+Open-loop traffic (batched scheduler): ``--arrival poisson|bursty`` stops
+pretending every request is already waiting at t=0 and instead submits
+them at sampled arrival times (``--arrival-rate`` req/s long-run average;
+bursty adds on/off bursts at a peak rate) against a deterministic virtual
+clock (``core/traffic.py``), so the headline numbers become the
+latency-honest ones: p50/p99 TTFT measured from SUBMIT (queueing delay
+included), p50/p99 TPOT, and — with ``--slo-ms`` — SLO attainment and
+goodput-under-SLO.  ``--prefill-chunk`` caps how many prompt tokens a
+single tick may prefill, so a long prompt no longer blocks every decoding
+request for its whole prefill (chunked prefill interleaves with decode).
 """
 from __future__ import annotations
 
@@ -55,6 +66,7 @@ from repro.core.engine import CollaborativeEngine
 from repro.core.policy import (POLICIES, ThresholdPolicy, make_policy,
                                policy_from_legacy)
 from repro.core.scheduler import BatchedEngine
+from repro.core.traffic import (bursty_arrivals, poisson_arrivals, replay)
 from repro.data import SyntheticLM
 from repro.models import Model
 
@@ -131,6 +143,22 @@ def main():
                          "preempts-by-swap (host-staged KV) so every "
                          "request still completes. Default: sized to the "
                          "dense worst case")
+    ap.add_argument("--arrival", default="none",
+                    choices=["none", "poisson", "bursty"],
+                    help="open-loop arrival process (batched scheduler): "
+                         "submit requests at sampled times against a "
+                         "virtual clock instead of all-at-t=0")
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="long-run average arrival rate, requests/second "
+                         "of virtual time")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="TTFT SLO in (virtual) ms; enables SLO "
+                         "attainment + goodput-under-SLO reporting and "
+                         "feeds deadline-aware policies")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max prompt tokens prefilled per scheduler tick "
+                         "(chunked prefill); 0 disables chunking, default "
+                         "= --tick-tokens")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -161,6 +189,9 @@ def main():
         raise SystemExit(
             f"--scheduler per-request only honors the threshold-family "
             f"policies; run --policy {policy.name} on --scheduler batched")
+    if args.arrival != "none" and args.scheduler != "batched":
+        raise SystemExit("--arrival needs --scheduler batched (the "
+                         "per-request loop has no admission queue)")
     if args.scheduler == "batched":
         eng = BatchedEngine(edge, cloud, batch_size=args.batch_size,
                             gamma=args.gamma, temperature=0.0,
@@ -168,10 +199,18 @@ def main():
                             tick_tokens=args.tick_tokens,
                             kv_layout=args.kv_layout,
                             kv_block_size=args.kv_block_size,
-                            kv_blocks=args.kv_blocks)
-        t0 = time.time()
-        traces = eng.serve_batch(ep, cp, prompts, args.max_new)
-        dt = time.time() - t0
+                            kv_blocks=args.kv_blocks,
+                            slo_ms=args.slo_ms,
+                            prefill_chunk=args.prefill_chunk)
+        t0 = time.perf_counter()
+        if args.arrival != "none":
+            gen = (poisson_arrivals if args.arrival == "poisson"
+                   else bursty_arrivals)
+            at = gen(args.arrival_rate, args.requests, seed=0)
+            traces = replay(eng, ep, cp, prompts, args.max_new, at)
+        else:
+            traces = eng.serve_batch(ep, cp, prompts, args.max_new)
+        dt = time.perf_counter() - t0
         for i, tr in enumerate(traces):
             paths[tr.path] = paths.get(tr.path, 0) + 1
             print(f"req {i:3d} path={tr.path:12s} unc={tr.uncertainty:.3f} "
@@ -180,13 +219,13 @@ def main():
     else:
         eng = CollaborativeEngine(edge, cloud, gamma=args.gamma,
                                   temperature=0.0, policy=policy)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for i, prompt in enumerate(prompts):
             tr = eng.serve_reference(ep, cp, prompt, args.max_new)
             paths[tr.path] = paths.get(tr.path, 0) + 1
             print(f"req {i:3d} path={tr.path:12s} unc={tr.uncertainty:.3f} "
                   f"edge_calls={tr.edge_calls} cloud_passes={tr.cloud_passes}")
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         stats = eng.stats()
 
     toks = args.requests * args.max_new
@@ -208,6 +247,20 @@ def main():
                   f"cow_forks={stats.get('kv_cow_forks', 0)} "
                   f"preemptions={stats.get('preemptions', 0)} "
                   f"swaps={stats.get('kv_swaps', 0)}")
+    if "ttft_p50_ms" in stats:
+        unit = "virtual ms" if args.arrival != "none" else "ms"
+        print(f"latency ({unit}): "
+              f"ttft p50={stats['ttft_p50_ms']:.1f} "
+              f"p99={stats['ttft_p99_ms']:.1f} "
+              f"tpot p50={stats['tpot_p50_ms']:.2f} "
+              f"p99={stats['tpot_p99_ms']:.2f} "
+              f"makespan={stats['makespan_ms']:.0f} "
+              f"(swapped={stats['swapped_requests']} "
+              f"deferred={stats['deferred_admissions']})")
+        if args.slo_ms is not None:
+            print(f"slo: ttft<={args.slo_ms:.0f}ms "
+                  f"attainment={stats['slo_attainment']:.2f} "
+                  f"goodput={stats['goodput_slo']:.2f} req/s")
 
 
 if __name__ == "__main__":

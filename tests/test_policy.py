@@ -393,6 +393,35 @@ def test_budget_policy_sla_classes():
     assert s["policy_sla_classes"] == {"premium": 1, "batch": 1}
 
 
+def test_deadline_classifier_buckets_by_slo_pressure():
+    """``deadline_classifier`` classes a request by the fraction of its
+    TTFT SLO already burned queueing, degrading to the first class when
+    no SLO / wait feed exists (closed-loop runs)."""
+    from repro.core.policy import deadline_classifier
+    cls = deadline_classifier({"relaxed": 0.25, "standard": 0.5,
+                               "urgent": float("inf")})
+    assert cls({"wait_ms": 10.0, "slo_ms": 100.0}) == "relaxed"
+    assert cls({"wait_ms": 40.0, "slo_ms": 100.0}) == "standard"
+    assert cls({"wait_ms": 90.0, "slo_ms": 100.0}) == "urgent"
+    # boundary inclusive; order comes from boundary values, not dict order
+    assert cls({"wait_ms": 25.0, "slo_ms": 100.0}) == "relaxed"
+    # graceful degradation: no SLO configured or no wait feed
+    assert cls({"wait_ms": 0.0, "slo_ms": None}) == "relaxed"
+    assert cls({}) == "relaxed"
+    with pytest.raises(ValueError):
+        deadline_classifier({})
+    # plugged into BudgetPolicy: accrual scales by the deadline class
+    pol = BudgetPolicy(tokens_per_request=4.0,
+                       sla={"relaxed": 1.0, "urgent": 2.0},
+                       classify=deadline_classifier(
+                           {"relaxed": 0.5, "urgent": float("inf")}))
+    pol.assign({"rid": 0, "wait_ms": 5.0, "slo_ms": 100.0})
+    pol.assign({"rid": 1, "wait_ms": 95.0, "slo_ms": 100.0})
+    s = pol.stats()
+    assert s["policy_cloud_pool"] == 12.0
+    assert s["policy_sla_classes"] == {"relaxed": 1, "urgent": 1}
+
+
 # ---------------------------------------------------------------- metrics
 def test_trace_metrics_helpers():
     from repro.core.scheduler import RequestTrace

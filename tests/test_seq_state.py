@@ -19,7 +19,7 @@ from repro.core.engine import CollaborativeEngine
 from repro.core.policy import (SpeculativePolicy, ThresholdPolicy,
                                policy_from_legacy)
 from repro.core.scheduler import BatchedEngine
-from repro.core.seq_state import layout_for
+from repro.core.seq_state import PagedKV, layout_for
 from repro.core.speculative import autoregressive_baseline
 from repro.models import Model
 
@@ -92,6 +92,71 @@ def test_recurrent_edge_parity_staggered(fam, edges, cloud):
         assert bt.path == rt.path == "edge"
         assert bt.tokens == rt.tokens and len(bt.tokens) == m
         assert abs(bt.uncertainty - rt.uncertainty) < 1e-5
+
+
+# ---------------------------------------------------------------- chunked
+@pytest.mark.parametrize("fam", EDGE_ARCHS)
+def test_chunked_prefill_parity(fam, edges, cloud):
+    """Long prompts admitted via DETACHED CHUNKED PREFILL (prefill_chunk=8
+    entries landing across ticks, interleaved with the batch's decode)
+    keep exact greedy token parity with ``serve_reference`` on EVERY
+    family.  Lengths straddle the chunk size: an exact multiple (33 ->
+    32 entries), above/below multiples (21, 16), and one short prompt (9)
+    that takes the unchunked whole-prompt path alongside the jobs."""
+    em, ep = edges[fam]
+    cm, cp = cloud
+    prompts = _prompts(512, [(33, 0), (21, 5), (16, 9), (9, 2)])
+    budgets = [6, 4, 7, 5]
+    ref = CollaborativeEngine(em, cm, temperature=0.0,
+                              policy=ThresholdPolicy(1.1), use_cache=False)
+    be = BatchedEngine(em, cm, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       tick_tokens=4, prefill_chunk=8)
+    bts = be.serve_batch(ep, cp, prompts, budgets)
+    for p, m, bt in zip(prompts, budgets, bts):
+        rt = ref.serve_reference(ep, cp, p, m)
+        assert bt.path == rt.path == "edge"
+        assert bt.tokens == rt.tokens and len(bt.tokens) == m
+        assert abs(bt.uncertainty - rt.uncertainty) < 1e-5
+
+
+def test_share_hints_keep_prefix_sharing_under_chunking(edges, cloud,
+                                                        monkeypatch):
+    """Shared-prefix prompts keep block-level prefix sharing when chunked
+    prefill is on: ``share_hints`` routes them down the monolithic admit
+    path (a chunked ``begin`` defers index registration until finalize,
+    which would forfeit same-wave sharing), while a prompt with a unique
+    first block still chunks.  Token parity with ``serve_reference``
+    holds throughout."""
+    em, ep = edges["dense"]
+    cm, cp = cloud
+    pref = ((np.arange(16) * 3) % 512).astype(np.int32)     # 2 full blocks
+    prompts = [np.concatenate([pref, ((np.arange(5) * 11 + o) % 512)
+                               .astype(np.int32)]) for o in range(3)]
+    prompts.append(((np.arange(25) * 13 + 200) % 512).astype(np.int32))
+    begin_lens = []
+    orig_begin = PagedKV.begin
+    monkeypatch.setattr(
+        PagedKV, "begin",
+        lambda self, b, prompt, need: begin_lens.append(
+            int(np.asarray(prompt).size)) or orig_begin(
+                self, b, prompt, need))
+    ref = CollaborativeEngine(em, cm, temperature=0.0,
+                              policy=ThresholdPolicy(1.1), use_cache=False)
+    be = BatchedEngine(em, cm, batch_size=4, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       tick_tokens=4, kv_layout="paged", kv_block_size=8,
+                       prefill_chunk=8)
+    bts = be.serve_batch(ep, cp, prompts, 6)
+    for p, bt in zip(prompts, bts):
+        rt = ref.serve_reference(ep, cp, p, 6)
+        assert bt.path == rt.path == "edge"
+        assert bt.tokens == rt.tokens
+    st = be.stats()
+    # first registrant doesn't count as a hit; its two wave twins do
+    assert st["kv_prefix_hits"] == 2 and st["kv_shared_blocks"] > 0
+    # only the unique-first-block prompt took the chunked begin path
+    assert begin_lens == [25]
 
 
 # ---------------------------------------------------------------- escalation

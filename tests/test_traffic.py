@@ -1,0 +1,393 @@
+"""Open-loop traffic harness + latency-honest scheduler accounting.
+
+Three layers under test:
+
+  * ``core/traffic.py`` in isolation — arrival-process determinism and
+    long-run rates, virtual/wall clock semantics, and the
+    ``latency_rollup`` math on hand-built event dicts.
+  * ``BatchedEngine`` lifecycle events under open-loop arrivals —
+    submit <= admit <= first-token <= retire per request, rollup fields
+    surfaced through ``stats()``, and (hypothesis) TTFT monotone in
+    arrival order under a deterministic trace.
+  * The scheduler-bug regressions this PR pins: cloud-lane requests no
+    longer head-of-line blocked behind a full edge batch; ``decide()``
+    sees steps-actually-spent as a distinct array from the budget;
+    queued-request vs swapped-victim-restore stalls raise distinct
+    errors; a swapped-out leader still coalesces same-prompt followers;
+    ``_pick_victim`` honors its documented tie-break.
+"""
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import ThresholdPolicy
+from repro.core.scheduler import BatchedEngine
+from repro.core.seq_state import PagedKV
+from repro.core.traffic import (VirtualClock, WallClock, bursty_arrivals,
+                                latency_rollup, poisson_arrivals, replay,
+                                trace_arrivals)
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, specs):
+    return [((np.arange(n) * 7 + off) % vocab).astype(np.int32)
+            for n, off in specs]
+
+
+# ---------------------------------------------------------------- arrivals
+def test_poisson_arrivals_deterministic_sorted():
+    a = poisson_arrivals(100.0, 500, seed=3)
+    b = poisson_arrivals(100.0, 500, seed=3)
+    np.testing.assert_array_equal(a, b)
+    assert a.size == 500 and np.all(np.diff(a) >= 0)
+    # long-run mean gap ~ 1000/rate ms
+    assert 0.8 < np.diff(a).mean() / 10.0 < 1.25
+    assert poisson_arrivals(100.0, 0).size == 0
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 4)
+
+
+def test_bursty_arrivals_long_run_rate():
+    a = bursty_arrivals(100.0, 400, seed=5, burst=8, peak=8.0)
+    assert a.size == 400 and np.all(np.diff(a) >= 0)
+    # long-run average must stay ~rate even though bursts run at 8x:
+    # span ~ n/rate seconds
+    span_s = (a[-1] - a[0]) / 1e3
+    assert 0.6 < span_s / (400 / 100.0) < 1.4
+    # instantaneous burstiness: the median gap (inside a burst) is far
+    # below the mean gap (which amortizes the off-periods)
+    gaps = np.diff(a)
+    assert np.median(gaps) < 0.5 * gaps.mean()
+    for bad in [dict(rate=0.0), dict(peak=1.0), dict(burst=0)]:
+        with pytest.raises(ValueError):
+            bursty_arrivals(**{**dict(rate=50.0, peak=4.0, burst=4),
+                               **bad}, n=8)
+
+
+def test_trace_arrivals_sorts_and_validates():
+    np.testing.assert_array_equal(trace_arrivals([5.0, 1.0, 3.0]),
+                                  [1.0, 3.0, 5.0])
+    with pytest.raises(ValueError):
+        trace_arrivals([0.0, np.nan])
+
+
+# ---------------------------------------------------------------- clocks
+def test_virtual_clock_charges_and_jumps():
+    c = VirtualClock(step_ms=2.0, prefill_token_ms=0.5)
+    assert c.now() == 0.0
+    c.on_steps(4)
+    assert c.now() == 8.0
+    c.on_prefill(6)
+    assert c.now() == 11.0
+    c.wait_until(100.0)
+    assert c.now() == 100.0
+    c.wait_until(50.0)                  # never moves backward
+    assert c.now() == 100.0
+    assert VirtualClock(step_ms=8.0).prefill_token_ms == 1.0  # default /8
+    with pytest.raises(ValueError):
+        VirtualClock(step_ms=0.0)
+
+
+def test_wall_clock_monotone_and_sleeps():
+    c = WallClock()
+    t0 = c.now()
+    c.on_steps(1000)                    # modeled costs are no-ops
+    c.on_prefill(1000)
+    target = c.now() + 15.0
+    c.wait_until(target)
+    assert c.now() >= target > t0
+    assert WallClock.step_ms == 0.0
+
+
+# ---------------------------------------------------------------- rollup
+def test_latency_rollup_math():
+    events = {
+        0: {"submit_ms": 0.0, "admit_ms": 1.0, "first_token_ms": 10.0,
+            "retire_ms": 40.0, "tokens": 4, "swaps": 1, "defers": 2},
+        1: {"submit_ms": 5.0, "first_token_ms": 35.0, "retire_ms": 35.0,
+            "tokens": 1, "swaps": 0, "defers": 0},
+        2: {"submit_ms": 6.0, "swaps": 0, "defers": 1},   # never finished
+    }
+    r = latency_rollup(events, slo_ms=20.0)
+    assert r["requests"] == 3 and r["completed"] == 2
+    # ttfts: 10.0 and 30.0
+    assert r["ttft_p50_ms"] == pytest.approx(20.0)
+    assert r["ttft_p99_ms"] == pytest.approx(29.8)
+    # only rid 0 streamed >= 2 tokens: tpot = 30/3
+    assert r["tpot_p50_ms"] == pytest.approx(10.0)
+    assert r["swapped_requests"] == 1
+    assert r["deferred_admissions"] == 3
+    assert r["makespan_ms"] == pytest.approx(40.0)
+    # rid 0 met the 20ms TTFT SLO, rid 1 missed
+    assert r["slo_attainment"] == pytest.approx(0.5)
+    assert r["goodput_slo"] == pytest.approx(1 / 0.040)
+    # no SLO -> every completion counts
+    assert latency_rollup(events)["slo_attainment"] == 1.0
+    empty = latency_rollup({})
+    assert empty["completed"] == 0 and empty["goodput_slo"] == 0.0
+
+
+# ---------------------------------------------------------------- open loop
+def test_open_loop_event_ordering(pair):
+    """Per-request lifecycle timestamps are causally ordered and the
+    rollup lands in ``stats()`` with a positive goodput."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size,
+                       [(8, 0), (6, 3), (10, 5), (7, 11), (9, 2), (6, 9)])
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       tick_tokens=4, slo_ms=500.0)
+    at = poisson_arrivals(200.0, len(prompts), seed=11)
+    traces = replay(be, ep, cp, prompts, 6, at)
+    assert len(traces) == len(prompts)
+    assert all(t.path == "edge" for t in traces)
+    for rid, ev in be.events.items():
+        assert ev["submit_ms"] <= ev["admit_ms"] <= ev["first_token_ms"] \
+            <= ev["retire_ms"]
+        assert ev["tokens"] == 6
+    stats = be.stats()
+    assert stats["completed"] == stats["requests"] == len(prompts)
+    assert stats["ttft_p99_ms"] >= stats["ttft_p50_ms"] > 0
+    assert stats["goodput_slo"] > 0 and stats["slo_attainment"] == 1.0
+
+
+def test_future_arrivals_wait_for_the_clock(pair):
+    """A request submitted far in the virtual future is invisible to
+    admission until the clock reaches it: its admit stamp can never
+    precede its arrival."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3)])
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       tick_tokens=4)
+    traces = replay(be, ep, cp, prompts, 4, [0.0, 5000.0])
+    assert all(t.path == "edge" for t in traces)
+    ev = be.events
+    assert ev[1]["admit_ms"] >= 5000.0
+    assert ev[0]["retire_ms"] < 5000.0  # the idle gap was jumped, not spun
+
+
+# ------------------------------------------------- head-of-line regression
+class _LaneByBudget(ThresholdPolicy):
+    """Tiny requests go to the cloud lane, everything else collaborates."""
+    name = "lane-by-budget"
+
+    def assign(self, features):
+        return "cloud" if features["max_new"] <= 2 else "collab"
+
+
+def test_cloud_lane_not_blocked_by_full_edge_batch(pair):
+    """REGRESSION (head-of-line): with every edge slot occupied by
+    long-running collab requests, a cloud-lane request must still be
+    probed, generated and retired — before any collab request even
+    produces its first token, not one-per-freed-slot ticks later."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size,
+                       [(8, 0), (6, 3), (10, 5), (7, 11)])
+    budgets = [24, 24, 24, 2]           # [3] -> cloud lane
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=_LaneByBudget(1.1), use_cache=False,
+                       tick_tokens=4)
+    traces = be.serve_batch(ep, cp, prompts, budgets)
+    assert [t.path for t in traces[:3]] == ["edge"] * 3
+    assert traces[3].path == "cloud" and len(traces[3].tokens) == 2
+    ev = be.events
+    # the batch is full (2 slots, 4 requests) the whole run; the cloud
+    # request retires no later than the FIRST decode tick's stamps
+    assert ev[3]["retire_ms"] <= min(ev[r]["first_token_ms"]
+                                     for r in range(3))
+
+
+# ------------------------------------------------- steps/budget de-aliasing
+class _RecordingPolicy(ThresholdPolicy):
+    """Captures the (steps, budget) arrays ``decide`` receives and the
+    per-completion feedback features."""
+    name = "recording"
+
+    def __init__(self, threshold):
+        super().__init__(threshold)
+        self.decided = []
+        self.feedbacks = []
+
+    def decide(self, unc, steps, budget):
+        self.decided.append((np.array(steps), np.array(budget)))
+        return super().decide(unc, steps, budget)
+
+    def feedback(self, action, quality, cost, features=None):
+        self.feedbacks.append(features)
+
+
+def test_decide_sees_spent_steps_not_budget(pair):
+    """REGRESSION (aliasing): with a stop token ending decode early,
+    ``decide``'s steps array reflects tokens actually produced — strictly
+    below the budget array — and feedback carries the same spent count.
+    The prompt is longer than the chunk so chunked prefill is active."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(12, 0), (12, 3)])
+    probe = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                          policy=ThresholdPolicy(1.1), use_cache=False,
+                          tick_tokens=4)
+    first = probe.serve_batch(ep, cp, [prompts[0]], 8)[0].tokens
+    pol = _RecordingPolicy(1.1)
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=pol, use_cache=False, tick_tokens=4,
+                       stop_token=first[2])
+    traces = be.serve_batch(ep, cp, [prompts[0]], 8)
+    # greedy decode re-emits the probed stream until the stop token
+    assert traces[0].tokens == first[:3]
+    (steps, budget), = pol.decided
+    assert steps.tolist() == [3] and budget.tolist() == [8]
+    assert int(steps[0]) < int(budget[0]), "steps aliased to budget"
+    fb, = pol.feedbacks
+    assert fb["steps"] == 3 and fb["budget"] == 8
+    assert traces[0].edge_calls == 3
+
+
+# ---------------------------------------------------------- stall messages
+def test_stall_error_queued_request(pair, monkeypatch):
+    """A queued request the pool can never admit (even with sharing) fails
+    fast with the raise-kv_blocks message naming the QUEUED case."""
+    edge, ep, cloud, cp = pair
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       kv_layout="paged", kv_block_size=4)
+    monkeypatch.setattr(PagedKV, "admit", lambda self, *a, **k: False)
+    monkeypatch.setattr(PagedKV, "fits_empty",
+                        lambda self, need, prompt=None: prompt is None)
+    with pytest.raises(RuntimeError, match="queued request"):
+        be.serve_batch(ep, cp, _prompts(edge.cfg.vocab_size, [(8, 0)]), 4)
+
+
+def test_stall_error_swapped_victim_restore(pair, monkeypatch):
+    """A swapped-out victim the pool can never restore raises the
+    DISTINCT swapped-victim message (not the queued-request one): the
+    overcommitted pool swaps a victim out, then ``swap_in`` is broken so
+    the restore can never succeed even after the batch drains."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(9, 0), (9, 3)])
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       tick_tokens=4, prefill_chunk=0,
+                       kv_layout="paged", kv_block_size=4, kv_blocks=6)
+    monkeypatch.setattr(PagedKV, "swap_in", lambda self, b, h: False)
+    with pytest.raises(RuntimeError,
+                       match="cannot restore swapped-out request"):
+        # staggered arrivals: the second request preempts the first
+        replay(be, ep, cp, prompts, 8, [0.0, 2.0])
+
+
+# ------------------------------------------------- swapped leader coalesce
+def test_swapped_leader_still_coalesces_followers(pair):
+    """A preempted (swapped-out) in-flight request keeps its ``_leaders``
+    entry, so an identical later prompt coalesces into a follower and is
+    served from the leader's eventual result instead of paying a second
+    decode."""
+    edge, ep, cloud, cp = pair
+    pa, pb = _prompts(edge.cfg.vocab_size, [(9, 0), (9, 101)])
+    # pool of 6 blocks (1 trap + 5 usable) x 4 tokens: each request needs
+    # 4 blocks, so admitting B preempts A; C == A coalesces with swapped A
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), cache_threshold=0.999,
+                       tick_tokens=4, prefill_chunk=0,
+                       kv_layout="paged", kv_block_size=4, kv_blocks=6)
+    ta, tb, tc = replay(be, ep, cp, [pa, pb, pa], 8, [0.0, 2.0, 2.0])
+    assert be.stats()["preemptions"] >= 1
+    assert be.events[0]["swaps"] >= 1, "expected A to be the swap victim"
+    assert ta.path == "edge" and tb.path == "edge"
+    assert tc.path == "cache" and tc.tokens == ta.tokens
+    assert be.events[2]["retire_ms"] >= be.events[0]["retire_ms"]
+
+
+# ---------------------------------------------------------- victim picking
+def _victim_env(specs, prefill_jobs=()):
+    """specs: per-slot (rid or None, steps_left)."""
+    slots = [types.SimpleNamespace(
+        req=None if rid is None else types.SimpleNamespace(rid=rid))
+        for rid, _ in specs]
+    steps = np.array([s for _, s in specs], np.int32)
+    me = types.SimpleNamespace(_prefill_jobs=dict.fromkeys(prefill_jobs))
+    state = types.SimpleNamespace(swappable=lambda b: True)
+    return me, state, slots, steps
+
+
+def test_pick_victim_most_steps_then_youngest():
+    """Tie-break matches the docstring: MOST remaining steps first, then
+    the youngest (largest) rid; wave members, empty slots and
+    mid-chunked-prefill slots are exempt."""
+    pick = BatchedEngine._pick_victim
+    me, st, slots, steps = _victim_env([(0, 3), (1, 7), (2, 5)])
+    assert pick(me, st, slots, steps, wave=set()) == 1
+    # tie on steps -> youngest rid wins
+    me, st, slots, steps = _victim_env([(4, 7), (9, 7), (2, 5)])
+    assert pick(me, st, slots, steps, wave=set()) == 1
+    # wave exemption
+    me, st, slots, steps = _victim_env([(0, 3), (1, 7), (2, 5)])
+    assert pick(me, st, slots, steps, wave={1}) == 2
+    # mid-prefill exemption
+    me, st, slots, steps = _victim_env([(0, 3), (1, 7), (2, 5)],
+                                       prefill_jobs=[1])
+    assert pick(me, st, slots, steps, wave=set()) == 2
+    # empty slots / everything exempt -> no victim
+    me, st, slots, steps = _victim_env([(None, 0), (7, 4)])
+    assert pick(me, st, slots, steps, wave={1}) is None
+    # unswappable slots are exempt
+    me, st, slots, steps = _victim_env([(0, 3), (1, 7)])
+    st.swappable = lambda b: b == 0
+    assert pick(me, st, slots, steps, wave=set()) == 0
+
+
+# ---------------------------------------------------------------- property
+@pytest.fixture(scope="module")
+def mono_engine(pair):
+    edge, ep, cloud, cp = pair
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=ThresholdPolicy(1.1), use_cache=False,
+                       tick_tokens=4)
+    return be, ep, cp, edge.cfg.vocab_size
+
+
+def _check_ttft_monotone(mono_engine, gaps):
+    """PROPERTY: under a deterministic trace (FIFO admission, uniform
+    budgets, no cache), first-token times are nondecreasing in arrival
+    order — a later arrival can never beat an earlier one to its first
+    token."""
+    be, ep, cp, vocab = mono_engine
+    # the engine's virtual clock persists across runs: offset the trace
+    # so arrivals are in this run's future, not its past
+    at = be.clock.now() + np.cumsum(np.asarray(gaps, np.float64))
+    prompts = _prompts(vocab, [(6 + i % 3, 5 * i) for i in range(len(at))])
+    traces = replay(be, ep, cp, prompts, 4, at)
+    assert len(traces) == len(at)
+    firsts = [be.events[r]["first_token_ms"] for r in sorted(be.events)]
+    assert all(a <= b for a, b in zip(firsts, firsts[1:])), firsts
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # deterministic fallback traces
+    @pytest.mark.parametrize("gaps", [
+        [0, 0, 0],                       # simultaneous burst
+        [0, 40, 0, 40],                  # arrivals straddle ticks
+        [7, 1, 0, 23, 2, 11],            # mixed gaps, > batch_size deep
+        [40, 40, 40],                    # idle gaps between every arrival
+    ])
+    def test_ttft_monotone_in_arrival_order(mono_engine, gaps):
+        _check_ttft_monotone(mono_engine, gaps)
+else:
+    @settings(max_examples=8, deadline=None)
+    @given(st.lists(st.integers(0, 40), min_size=3, max_size=6))
+    def test_ttft_monotone_in_arrival_order(mono_engine, gaps):
+        _check_ttft_monotone(mono_engine, gaps)
