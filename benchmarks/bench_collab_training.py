@@ -4,18 +4,16 @@ pruning deployment costs."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import batches, dirichlet_clients
 from repro.models import Model, cross_entropy
 from repro.training import AdamW, make_train_step, train
 from repro.training.distillation import kd_loss, teacher_logits_fn
-from repro.training.lora import (hetlora_aggregate, init_lora, lora_loss_fn,
-                                 lora_param_count, merge_lora)
+from repro.training.lora import (hetlora_aggregate, init_lora,
+                                 lora_param_count)
 from repro.training.pruning import magnitude_masks, sparsity_report
-from repro.training.quantization import (dequantize_params, quantization_error,
+from repro.training.quantization import (quantization_error,
                                          quantize_params, quantized_bytes)
 
 

@@ -4,10 +4,8 @@ and the hybrid cost model's optimal branch points per architecture."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config, list_archs
+from repro.configs import get_config
 from repro.core.compression import (Identity, Int4Quantizer, Int8Quantizer,
                                     TopKSparsifier, entropy_bits_estimate,
                                     relative_error)

@@ -13,7 +13,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.routing import UCBRouter
 from repro.core.uncertainty import entropy
-from repro.data import SyntheticLM, batches
+from repro.data import batches
 from repro.models import Model, cross_entropy
 from repro.training import AdamW, train
 

@@ -466,6 +466,58 @@ def _policies(edge, ep, cloud, cp, csv, rows):
     csv(f"policy_bandit_adaptation,share_last,{shares[-1]:.3f}")
 
 
+def _multi_device(edge, ep, cloud, cp, csv, rows):
+    """SHARDED-SERVING arm: the batched scheduler on a simulated (2, 4)
+    host mesh — cloud verifier tensor-parallel over 'model', edge drafts
+    data-parallel over 'data', per-shard paged pools — against the
+    single-device engine on the same every-request-escalates stream.
+    Token parity must be exact, and the sharded pool's usable capacity
+    (``kv_capacity_blocks``) must scale with the shard count at the same
+    per-device byte budget.  Skipped (with a ``skipped`` row, so
+    ``scripts/check_bench.py --require-multi-device`` can tell absence
+    from failure) unless the process was started with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    if jax.device_count() < 8:
+        rows["multi_device"] = {
+            "skipped": "needs 8 devices (set XLA_FLAGS="
+                       "--xla_force_host_platform_device_count=8 before "
+                       f"process start), have {jax.device_count()}"}
+        csv("serving_multi_device,skipped,1")
+        return
+    from repro.launch.mesh import make_host_mesh
+    synth = SyntheticLM(edge.cfg.vocab_size)
+    rng = np.random.default_rng(7)
+    prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+               for i in range(REQUESTS)]
+    arms = {}
+    for name, mesh in (("single", None), ("mesh", make_host_mesh(2, 4))):
+        dt, traces, stats = _batched(edge, cloud, ep, cp, prompts, -1.0,
+                                     kv_layout="paged", mesh=mesh)
+        arms[name] = (dt, traces, stats)
+    (dt_s, tr_s, st_s), (dt_m, tr_m, st_m) = arms["single"], arms["mesh"]
+    assert all(a.tokens == b.tokens for a, b in zip(tr_s, tr_m)), \
+        "mesh engine diverged from the single-device engine"
+    scale = st_m["kv_capacity_blocks"] / st_s["kv_capacity_blocks"]
+    assert st_m["kv_shards"] > 1, st_m["kv_shards"]
+    assert scale > 1.0, (st_s["kv_capacity_blocks"],
+                         st_m["kv_capacity_blocks"])
+    rows["multi_device"] = {
+        "mesh_shape": st_m["mesh_shape"],
+        "mesh_devices": st_m["mesh_devices"],
+        "single_req_s": len(prompts) / dt_s,
+        "mesh_req_s": len(prompts) / dt_m,
+        "kv_shards": st_m["kv_shards"],
+        "single_kv_capacity_blocks": st_s["kv_capacity_blocks"],
+        "mesh_kv_capacity_blocks": st_m["kv_capacity_blocks"],
+        "kv_capacity_scale_x": scale,
+        "token_parity": True,
+    }
+    csv(f"serving_multi_device,single_req_s,{len(prompts) / dt_s:.3f}")
+    csv(f"serving_multi_device,mesh_req_s,{len(prompts) / dt_m:.3f}")
+    csv(f"serving_multi_device,kv_shards,{st_m['kv_shards']}")
+    csv(f"serving_multi_device,kv_capacity_scale_x,{scale:.2f}")
+
+
 def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
     global REQUESTS, MAX_NEW, BATCH
     saved = (REQUESTS, MAX_NEW, BATCH)
@@ -485,6 +537,7 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
         _open_loop(edge, ep, cloud, cp, csv, rows)
         _recurrent_mix(cloud, cp, csv, rows)
         _policies(edge, ep, cloud, cp, csv, rows)
+        _multi_device(edge, ep, cloud, cp, csv, rows)
     finally:
         REQUESTS, MAX_NEW, BATCH = saved
     if out:

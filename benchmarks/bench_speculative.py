@@ -9,10 +9,8 @@ raises acceptance.
 """
 from __future__ import annotations
 
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

@@ -5,7 +5,6 @@ aggregates with HETLoRA's rank-aware scheme.
     PYTHONPATH=src python examples/federated_lora.py
 """
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticLM, batches, dirichlet_clients

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Assert the serving benchmark artifact (``BENCH_serving.json``) is sane.
+
+CI's bench-smoke job runs this right after ``benchmarks/bench_serving.py``;
+the unit test (``tests/test_check_bench.py``) runs it over synthetic JSON
+so an assert regression fails locally, not just in Actions.
+
+    python scripts/check_bench.py [--path BENCH_serving.json]
+        [--require-multi-device]
+
+Exit code 0 = every arm present and within bounds; any failed check raises
+(non-zero exit) with the offending row in the message.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(rows: dict, *, require_multi_device: bool = False, out=print) -> None:
+    """Validate a loaded BENCH_serving.json result set.  Raises
+    ``AssertionError``/``KeyError`` on the first violated bound."""
+    arm = rows["paged_vs_dense"]
+    assert arm["paged"]["kv_peak_bytes"] < arm["dense"]["kv_peak_bytes"]
+    assert arm["kv_savings_x"] > 1.0
+    out(f"paged KV savings: {arm['kv_savings_x']:.2f}x")
+
+    sp = rows["shared_prefix"]
+    assert sp["kv_savings_x"] > 1.5, sp
+    assert sp["prefix_hits"] > 0 and sp["shared_blocks"] > 0, sp
+    sp_x, sp_n = sp["kv_savings_x"], sp["shared_blocks"]
+    out(f"shared-prefix KV savings: {sp_x:.2f}x over {sp_n} shared blocks")
+
+    oc = rows["overcommit"]
+    assert oc["deferred_forever"] == 0, oc
+    assert oc["completed"] == rows["config"]["requests"], oc
+    assert oc["preemptions"] > 0, oc
+    out(f"overcommit: all {oc['completed']} requests served,")
+    out(f"  {oc['preemptions']} preemptions, {oc['deferred_forever']} deferred")
+
+    ol = rows["open_loop"]
+    for arm_name in ("poisson", "bursty_2x"):
+        a = ol[arm_name]
+        keys = ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "goodput_slo")
+        for k in keys + ("slo_attainment",):
+            assert k in a, (arm_name, k)
+        assert a["completed"] == a["requests"], (arm_name, a)
+        assert a["ttft_p99_ms"] > 0, (arm_name, a)
+        ttft = f"{a['ttft_p50_ms']:.1f}/{a['ttft_p99_ms']:.1f}"
+        out(f"open-loop {arm_name} ttft p50/p99: {ttft} ms,")
+        out(f"  tpot p50: {a['tpot_p50_ms']:.2f} ms,")
+        out(f"  goodput: {a['goodput_slo']:.2f} req/s")
+    assert ol["poisson"]["goodput_slo"] > 0, ol["poisson"]
+    assert ol["bursty_2x"]["deferred_admissions"] >= 0
+
+    rec = rows["serving_recurrent"]
+    assert {r["family"] for r in rec.values()} == {"ssm", "hybrid"}
+    for arch, r in rec.items():
+        out(f"{arch} batched speculation speedup: {r['speedup']:.2f}x")
+
+    pol = rows["policy"]
+    for name in ("threshold", "cascade", "bandit"):
+        p = pol[name]
+        assert p["req_s"] > 0, (name, p)
+        # cost ratio, not a fraction: speculative verification scores
+        # gamma+1 tokens per pass, bounding it by 5 (gamma 4)
+        assert 0.0 <= p["cloud_token_share"] <= 5.0, (name, p)
+        assert 0.0 <= p["quality_proxy"] <= 1.0, (name, p)
+        out(f"policy {name} req/s: {p['req_s']:.2f},")
+        out(f"  cloud share: {p['cloud_token_share']:.3f},")
+        out(f"  quality: {p['quality_proxy']:.3f}")
+    ad = pol["bandit_adaptation"]
+    assert ad["share_last"] < ad["share_first"], ad
+    first, last = ad["share_first"], ad["share_last"]
+    out(f"bandit cloud-token share adapted: {first:.3f} -> {last:.3f}")
+
+    md = rows["multi_device"]
+    if "skipped" in md:
+        msg = f"multi_device arm was skipped: {md['skipped']}"
+        assert not require_multi_device, msg
+        out(f"multi-device arm skipped: {md['skipped']}")
+        return
+    assert md["token_parity"] is True, md
+    assert md["kv_shards"] > 1, md
+    assert md["kv_capacity_scale_x"] > 1.0, md
+    assert md["mesh_kv_capacity_blocks"] > md["single_kv_capacity_blocks"], md
+    assert md["single_req_s"] > 0 and md["mesh_req_s"] > 0, md
+    out(f"multi-device: {md['mesh_shape']} mesh, {md['kv_shards']} kv shards,")
+    out(f"  kv capacity x{md['kv_capacity_scale_x']:.2f},")
+    out(f"  req/s {md['mesh_req_s']:.2f} (single {md['single_req_s']:.2f})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--path",
+        default="BENCH_serving.json",
+        help="benchmark artifact to validate",
+    )
+    ap.add_argument(
+        "--require-multi-device",
+        action="store_true",
+        help="fail if the multi_device arm was skipped (CI runs the bench "
+        "under XLA_FLAGS=--xla_force_host_platform_device_count=8, so a "
+        "skip there means the mesh never ran)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.path) as f:
+        rows = json.load(f)
+    check(rows, require_multi_device=args.require_multi_device)
+    print("BENCH_serving.json: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

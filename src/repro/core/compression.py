@@ -9,7 +9,6 @@ entropy-compression / EdgeShard-style selective-transmission discussion.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

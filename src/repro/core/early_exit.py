@@ -9,9 +9,8 @@ Two pieces:
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.uncertainty import get_estimator

@@ -12,15 +12,14 @@ point for zamba2 keeps the shared attention block cloud-side.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import Compressed, Identity
+from repro.core.compression import Identity
 from repro.models import layers as L
-from repro.models import moe as MOE
 from repro.models.transformer import _block
 
 

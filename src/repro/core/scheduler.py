@@ -197,7 +197,8 @@ class BatchedEngine:
                  kv_blocks: Optional[int] = None, clock=None,
                  slo_ms: Optional[float] = None,
                  prefill_chunk: Optional[int] = None,
-                 stop_token: Optional[int] = None):
+                 stop_token: Optional[int] = None,
+                 mesh=None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if tick_tokens < 1:
@@ -231,12 +232,28 @@ class BatchedEngine:
         self._esc_fns = {"cloud": self._cloud_escalate,
                          "skeleton": self._skeleton_escalate,
                          "speculative": self._spec_escalate}
+        # mesh serving: edge drafts are DATA-parallel (batch slots split
+        # over the data axes, params replicated); the cloud verifier is
+        # TENSOR-parallel over 'model' (params sharded by the launch/
+        # sharding.py rules).  Escalation groups are replicated over the
+        # data axes (gather_wave hands every data shard the full wave), so
+        # the cloud lane never data-shards its pools.
+        self.mesh = mesh
+        if mesh is not None:
+            dp = 1
+            for a in mesh.axis_names:
+                if a != "model":
+                    dp *= mesh.shape[a]
+            self._data_shards = dp if batch_size % dp == 0 else 1
+        else:
+            self._data_shards = 1
         self.edge = Lane(edge_model, estimator, temperature,
                          layout=layout_for(edge_model, self.kv_layout),
-                         block_size=kv_block_size)
+                         block_size=kv_block_size, mesh=mesh,
+                         data_shards=self._data_shards)
         self.cloud = Lane(cloud_model, estimator, temperature,
                           layout=layout_for(cloud_model, self.kv_layout),
-                          block_size=kv_block_size)
+                          block_size=kv_block_size, mesh=mesh)
         self.cache = SemanticCache(threshold=cache_threshold) if use_cache \
             else None
         self.spec = BatchedSpecDecoder(edge_model, cloud_model, gamma=gamma,
@@ -288,7 +305,32 @@ class BatchedEngine:
     def run(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
         """Drain the queue; returns {rid: RequestTrace} for this drain.
         Open-loop: requests with a future ``at`` stay invisible until the
-        engine's clock reaches them (idle gaps are jumped/slept over)."""
+        engine's clock reaches them (idle gaps are jumped/slept over).
+
+        With ``mesh=...`` the drain runs inside a ``runtime.mesh_context``:
+        edge params are pinned replicated, cloud params tensor-parallel per
+        ``launch/sharding.py``, and every jit traced during the drain picks
+        up the mesh (activation constraints, ``gather_wave`` collectives).
+        ``mesh=None`` takes the exact pre-mesh path — no context, no
+        placement, no constraint ops in any trace."""
+        if self.mesh is None:
+            return self._run_impl(edge_params, cloud_params)
+        from repro import runtime
+        from repro.launch.sharding import (params_shardings,
+                                           replicated_shardings)
+        edge_params = jax.device_put(
+            edge_params, replicated_shardings(edge_params, self.mesh))
+        cloud_params = jax.device_put(
+            cloud_params, params_shardings(cloud_params, self.mesh,
+                                           self.cloud_model.cfg))
+        with runtime.mesh_context(self.mesh):
+            res = self._run_impl(edge_params, cloud_params)
+        self._kv_stats["mesh_devices"] = self.mesh.size
+        self._kv_stats["mesh_shape"] = {k: int(v)
+                                        for k, v in self.mesh.shape.items()}
+        return res
+
+    def _run_impl(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
         if not self._queue:
             return {}
         clock = self.clock

@@ -26,7 +26,6 @@ def partial_extend_step(params, tokens, cache, cfg, k: int, *, window: int = 0):
     [0, k) at [pos, pos+T). Returns (logits (B,T,V), cache)."""
     h = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.activ_dtype))
     pos = cache["pos"]
-    T = tokens.shape[1]
     lower = jax.tree.map(lambda x: x[:k], params["blocks"])
     ck, cv = cache["k"][:k], cache["v"][:k]
 

@@ -49,10 +49,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.paged_cache import (BlockPool, blocks_for, copy_pool_blocks,
-                                    prompt_cache_to_blocks, read_pool_blocks,
-                                    write_pool_blocks)
+from repro.core.paged_cache import (BlockPool, ShardedBlockPool, blocks_for,
+                                    copy_pool_blocks, prompt_cache_to_blocks,
+                                    read_pool_blocks, write_pool_blocks)
 from repro.core.uncertainty import get_batched_estimator
+from repro.launch.sharding import (cache_shardings, kv_shard_ways,
+                                   paged_cache_shardings)
 
 
 # ---------------------------------------------------------------- slot utils
@@ -355,15 +357,37 @@ class PagedKV(SequenceState):
     layout = "paged"
 
     def __init__(self, lane: "Lane", params, batch: int, slot_len: int,
-                 block_size: int, num_blocks: Optional[int] = None):
+                 block_size: int, num_blocks: Optional[int] = None, *,
+                 data_shards: int = 1, kv_ways: int = 1):
         self.lane = lane
         self.params = params
         self.block_size = block_size
         self.max_blocks = blocks_for(slot_len, block_size)
-        if num_blocks is None:      # worst-case-safe default: dense capacity
-            num_blocks = batch * self.max_blocks + 1
-        num_blocks = max(num_blocks, 2)
-        self.pool = BlockPool(num_blocks, block_size)
+        self.data_shards = data_shards
+        self.kv_ways = kv_ways
+        if data_shards > 1 and batch % data_shards != 0:
+            raise ValueError(f"batch {batch} does not divide into "
+                             f"{data_shards} data shards")
+        self._spb = batch // max(data_shards, 1)    # slots per shard
+        # sharded pools keep the SINGLE-DEVICE default's per-device byte
+        # budget: each block's bytes divide kv_ways ways over 'model' and
+        # the block dim data_shards ways over the data axes, so total
+        # capacity scales with kv_shards = data_shards * kv_ways at the
+        # same per-device HBM — the point of sharding the pool
+        if data_shards > 1:
+            if num_blocks is None:
+                per_shard = (batch * self.max_blocks + 1) * kv_ways
+            else:                   # explicit num_blocks = TOTAL blocks
+                per_shard = -(-num_blocks // data_shards)
+            per_shard = max(per_shard, 2)
+            num_blocks = data_shards * per_shard
+            self.pool = ShardedBlockPool(data_shards, per_shard,
+                                         block_size, self._shard_of)
+        else:
+            if num_blocks is None:  # worst-case-safe default: dense capacity
+                num_blocks = (batch * self.max_blocks + 1) * kv_ways
+            num_blocks = max(num_blocks, 2)
+            self.pool = BlockPool(num_blocks, block_size)
         self.caches = lane.model.init_paged_cache(
             num_blocks, block_size, batch, self.max_blocks)
         self._block_bytes = (self.caches["k"].nbytes +
@@ -386,6 +410,26 @@ class PagedKV(SequenceState):
         # chunked prefills in flight: slot -> (entries, new blocks, shared)
         self._begun: Dict[int, Tuple[np.ndarray, List[int], int]] = {}
 
+    # ------------------------------------------------------------ shards
+    def _shard_of(self, b: int) -> int:
+        """Data shard owning slot ``b`` (contiguous slot groups; 0 when the
+        pool is unsharded)."""
+        return b // self._spb if self.data_shards > 1 else 0
+
+    def _pkey(self, shard: int, key: bytes):
+        """Prefix-index key: the digest alone on the single pool; scoped by
+        shard on sharded pools — prefix sharing/CoW stay host-side
+        PER-SHARD, a slot can only map blocks its own shard owns."""
+        return key if self.data_shards <= 1 else (shard, key)
+
+    def _commit_sum(self, b: int) -> int:
+        """Outstanding growth reservations charged against slot ``b``'s
+        shard (all slots on the single pool)."""
+        if self.data_shards <= 1:
+            return sum(self._commit)
+        s = self._shard_of(b)
+        return sum(self._commit[s * self._spb:(s + 1) * self._spb])
+
     # ------------------------------------------------------------ prefix
     def _prefix_keys(self, entries: np.ndarray) -> List[bytes]:
         """Chained per-block digests: ``key[j]`` identifies the token
@@ -403,25 +447,28 @@ class PagedKV(SequenceState):
             keys.append(prev)
         return keys
 
-    def _lookup_prefix(self, entries: np.ndarray) -> Tuple[int, List[int]]:
-        """Longest indexed prefix of ``entries``: the exact entry count
-        first (twin — shares the partial tail block too), then
-        block-aligned lengths descending.  Returns (entries matched,
-        block ids)."""
+    def _lookup_prefix(self, entries: np.ndarray,
+                       shard: int = 0) -> Tuple[int, List[int]]:
+        """Longest indexed prefix of ``entries`` within ``shard``: the
+        exact entry count first (twin — shares the partial tail block
+        too), then block-aligned lengths descending.  Returns (entries
+        matched, block ids)."""
         E, bs = entries.size, self.block_size
         keys = self._prefix_keys(entries)
         for j in range(len(keys) - 1, -1, -1):
-            got = self._prefix_index.get(keys[j])
+            got = self._prefix_index.get(self._pkey(shard, keys[j]))
             if got is not None:
                 return min((j + 1) * bs, E), list(got)
         return 0, []
 
-    def _register(self, entries: np.ndarray, blocks: List[int]):
+    def _register(self, entries: np.ndarray, blocks: List[int],
+                  shard: int = 0):
         """Index every block-aligned prefix of ``entries`` (plus the full
         partial-tail prefix) under the blocks that hold it.  First
         registrant wins — twins share the original's blocks."""
         for j, key in enumerate(self._prefix_keys(entries)):
-            self._prefix_index.setdefault(key, tuple(blocks[:j + 1]))
+            self._prefix_index.setdefault(self._pkey(shard, key),
+                                          tuple(blocks[:j + 1]))
         self._indexed.update(blocks)
 
     def _reindex(self):
@@ -455,7 +502,7 @@ class PagedKV(SequenceState):
         ``_peek`` lets ``admit`` reuse its sizing lookup instead of
         re-hashing every prefix slice."""
         m, shared = _peek if _peek is not None else \
-            self._lookup_prefix(entries)
+            self._lookup_prefix(entries, self._shard_of(b))
         if shared:
             self.pool.share(b, shared)
             if m % self.block_size:
@@ -551,11 +598,12 @@ class PagedKV(SequenceState):
         E = entries.size
         nb = self.pool.blocks_for(E)
         total = self.pool.blocks_for(need_tokens)
-        m, shared = self._lookup_prefix(entries)        # sizing peek
+        m, shared = self._lookup_prefix(entries,        # sizing peek
+                                        self._shard_of(b))
         own_new = nb - len(shared)
         cow_extra = 1 if shared and (m % self.block_size) else 0
         if not self.pool.can_alloc(own_new + (total - nb) + cow_extra
-                                   + sum(self._commit)):
+                                   + self._commit_sum(b), owner=b):
             return None
         ns = 0
         if shared:
@@ -581,13 +629,14 @@ class PagedKV(SequenceState):
                 self.caches["k"], self.caches["v"],
                 jnp.asarray(blocks, jnp.int32), kb[:, ns:], vb[:, ns:])
         mine = self.pool.owned(b)
-        row = np.zeros((self.max_blocks,), np.int32)    # pad = trap block
+        # pad = trap block (the slot's shard's trap on sharded pools)
+        row = np.full((self.max_blocks,), self.pool.trap(b), np.int32)
         row[:len(mine)] = mine
         self._pend.append((b, row, E))
         self._len[b] = E
         self._entries[b] = entries
         self._stale.discard(b)
-        self._register(entries, mine)
+        self._register(entries, mine, self._shard_of(b))
 
     def begin(self, b: int, prompt, need_tokens: int) -> bool:
         """Reserve blocks for a chunked prefill; the slot's device row
@@ -626,20 +675,25 @@ class PagedKV(SequenceState):
                 entries[:self.block_size].tobytes(),
                 digest_size=16).digest())
         counts = Counter(k for k in firsts if k is not None)
+        # slot (and so shard) assignment happens after the hint, so probe
+        # every shard's index — a miss only costs a chunking opportunity
+        shards = range(max(self.data_shards, 1))
         return [k is not None
-                and (k in self._prefix_index or counts[k] > 1)
+                and (any(self._pkey(s, k) in self._prefix_index
+                         for s in shards) or counts[k] > 1)
                 for k in firsts]
 
     def fits_empty(self, need_tokens: int, prompt=None) -> bool:
         total = self.pool.blocks_for(need_tokens)
-        if total <= self.pool.num_blocks - 1:
+        if total <= self.pool.usable():
             return True
         if prompt is not None:      # admissible via currently-live sharing?
-            m, shared = self._lookup_prefix(
-                np.asarray(prompt, np.int32)[:-1])
-            cow = 1 if shared and (m % self.block_size) else 0
-            if total - len(shared) + cow <= self.pool.num_blocks - 1:
-                return True
+            entries = np.asarray(prompt, np.int32)[:-1]
+            for s in range(max(self.data_shards, 1)):
+                m, shared = self._lookup_prefix(entries, s)
+                cow = 1 if shared and (m % self.block_size) else 0
+                if total - len(shared) + cow <= self.pool.usable():
+                    return True
         return False
 
     def swappable(self, b: int) -> bool:
@@ -653,7 +707,7 @@ class PagedKV(SequenceState):
         back."""
         rsv = sum(b in lst for lst in self._cow_rsv.values())
         return (len(self.pool.owned(b)) + self._commit[b] - rsv
-                <= self.pool.num_blocks - 1)
+                <= self.pool.usable())
 
     def flush(self):
         if not (self._pend or self._stale):
@@ -665,7 +719,8 @@ class PagedKV(SequenceState):
             poss.append(p)
         for b in self._stale:       # retired, not re-admitted: trap row
             idx.append(b)
-            rows.append(np.zeros((self.max_blocks,), np.int32))
+            rows.append(np.full((self.max_blocks,), self.pool.trap(b),
+                                np.int32))
             poss.append(0)
         ii = jnp.asarray(idx, jnp.int32)
         self.caches["table"] = self.caches["table"].at[ii].set(
@@ -763,11 +818,11 @@ class PagedKV(SequenceState):
         entries = handle.get("entries")
         ns, shared = 0, []
         if entries is not None:
-            m, cand = self._lookup_prefix(entries)
+            m, cand = self._lookup_prefix(entries, self._shard_of(b))
             ns = min(m // self.block_size, nb)
             shared = cand[:ns]
         if not self.pool.can_alloc((nb - ns) + handle["commit"]
-                                   + sum(self._commit)):
+                                   + self._commit_sum(b), owner=b):
             return False
         if shared:
             self.pool.share(b, shared)
@@ -782,7 +837,7 @@ class PagedKV(SequenceState):
                 jnp.asarray(handle["k"][:, ns:]),
                 jnp.asarray(handle["v"][:, ns:]))
         mine = self.pool.owned(b)
-        row = np.zeros((self.max_blocks,), np.int32)
+        row = np.full((self.max_blocks,), self.pool.trap(b), np.int32)
         row[:nb] = mine
         self._pend.append((b, row, handle["len"]))
         self._len[b] = handle["len"]
@@ -794,7 +849,8 @@ class PagedKV(SequenceState):
             # generated-token blocks past the prompt stay out of the index
             # so their first write keeps the O(1) purge fast path
             self._register(entries, mine[:blocks_for(entries.size,
-                                                     self.block_size)])
+                                                     self.block_size)],
+                           self._shard_of(b))
         return True
 
     @property
@@ -809,12 +865,22 @@ class PagedKV(SequenceState):
         return self.caches["k"].nbytes + self.caches["v"].nbytes
 
     def stats(self) -> dict:
+        # usable capacity: pool minus trap(s) — per-shard traps on sharded
+        # pools.  kv_shards is the total byte-division factor (data shards
+        # x model-axis kv ways): the per-device footprint of this capacity
+        # is capacity_bytes / kv_shards
+        if self.data_shards > 1:
+            cap = self.data_shards * (self.pool.per_shard - 1)
+        else:
+            cap = self.pool.num_blocks - 1
         return {"kv_blocks_peak": self.pool.peak_used,
                 "kv_block_size": self.block_size,
                 "kv_prefix_hits": self._prefix_hits,
                 "kv_shared_blocks": self._shared_blocks,
                 "kv_cow_forks": self._cow_forks,
-                "kv_swaps": self._swaps}
+                "kv_swaps": self._swaps,
+                "kv_shards": self.data_shards * self.kv_ways,
+                "kv_capacity_blocks": cap}
 
 
 # ---------------------------------------------------------------- lane
@@ -825,10 +891,17 @@ class Lane:
     factory the scheduler calls instead of picking adapters itself."""
 
     def __init__(self, model, estimator: str, temperature: float,
-                 layout: str = "dense", block_size: int = 32):
+                 layout: str = "dense", block_size: int = 32,
+                 mesh=None, data_shards: int = 1):
         self.model = model
         self.layout = layout
         self.block_size = block_size
+        self.mesh = mesh
+        self.data_shards = data_shards if mesh is not None else 1
+        # model-axis byte division of the paged pool (1 when this model's
+        # kv-heads/head-dim don't divide — replication fallback)
+        self.kv_ways = kv_shard_ways(mesh, model.cfg) if mesh is not None \
+            else 1
         self.ops = SpecOps(model, layout)
         est = get_batched_estimator(estimator)
         step = self.ops.step
@@ -946,14 +1019,45 @@ class Lane:
         (escalation groups) sizes a paged pool to exactly the group's
         residency instead of the worst case."""
         if self.layout == "recurrent":
-            return RecurrentState(self, params, batch, slot_len)
+            return self._place(RecurrentState(self, params, batch, slot_len),
+                               batch)
         if self.layout == "dense":
-            return DenseKV(self, params, batch, slot_len)
+            return self._place(DenseKV(self, params, batch, slot_len), batch)
+        shards = self.data_shards if batch % max(self.data_shards, 1) == 0 \
+            else 1
         if num_blocks is None and need_tokens is not None:
-            needed = sum(blocks_for(t, self.block_size) for t in need_tokens)
-            # pow2-bucket the pool so escalation groups with different
-            # residencies reuse one compiled scan/spec-round shape (the
-            # peak-bytes stat tracks LIVE blocks, not this capacity)
-            num_blocks = 1 + pow2_steps(needed, 1 << 30)
-        return PagedKV(self, params, batch, slot_len, self.block_size,
-                       num_blocks)
+            if shards > 1:
+                # per-shard demand: slot i lives on shard i // (batch/S), so
+                # size every shard's range to the HEAVIEST shard (pools are
+                # uniform) and pow2-bucket that for compile-shape reuse
+                spb = batch // shards
+                per = [0] * shards
+                for i, t in enumerate(need_tokens):
+                    per[i // spb] += blocks_for(t, self.block_size)
+                num_blocks = shards * (1 + pow2_steps(max(per), 1 << 30))
+            else:
+                needed = sum(blocks_for(t, self.block_size)
+                             for t in need_tokens)
+                # pow2-bucket the pool so escalation groups with different
+                # residencies reuse one compiled scan/spec-round shape (the
+                # peak-bytes stat tracks LIVE blocks, not this capacity)
+                num_blocks = 1 + pow2_steps(needed, 1 << 30)
+        return self._place(
+            PagedKV(self, params, batch, slot_len, self.block_size,
+                    num_blocks, data_shards=shards, kv_ways=self.kv_ways),
+            batch)
+
+    def _place(self, state: SequenceState, batch: int) -> SequenceState:
+        """Pin a fresh state's device arrays to the mesh (no-op off-mesh):
+        paged pools get block-dim/data + kv-head/'model' sharding, dense
+        and recurrent stacks the batch/data + head/'model' rules."""
+        if self.mesh is None:
+            return state
+        if state.layout == "paged":
+            sh = paged_cache_shardings(state.caches, self.mesh,
+                                       self.model.cfg, state.data_shards)
+        else:
+            sh = cache_shardings(state.caches, self.mesh, self.model.cfg,
+                                 batch)
+        state.caches = jax.device_put(state.caches, sh)
+        return state

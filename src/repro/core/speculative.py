@@ -24,11 +24,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import runtime
 
 
 def _probs(logits, temperature: float):
@@ -330,8 +332,14 @@ class BatchedSpecDecoder:
         draft_toks = toks[:gamma].T                  # (G, gamma)
         draft_lgs = jnp.moveaxis(lgs[:gamma], 0, 1)  # (G, gamma, V)
 
-        # ---- verify in one batched target pass over [last, d_0..d_{g-1}]
+        # ---- verify in one batched target pass over [last, d_0..d_{g-1}].
+        # On a mesh this is THE wave crossing: the edge's data-sharded
+        # draft tape is all-gathered over the data axes in one collective
+        # per round, the tensor-parallel cloud verifies the replicated
+        # wave, and the committed result is constrained back to per-slot
+        # data sharding below (scatter_wave).  Identity off-mesh.
         ver_in = jnp.concatenate([last[:, :, 0], draft_toks], axis=1)  # (G,g+1)
+        ver_in, draft_toks = runtime.gather_wave(ver_in, draft_toks)
         t_logits, t_slots = self._tops.extend(target_params, ver_in, t_slots)
 
         n_acc, next_tok = jax.vmap(
@@ -347,7 +355,8 @@ class BatchedSpecDecoder:
                                     ver_in, counts)
         t_slots = self._tops.commit(target_params, t_slots, t_snap,
                                     ver_in, counts)
-        last = jnp.where(active[:, None, None], next_tok[:, None, None], last)
+        last = runtime.scatter_wave(
+            jnp.where(active[:, None, None], next_tok[:, None, None], last))
         return d_slots, t_slots, last, draft_toks, n_acc, next_tok
 
     def generate_group(self, draft_params, target_params, d_slots, t_slots,

@@ -6,7 +6,6 @@ Mosaic.  ``use_pallas()`` is the global switch the model code consults.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 

@@ -17,7 +17,7 @@ import argparse
 import json
 import re
 import time
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -52,6 +52,26 @@ included), p50/p99 TPOT, and — with ``--slo-ms`` — SLO attainment and
 goodput-under-SLO.  ``--prefill-chunk`` caps how many prompt tokens a
 single tick may prefill, so a long prompt no longer blocks every decoding
 request for its whole prefill (chunked prefill interleaves with decode).
+
+Running on a mesh: ``--mesh data,model`` shards the batched scheduler over
+the local devices — the cloud verifier runs TENSOR-PARALLEL over the
+``model`` axis (params partitioned by ``launch/sharding.py``'s rules),
+edge drafts stay DATA-parallel over ``data`` (params replicated, batch
+slots and the paged block pool split per data shard), and each grouped
+escalation wave crosses the mesh as one all-gather of the draft tape
+before the TP verify.  Axis sizes are inferred (near-balanced factors of
+``jax.device_count()``, larger trailing: 8 devices -> (2, 4)) or pinned
+explicitly: ``--mesh data=2,model=4``.  Per-shard KV pools keep the
+single-device per-device byte budget, so total ``kv_capacity_blocks``
+scales with the shard count (reported in the stats line).  No
+accelerators handy? Simulate: set the flag BEFORE the process starts jax::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.serve --reduced \\
+        --scheduler batched --mesh data,model
+
+Omitting ``--mesh`` takes the exact single-device code path (no mesh
+context, no collectives in any trace).
 """
 from __future__ import annotations
 
@@ -159,6 +179,12 @@ def main():
                     help="max prompt tokens prefilled per scheduler tick "
                          "(chunked prefill); 0 disables chunking, default "
                          "= --tick-tokens")
+    ap.add_argument("--mesh", default=None, metavar="AXES",
+                    help="shard the batched scheduler over the local "
+                         "devices: comma-separated axis names, e.g. "
+                         "'data,model' (sizes inferred) or "
+                         "'data=2,model=4' (pinned); see the module "
+                         "docstring's 'Running on a mesh' section")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
@@ -192,6 +218,14 @@ def main():
     if args.arrival != "none" and args.scheduler != "batched":
         raise SystemExit("--arrival needs --scheduler batched (the "
                          "per-request loop has no admission queue)")
+    if args.mesh is not None and args.scheduler != "batched":
+        raise SystemExit("--mesh needs --scheduler batched (the "
+                         "per-request loop is single-device)")
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import parse_mesh_arg
+        mesh = parse_mesh_arg(args.mesh)
+        print(f"mesh: {dict(mesh.shape)} over {jax.device_count()} devices")
     if args.scheduler == "batched":
         eng = BatchedEngine(edge, cloud, batch_size=args.batch_size,
                             gamma=args.gamma, temperature=0.0,
@@ -201,7 +235,8 @@ def main():
                             kv_block_size=args.kv_block_size,
                             kv_blocks=args.kv_blocks,
                             slo_ms=args.slo_ms,
-                            prefill_chunk=args.prefill_chunk)
+                            prefill_chunk=args.prefill_chunk,
+                            mesh=mesh)
         t0 = time.perf_counter()
         if args.arrival != "none":
             gen = (poisson_arrivals if args.arrival == "poisson"
@@ -240,7 +275,10 @@ def main():
               f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "
               f"capacity={stats['kv_capacity_bytes'] / 1e6:.2f}MB"
               + (f" blocks_peak={stats['kv_blocks_peak']}"
-                 if "kv_blocks_peak" in stats else ""))
+                 if "kv_blocks_peak" in stats else "")
+              + (f" shards={stats['kv_shards']} "
+                 f"capacity_blocks={stats['kv_capacity_blocks']}"
+                 if stats.get("kv_shards", 1) > 1 else ""))
         if stats.get("kv_prefix_hits") or stats.get("preemptions"):
             print(f"kv: prefix_hits={stats.get('kv_prefix_hits', 0)} "
                   f"shared_blocks={stats.get('kv_shared_blocks', 0)} "

@@ -15,10 +15,9 @@ logged via the returned spec itself (visible in the dry-run report).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -178,3 +177,64 @@ def cache_shardings(cache, mesh, cfg, batch_size: int):
         lambda path, leaf: NamedSharding(mesh, cache_spec(path, leaf, mesh, cfg)),
         cache)
     return out
+
+
+# ---------------------------------------------------------------- paged pools
+def kv_shard_ways(mesh, cfg) -> int:
+    """How many ways the paged KV pool's per-block BYTES divide over the
+    'model' axis: kv-heads when divisible, else the head dim, else 1
+    (replication fallback, mirroring ``cache_spec``'s preference order).
+    ``PagedKV`` multiplies its default pool capacity by this — more blocks
+    at the same per-device byte budget is the whole point of sharding the
+    pool."""
+    m = mesh.shape.get("model", 1)
+    if m <= 1:
+        return 1
+    if cfg.num_kv_heads % m == 0 or cfg.head_dim % m == 0:
+        return m
+    return 1
+
+
+def paged_cache_spec(path, leaf, mesh, cfg, data_shards: int = 1) -> P:
+    """Specs for the PAGED cache pytree ``{k, v, table, pos}``.
+
+    ``cache_spec`` assumes dense stacked ``(L, B, S, Kv, hd)`` slabs; the
+    paged pool is ``(L, num_blocks, block_size, Kv, hd)`` — dim 1 is the
+    BLOCK dim, not batch, so it must never take the dp axes unless the
+    host-side allocator is actually per-shard (``data_shards`` matches the
+    dp size and each shard owns a contiguous id range; see
+    ``paged_cache.ShardedBlockPool``).  kv-heads shard over 'model' when
+    divisible, falling back to the head dim, else replication — the same
+    logged policy as ``cache_spec``."""
+    name = _path_str(path).split("/")[-1]
+    shape = leaf.shape
+    nd = len(shape)
+    dp = batch_axes(mesh)
+    spec = [None] * nd
+    if nd == 0 or name == "pos":
+        return P()
+    if name == "table":            # (B, max_blocks): slot rows over dp
+        if shape[0] % _dp_size(mesh) == 0:
+            spec[0] = dp
+        return P(*spec)
+    if nd == 5:                    # k/v pool (L, NB, bs, Kv, hd)
+        if data_shards == _dp_size(mesh) > 1 and shape[1] % data_shards == 0:
+            spec[1] = dp           # per-shard block ranges (ShardedBlockPool)
+        if _div(shape[3], mesh, "model"):
+            spec[3] = "model"
+        elif _div(shape[4], mesh, "model"):
+            spec[4] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def paged_cache_shardings(cache, mesh, cfg, data_shards: int = 1):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, paged_cache_spec(path, leaf, mesh, cfg, data_shards)),
+        cache)
+
+
+def replicated_shardings(tree, mesh):
+    """Fully-replicated placement (the data-parallel edge's params)."""
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -9,7 +9,6 @@ the production mesh (the dry-run validates those graphs in this container).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 

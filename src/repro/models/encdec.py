@@ -195,7 +195,6 @@ def extend_step(params, tokens, cache, cfg):
 
 
 def decode_step(params, token, cache, cfg):
-    B = token.shape[0]
     pos = cache["pos"]
     h = L.embed(params["embed"], token).astype(jnp.dtype(cfg.activ_dtype))
     h = h + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None]

@@ -6,7 +6,6 @@ compile times on pods.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -184,7 +183,10 @@ def _paged_decode_step_kernel(params, token, cache, cfg, backend: str):
     h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
                                          cache["v"]))
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    logits = L.unembed(_head(params), h[:, 0, :])
+    # pin the paged serving path's logits to batch sharding: the lm_head
+    # contraction is vocab-sharded over 'model', and without this XLA defers
+    # a vocab-sharded (B, V) tensor to the sampler's argmax/categorical
+    logits = runtime.shard_activation(L.unembed(_head(params), h[:, 0, :]))
     if cfg.logit_softcap:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return logits, {**cache, "k": ks, "v": vs, "pos": pos + 1}
@@ -214,7 +216,8 @@ def paged_extend_step(params, tokens, cache, cfg):
     h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"], cache["k"],
                                          cache["v"]))
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    logits = L.unembed(_head(params), h)
+    # batch-shard the verify logits for the same reason as the decode step
+    logits = runtime.shard_activation(L.unembed(_head(params), h))
     if cfg.logit_softcap:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return logits, {**cache, "k": ks, "v": vs,

@@ -179,7 +179,6 @@ def slstm_step(p, x, state, cfg):
     xn = rmsnorm(x, p["norm"], cfg.norm_eps)
     xg = (xn.astype(jnp.float32) @ p["w_gates"])[:, 0]
     st = _slstm_cell(p, xg, state, cfg)
-    H = cfg.num_heads
     y = groupnorm_heads(st["h"], p["out_norm"], cfg.norm_eps).reshape(B, 1, d)
     y = y.astype(x.dtype)
     g, u = jnp.split(y @ p["w_up"], 2, axis=-1)

@@ -77,6 +77,52 @@ def mesh_context(mesh, *, data_axes_: Optional[Tuple[str, ...]] = None,
          _state.activation_sharding) = prev
 
 
+def _dp_count(mesh) -> int:
+    n = 1
+    for a in data_axes():
+        n *= mesh.shape[a]
+    return n
+
+
+def gather_wave(*arrays):
+    """All-gather a grouped escalation wave across the data axes in ONE
+    explicit collective (``shard_map`` + ``lax.all_gather``), so the
+    tensor-parallel cloud verifier sees every data shard's draft tape at
+    once.  Each array is (G, ...) with G sharded over the data axes on
+    entry; the result is fully replicated over them.  Identity (and
+    trace-identical) outside a mesh context or when G does not divide —
+    the single-device path never sees a collective."""
+    mesh = current_mesh()
+    if mesh is None:
+        return arrays if len(arrays) > 1 else arrays[0]
+    n_dp = _dp_count(mesh)
+    if n_dp <= 1 or any(a.ndim == 0 or a.shape[0] % n_dp != 0
+                        for a in arrays):
+        return arrays if len(arrays) > 1 else arrays[0]
+    import jax
+    from jax.sharding import PartitionSpec as P
+    dp = data_axes()
+
+    def gather(*xs):
+        return tuple(jax.lax.all_gather(x, dp, axis=0, tiled=True)
+                     for x in xs)
+
+    in_specs = tuple(P(dp, *([None] * (a.ndim - 1))) for a in arrays)
+    out_specs = tuple(P(*([None] * a.ndim)) for a in arrays)
+    # check_vma=False: the all-gather's output IS replicated over the data
+    # axes, but the static replication checker cannot infer that
+    out = shard_map(gather, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_vma=False)(*arrays)
+    return out if len(arrays) > 1 else out[0]
+
+
+def scatter_wave(x):
+    """Constrain a (G, ...) wave result back to per-slot data sharding —
+    the scatter half of the wave's mesh crossing.  No-op outside a mesh
+    context or when G does not divide."""
+    return shard_activation(x)
+
+
 def shard_activation(x):
     """Constrain a (B, ...) activation to batch-sharding over the data axes
     (replicated over 'model').  No-op outside a mesh context or when the

@@ -10,8 +10,6 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +56,6 @@ def distillspec_data(target_model, target_params, prompts, max_new: int,
     """Sample on-policy sequences from the TARGET (the DistillSpec corpus).
     prompts: (B, S) int32. Returns (B, S+max_new) token arrays."""
     tokens = jnp.asarray(prompts, jnp.int32)
-    B = tokens.shape[0]
     _, cache = target_model.prefill(target_params, {"tokens": tokens[:, :-1]},
                                     max_seq=tokens.shape[1] + max_new + 2)
     step = jax.jit(lambda p, t, c: target_model.decode_step(p, t, c))

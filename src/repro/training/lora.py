@@ -11,7 +11,7 @@ is untouched (communication = adapters only, the survey's §3.4 point).
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp

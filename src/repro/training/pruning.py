@@ -3,7 +3,7 @@ reactivation (Li et al. [120]) and structured d_ff channel pruning
 (EfficientLLM-style)."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

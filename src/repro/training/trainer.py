@@ -5,7 +5,6 @@ import time
 from typing import Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.training.optimizer import AdamW, AdamWState
 

@@ -1,0 +1,107 @@
+"""scripts/check_bench.py over synthetic BENCH_serving.json payloads —
+assert regressions in the CI bench gate fail here, not just in Actions."""
+import copy
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SCRIPT = Path(__file__).resolve().parents[1] / "scripts" / "check_bench.py"
+_spec = importlib.util.spec_from_file_location("check_bench", _SCRIPT)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _rows():
+    """A minimal result set that satisfies every check."""
+    ol_arm = {"requests": 8, "completed": 8, "ttft_p50_ms": 10.0,
+              "ttft_p99_ms": 40.0, "tpot_p50_ms": 2.0, "tpot_p99_ms": 4.0,
+              "goodput_slo": 5.0, "slo_attainment": 0.9,
+              "deferred_admissions": 1}
+    return {
+        "config": {"requests": 8, "prompt_len": 16, "max_new": 8,
+                   "batch": 4, "smoke": True},
+        "paged_vs_dense": {
+            "dense": {"req_s": 2.0, "kv_peak_bytes": 1000},
+            "paged": {"req_s": 2.0, "kv_peak_bytes": 400},
+            "kv_savings_x": 2.5},
+        "shared_prefix": {"kv_savings_x": 3.0, "prefix_hits": 7,
+                          "shared_blocks": 21, "cow_forks": 2},
+        "overcommit": {"deferred_forever": 0, "completed": 8,
+                       "preemptions": 3},
+        "open_loop": {"poisson": dict(ol_arm), "bursty_2x": dict(ol_arm)},
+        "serving_recurrent": {
+            "mamba2-370m": {"family": "ssm", "speedup": 3.0},
+            "zamba2-1b": {"family": "hybrid", "speedup": 2.0}},
+        "policy": {
+            "threshold": {"req_s": 2.0, "cloud_token_share": 0.4,
+                          "quality_proxy": 0.8},
+            "cascade": {"req_s": 2.0, "cloud_token_share": 0.3,
+                        "quality_proxy": 0.8},
+            "bandit": {"req_s": 2.0, "cloud_token_share": 0.5,
+                       "quality_proxy": 0.7},
+            "bandit_adaptation": {"share_first": 0.9, "share_last": 0.2}},
+        "multi_device": {
+            "mesh_shape": {"data": 2, "model": 4}, "mesh_devices": 8,
+            "single_req_s": 2.0, "mesh_req_s": 1.5, "kv_shards": 8,
+            "single_kv_capacity_blocks": 16,
+            "mesh_kv_capacity_blocks": 134,
+            "kv_capacity_scale_x": 8.4, "token_parity": True},
+    }
+
+
+def _quiet(*a, **k):
+    pass
+
+
+def test_good_rows_pass():
+    check_bench.check(_rows(), out=_quiet)
+    check_bench.check(_rows(), require_multi_device=True, out=_quiet)
+
+
+def test_multi_device_skip_tolerated_without_flag():
+    rows = _rows()
+    rows["multi_device"] = {"skipped": "needs 8 devices, have 1"}
+    check_bench.check(rows, out=_quiet)
+
+
+def test_multi_device_skip_fails_when_required():
+    rows = _rows()
+    rows["multi_device"] = {"skipped": "needs 8 devices, have 1"}
+    with pytest.raises(AssertionError, match="skipped"):
+        check_bench.check(rows, require_multi_device=True, out=_quiet)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda r: r["paged_vs_dense"].__setitem__("kv_savings_x", 0.9),
+    lambda r: r["paged_vs_dense"]["paged"].__setitem__(
+        "kv_peak_bytes", 2000),
+    lambda r: r["shared_prefix"].__setitem__("prefix_hits", 0),
+    lambda r: r["overcommit"].__setitem__("deferred_forever", 2),
+    lambda r: r["overcommit"].__setitem__("completed", 5),
+    lambda r: r["open_loop"]["poisson"].__setitem__("goodput_slo", 0.0),
+    lambda r: r["open_loop"]["bursty_2x"].pop("ttft_p99_ms"),
+    lambda r: r["serving_recurrent"]["mamba2-370m"].__setitem__(
+        "family", "dense"),
+    lambda r: r["policy"]["cascade"].__setitem__("cloud_token_share", 9.0),
+    lambda r: r["policy"]["bandit_adaptation"].__setitem__(
+        "share_last", 0.95),
+    lambda r: r["multi_device"].__setitem__("token_parity", False),
+    lambda r: r["multi_device"].__setitem__("kv_capacity_scale_x", 1.0),
+    lambda r: r["multi_device"].__setitem__("kv_shards", 1),
+    lambda r: r.pop("multi_device"),
+])
+def test_regressions_fail(mutate):
+    rows = copy.deepcopy(_rows())
+    mutate(rows)
+    with pytest.raises((AssertionError, KeyError)):
+        check_bench.check(rows, out=_quiet)
+
+
+def test_cli_roundtrip(tmp_path, capsys):
+    p = tmp_path / "BENCH_serving.json"
+    p.write_text(json.dumps(_rows()))
+    assert check_bench.main(["--path", str(p),
+                             "--require-multi-device"]) == 0
+    assert "all checks passed" in capsys.readouterr().out

@@ -1,0 +1,174 @@
+"""Sharded serving: ShardedBlockPool bookkeeping + mesh engine parity.
+
+The pool tests are pure host-side bookkeeping and run anywhere.  The
+engine tests are marked ``mesh`` — CI runs them with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see ci.yml);
+they skip when fewer simulated devices are available because the (2, 4)
+host mesh cannot be built.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.paged_cache import ShardedBlockPool
+
+
+def _pool(shards=2, per_shard=5, block_size=4):
+    # slots 0..N map to shards round-robin-by-half: slot // (per-shard
+    # slots) — tests use contiguous slot groups like the scheduler does
+    return ShardedBlockPool(shards, per_shard, block_size,
+                            shard_of=lambda slot: slot // 4)
+
+
+class TestShardedBlockPool:
+    def test_global_ids_are_shard_offset(self):
+        p = _pool()
+        # slot 0 -> shard 0: local ids 1.. -> global 1..
+        assert p.alloc(0, 2) == [1, 2]
+        # slot 4 -> shard 1: local ids 1.. -> global per_shard+1..
+        assert p.alloc(4, 2) == [6, 7]
+        assert p.used == 4
+
+    def test_per_shard_traps(self):
+        p = _pool()
+        assert p.trap(0) == 0
+        assert p.trap(4) == 5   # shard 1's range starts at per_shard
+
+    def test_can_alloc_is_shard_scoped(self):
+        p = _pool()            # 4 usable per shard
+        p.alloc(0, 4)
+        assert not p.can_alloc(1, owner=0)    # shard 0 full
+        assert p.can_alloc(4, owner=4)        # shard 1 untouched
+        # ownerless query answers for every shard (admission pre-check)
+        assert not p.can_alloc(1)
+
+    def test_usable_is_per_shard(self):
+        assert _pool(per_shard=5).usable() == 4
+
+    def test_alloc_exhaustion_raises(self):
+        p = _pool()
+        p.alloc(0, 4)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            p.alloc(1, 1)      # slot 1 is also shard 0
+
+    def test_share_within_shard_bumps_refcount(self):
+        p = _pool()
+        blocks = p.alloc(0, 2)
+        p.share(1, blocks)     # slot 1 is shard 0 too
+        assert p.refcount(blocks[0]) == 2
+        assert p.free(0) == []            # still referenced by slot 1
+        assert sorted(p.free(1)) == blocks
+
+    def test_cross_shard_share_refused(self):
+        p = _pool()
+        blocks = p.alloc(0, 1)
+        with pytest.raises(RuntimeError, match="cross-shard"):
+            p.share(4, blocks)  # slot 4 lives on shard 1
+
+    def test_fork_returns_global_id_in_same_shard(self):
+        p = _pool()
+        blocks = p.alloc(4, 1)        # shard 1: global id 6
+        p.share(5, blocks)
+        new = p.fork(5, blocks[0])
+        assert new != blocks[0]
+        assert new // 5 == 1          # stays in shard 1's range
+        assert p.refcount(blocks[0]) == 1
+
+    def test_used_and_peak_aggregate_shards(self):
+        p = _pool()
+        p.alloc(0, 3)
+        p.alloc(4, 2)
+        assert p.used == 5
+        p.free(0)
+        assert p.used == 2
+        assert p.peak_used == 5
+
+
+# ---------------------------------------------------------------- engine
+@pytest.mark.mesh
+class TestMeshEngine:
+    # class-scoped so it orders BEFORE the class-scoped `served` fixture
+    # (pytest instantiates higher/equal-scope autouse fixtures first);
+    # a function-scoped guard would let `served` build the mesh and
+    # error out instead of skipping on single-device runs
+    @pytest.fixture(autouse=True, scope="class")
+    def _need_devices(self):
+        import jax
+        if jax.device_count() < 8:
+            pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=8")
+
+    @pytest.fixture(scope="class")
+    def served(self):
+        import jax
+
+        from repro.configs import get_config
+        from repro.core.policy import SpeculativePolicy
+        from repro.core.scheduler import BatchedEngine
+        from repro.data import SyntheticLM
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import Model
+
+        e_cfg = get_config("smollm-135m").reduced()
+        c_cfg = get_config("granite-8b").reduced().replace(
+            vocab_size=e_cfg.vocab_size)
+        edge, cloud = Model(e_cfg), Model(c_cfg)
+        ep = edge.init(jax.random.PRNGKey(0))
+        cp = cloud.init(jax.random.PRNGKey(1))
+        synth = SyntheticLM(e_cfg.vocab_size)
+        rng = np.random.default_rng(0)
+        prompts = [synth.sample(rng, i % synth.n_domains, 8)
+                   for i in range(8)]
+
+        def serve(mesh):
+            eng = BatchedEngine(edge, cloud, batch_size=8, temperature=0.0,
+                                use_cache=False,
+                                policy=SpeculativePolicy(-1.0),
+                                kv_layout="paged", mesh=mesh)
+            tr = eng.serve_batch(ep, cp, prompts, 6)
+            return [t.tokens for t in tr], eng.stats()
+
+        base, st0 = serve(None)
+        mesh_toks, st1 = serve(make_host_mesh(data=2, model=4))
+        return base, st0, mesh_toks, st1
+
+    def test_token_parity_with_single_device(self, served):
+        base, _, mesh_toks, _ = served
+        assert base == mesh_toks
+
+    def test_kv_capacity_scales(self, served):
+        _, st0, _, st1 = served
+        assert st0["kv_shards"] == 1
+        assert st1["kv_shards"] > 1
+        assert st1["kv_capacity_blocks"] > st0["kv_capacity_blocks"]
+
+    def test_mesh_stats_reported(self, served):
+        _, st0, _, st1 = served
+        assert "mesh_devices" not in st0
+        assert st1["mesh_devices"] == 8
+        assert st1["mesh_shape"] == {"data": 2, "model": 4}
+
+    def test_gather_wave_tiles_dp_dim(self):
+        import jax
+        import jax.numpy as jnp
+
+        from repro import runtime
+        from repro.launch.mesh import make_host_mesh
+
+        x = jnp.arange(8, dtype=jnp.int32).reshape(4, 2)
+        # identity off-mesh (single-array calls return the bare array)
+        y = runtime.gather_wave(x)
+        assert (np.asarray(y) == np.asarray(x)).all()
+        mesh = make_host_mesh(data=2, model=4)
+        with runtime.mesh_context(mesh):
+            xs = jax.device_put(x, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("data")))
+            y, y2 = runtime.gather_wave(xs, xs + 1)
+            # all-gather is a reorder-free concat over the dp axis here
+            assert (np.asarray(y) == np.asarray(x)).all()
+            assert (np.asarray(y2) == np.asarray(x) + 1).all()
+            # odd leading dim: identity fallback (cannot tile over dp=2)
+            z = jnp.ones((3, 2))
+            w = runtime.gather_wave(z)
+            assert w.shape == (3, 2)

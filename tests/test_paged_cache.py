@@ -7,7 +7,6 @@ The dense layout is the parity oracle: ``kv_layout="paged"`` changes WHERE
 K/V live (shared block pool + block tables) but not a single emitted token.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

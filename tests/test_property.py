@@ -11,7 +11,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.compression import Int8Quantizer, relative_error
 from repro.core.speculative import acceptance_rate_bound, speculative_sample
 from repro.models.moe import capacity
-from repro.models.ssm import gla_chunked, gla_step, init_gla_state
+from repro.models.ssm import gla_chunked
 
 _settings = settings(max_examples=25, deadline=None)
 

@@ -1,5 +1,4 @@
 """Task assignment (§2.1): uncertainty estimators and routers."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,7 +6,7 @@ import pytest
 from repro.core.routing import (CascadeRouter, ConfidenceRouter, LinUCBRouter,
                                 UCBRouter, capability_vector)
 from repro.core.uncertainty import (ESTIMATORS, dirichlet_evidence, entropy,
-                                    get_estimator, margin, max_prob)
+                                    get_estimator, max_prob)
 
 PEAKED = jnp.array([10.0, 0.0, 0.0, 0.0])
 FLAT = jnp.zeros(4)

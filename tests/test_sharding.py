@@ -1,0 +1,187 @@
+"""Unit tests for launch/sharding.py partition rules and launch/mesh.py.
+
+The *_spec functions only touch ``mesh.axis_names`` / ``mesh.shape`` and
+``leaf.shape``, so most tests run device-free against duck-typed fakes —
+the divisibility-fallback rules are pure functions of shapes.  Tests that
+build a real mesh are marked ``mesh`` and need 8 simulated devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import (batch_spec, cache_spec, kv_shard_ways,
+                                   paged_cache_spec, param_spec)
+
+
+class FakeMesh:
+    """Duck-types the two attributes the spec rules read."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+class Leaf:
+    def __init__(self, *shape):
+        self.shape = shape
+
+
+MESH = FakeMesh(data=2, model=4)
+
+
+def _cfg(heads=8, kv=8, hd=64, family="dense"):
+    return SimpleNamespace(num_heads=heads, num_kv_heads=kv, head_dim=hd,
+                           family=family)
+
+
+# ------------------------------------------------------------ param_spec
+def test_param_tiny_and_1d_replicated():
+    assert param_spec(("norm",), Leaf(128), MESH) == P()
+    assert param_spec(("alpha",), Leaf(4, 4), MESH) == P()  # _REPLICATE
+
+
+def test_param_up_proj_tp():
+    # (L, d, f): d over data, f over model when both divide
+    assert param_spec(("blocks", "w_up"), Leaf(4, 256, 1024), MESH) == \
+        P(None, "data", "model")
+    # f not divisible by model=4 -> replicate that dim
+    assert param_spec(("blocks", "w_up"), Leaf(4, 256, 1023), MESH) == \
+        P(None, "data", None)
+
+
+def test_param_down_proj_transposed():
+    assert param_spec(("blocks", "wo"), Leaf(4, 1024, 256), MESH,
+                      _cfg(heads=8)) == P(None, "model", "data")
+
+
+def test_param_attention_head_fallback():
+    # num_heads=6 does not divide model=4: wq falls back to FSDP-only on
+    # its d_model dim (nd-2), never "model"
+    spec = param_spec(("blocks", "wq"), Leaf(4, 256, 384), MESH, _cfg(heads=6))
+    assert spec == P(None, "data", None)
+    # kv projections consult num_kv_heads, not num_heads
+    spec = param_spec(("blocks", "wk"), Leaf(4, 256, 384), MESH,
+                      _cfg(heads=8, kv=2))
+    assert spec == P(None, "data", None)
+    # aligned heads keep tensor parallelism
+    spec = param_spec(("blocks", "wq"), Leaf(4, 256, 512), MESH, _cfg(heads=8))
+    assert spec == P(None, "data", "model")
+
+
+def test_param_embed_vocab_sharding():
+    assert param_spec(("embed",), Leaf(32000, 256), MESH) == P("model", None)
+    assert param_spec(("lm_head",), Leaf(32002, 256), MESH) == P(None, None)
+
+
+def test_param_moe_expert_dim():
+    spec = param_spec(("moe", "w_up"), Leaf(8, 256, 1024), MESH)
+    assert spec == P("model", None, None)
+    # expert count not divisible -> replicated expert dim
+    spec = param_spec(("moe", "w_up"), Leaf(6, 256, 1024), MESH)
+    assert spec == P(None, None, None)
+
+
+# ------------------------------------------------------------ batch_spec
+def test_batch_spec_divisibility():
+    assert batch_spec((8, 16), MESH) == P(("data",), None)
+    assert batch_spec((3, 16), MESH) == P(None, None)
+    assert batch_spec((), MESH) == P()
+
+
+# ------------------------------------------------------------ cache_spec
+def test_cache_kv_head_preference():
+    cfg = _cfg(kv=8)
+    spec = cache_spec(("k",), Leaf(4, 8, 128, 8, 64), MESH, cfg)
+    assert spec == P(None, ("data",), None, "model", None)
+
+
+def test_cache_head_dim_fallback():
+    # kv-heads=2 not divisible by model=4 -> shard the head dim instead
+    cfg = _cfg(kv=2)
+    spec = cache_spec(("k",), Leaf(4, 8, 128, 2, 64), MESH, cfg)
+    assert spec == P(None, ("data",), None, None, "model")
+
+
+def test_cache_pos_replicated():
+    assert cache_spec(("pos",), Leaf(8), MESH, _cfg()) == P()
+
+
+# ------------------------------------------------------ paged_cache_spec
+def test_paged_table_rows_over_data():
+    cfg = _cfg()
+    assert paged_cache_spec(("table",), Leaf(8, 16), MESH, cfg) == \
+        P(("data",), None)
+    assert paged_cache_spec(("table",), Leaf(3, 16), MESH, cfg) == \
+        P(None, None)
+    assert paged_cache_spec(("pos",), Leaf(8), MESH, cfg) == P()
+
+
+def test_paged_pool_block_dim_needs_sharded_allocator():
+    cfg = _cfg(kv=8)
+    pool = Leaf(4, 34, 32, 8, 64)
+    # data_shards=1 (host allocator is global): block dim must stay
+    # replicated even though 34 % 2 == 0
+    assert paged_cache_spec(("k",), pool, MESH, cfg, data_shards=1) == \
+        P(None, None, None, "model", None)
+    # data_shards matching the dp size: block dim (dim 1) takes the dp axes
+    assert paged_cache_spec(("k",), pool, MESH, cfg, data_shards=2) == \
+        P(None, ("data",), None, "model", None)
+
+
+def test_paged_pool_head_dim_fallback():
+    cfg = _cfg(kv=2, hd=64)
+    pool = Leaf(4, 34, 32, 2, 64)
+    assert paged_cache_spec(("k",), pool, MESH, cfg) == \
+        P(None, None, None, None, "model")
+
+
+# -------------------------------------------------------- kv_shard_ways
+def test_kv_shard_ways_rules():
+    assert kv_shard_ways(MESH, _cfg(kv=8)) == 4
+    assert kv_shard_ways(MESH, _cfg(kv=2, hd=64)) == 4   # head-dim route
+    assert kv_shard_ways(MESH, _cfg(kv=3, hd=63)) == 1   # replication
+    assert kv_shard_ways(FakeMesh(data=8), _cfg(kv=8)) == 1  # no model axis
+
+
+# ------------------------------------------------------------- real mesh
+@pytest.mark.mesh
+class TestRealMesh:
+    @pytest.fixture(autouse=True)
+    def _need_devices(self):
+        import jax
+        if jax.device_count() < 8:
+            pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=8")
+
+    def test_make_host_mesh(self):
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(2, 4)
+        assert mesh.axis_names == ("data", "model")
+        assert dict(mesh.shape) == {"data": 2, "model": 4}
+        assert mesh.size == 8
+
+    def test_parse_mesh_arg_auto_sizes(self):
+        from repro.launch.mesh import parse_mesh_arg
+        mesh = parse_mesh_arg("data,model")
+        # balanced factors of 8, larger trailing
+        assert dict(mesh.shape) == {"data": 2, "model": 4}
+
+    def test_parse_mesh_arg_pinned(self):
+        from repro.launch.mesh import parse_mesh_arg
+        mesh = parse_mesh_arg("data=4,model=2")
+        assert dict(mesh.shape) == {"data": 4, "model": 2}
+        mesh = parse_mesh_arg("data=1,model")
+        assert dict(mesh.shape) == {"data": 1, "model": 8}
+
+    def test_parse_mesh_arg_errors(self):
+        from repro.launch.mesh import parse_mesh_arg
+        with pytest.raises(ValueError, match="duplicate"):
+            parse_mesh_arg("data,data")
+        with pytest.raises(ValueError, match="divisor"):
+            parse_mesh_arg("data=3,model")
+        with pytest.raises(ValueError):
+            parse_mesh_arg("")

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import all_configs, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.models import Model, example_batch
 from repro.training import AdamW, make_train_step
 
@@ -28,8 +28,6 @@ def test_forward_shapes_no_nan(arch, setups):
     B, S = 2, 16
     batch = example_batch(cfg, B, S)
     logits, *_ = m.forward(params, batch)
-    s_total = S if cfg.family != "vlm" else (S - cfg.num_image_tokens
-                                             + cfg.num_image_tokens)
     assert logits.shape[0] == B
     assert logits.shape[-1] == cfg.vocab_size
     assert not bool(jnp.any(jnp.isnan(logits)))

@@ -1,6 +1,5 @@
 """Collaborative training (survey §3): optimizer, distillation, LoRA,
 quantization, pruning, early-exit training, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp
