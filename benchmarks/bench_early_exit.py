@@ -1,22 +1,37 @@
 """Early-exit benchmark (survey §2.2.3 / Table 4 early-exit row):
 per-exit quality and the latency (mean depth) vs quality trade of
-confidence-gated exits, after LayerSkip-style training."""
+confidence-gated exits, after LayerSkip-style training — then the same
+trained exits driving the SERVING stack's self-speculative lane
+(``BatchedEngine`` + ``BatchedSpecDecoder`` mode="self"): the model's
+first ``k`` blocks draft, its full depth verifies, output stays
+token-identical to plain greedy decode.  Reports per-exit-depth
+accepted-tokens-per-step and req/s, tying the exit-quality curve to an
+end-to-end serving win instead of the stale per-request seed API."""
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core.early_exit import early_exit_decision, exit_logits, layerskip_loss
-from repro.data import batches
+from repro.core.policy import SpeculativePolicy
+from repro.core.scheduler import BatchedEngine
+from repro.core.speculative import autoregressive_baseline
+from repro.data import SyntheticLM, batches
 from repro.models import Model, cross_entropy
-from repro.training import AdamW, train
+
+MAX_NEW = 24
+BATCH = 8
 
 
 def run(csv=print):
     cfg = get_config("smollm-135m").reduced().replace(num_layers=4)
     m = Model(cfg)
     exits = [0, 1, 2]
+    from repro.training import AdamW, train
     res = train(m, m.init(jax.random.PRNGKey(0)), batches(cfg, 8, 48),
                 steps=60, opt=AdamW(lr=2e-3),
                 loss_fn=lambda p, b: layerskip_loss(m, p, b, exits)[0],
@@ -35,6 +50,33 @@ def run(csv=print):
     for thr in (0.2, 0.5, 0.8):
         idx, _ = early_exit_decision(last, threshold=thr)
         csv(f"early_exit_mean_depth,thr={thr},{float(jnp.mean(idx)):.3f}")
+
+    # --- the exits in the serving loop: self-speculative batched decode,
+    # one engine per exit depth k (draft = first k blocks + shared head)
+    synth = SyntheticLM(cfg.vocab_size)
+    rng = np.random.default_rng(0)
+    prompts = [synth.sample(rng, i % synth.n_domains, 12)
+               for i in range(BATCH)]
+    base = [autoregressive_baseline(m, params, p, MAX_NEW, temperature=0.0)
+            for p in prompts]
+    for k in (1, 2, 3):
+        eng = BatchedEngine(m, m, batch_size=BATCH, temperature=0.0,
+                            use_cache=False, gamma=4,
+                            policy=SpeculativePolicy(-1.0, mode="self",
+                                                     exit_layer=k))
+        eng.serve_batch(params, params, prompts, MAX_NEW)    # warm jits
+        t0 = time.perf_counter()
+        traces = eng.serve_batch(params, params, prompts, MAX_NEW)
+        jax.block_until_ready(traces[-1].tokens)
+        dt = time.perf_counter() - t0
+        assert eng.spec.second_model_params == 0
+        for t, bb in zip(traces, base):       # self-spec is exact greedy
+            assert list(t.tokens) == list(bb), f"exit_layer={k} diverged"
+        stats = eng.stats()
+        csv(f"early_exit_self_spec,exit_layer={k}:accepted_tokens_per_step,"
+            f"{stats['accepted_tokens_per_step']:.3f}")
+        csv(f"early_exit_self_spec,exit_layer={k}:req_s,"
+            f"{len(prompts) / dt:.3f}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,15 @@ rate vs draft length gamma, for (a) an undistilled draft and (b) a
 DistillSpec-aligned draft — reproducing the survey's claim that draft
 quality drives the speedup, and DistillSpec's claim that on-policy KD
 raises acceptance.
+
+Decoding runs through the SERVING stack — ``BatchedEngine`` with an
+always-escalate ``SpeculativePolicy`` over ``BatchedSpecDecoder`` — not
+the per-request seed ``SpecDecoder`` (that path is pinned by
+``tests/test_speculative.py``), so the numbers here track the code the
+scheduler actually ships.  ``accepted_tokens_per_step`` from
+``BatchedEngine.stats()`` IS tokens-per-target-pass: every member-round
+is one verify pass.  A mode sweep rides along: the same distilled draft
+through the linear, tree, and self-speculative lanes at fixed depth.
 """
 from __future__ import annotations
 
@@ -14,12 +23,17 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.speculative import SpecDecoder, autoregressive_baseline
+from repro.core.policy import SpeculativePolicy
+from repro.core.scheduler import BatchedEngine
+from repro.core.speculative import autoregressive_baseline
 from repro.data import SyntheticLM, batches
 from repro.models import Model
 from repro.training import AdamW, make_train_step, train
 from repro.training.distillation import (acceptance_estimate, kd_loss,
                                          teacher_logits_fn)
+
+MAX_NEW = 24
+BATCH = 8
 
 
 def _train_target(cfg, steps=60):
@@ -28,6 +42,16 @@ def _train_target(cfg, steps=60):
     res = train(m, params, batches(cfg, 8, 48), steps=steps,
                 opt=AdamW(lr=2e-3), log_every=10_000, log=lambda *_: None)
     return m, res["params"]
+
+
+def _serve(draft_model, target_model, dp, tp, prompts, **kw):
+    """Drain ``prompts`` through an always-escalate batched engine and
+    return (traces, stats) — stats carries the speculation counters."""
+    kw.setdefault("policy", SpeculativePolicy(-1.0))
+    eng = BatchedEngine(draft_model, target_model, batch_size=BATCH,
+                        temperature=0.0, use_cache=False, **kw)
+    traces = eng.serve_batch(dp, tp, prompts, MAX_NEW)
+    return traces, eng.stats()
 
 
 def run(csv=print):
@@ -60,28 +84,36 @@ def run(csv=print):
 
     synth = SyntheticLM(cfg.vocab_size)
     rng = np.random.default_rng(0)
-    prompts = [synth.sample(rng, 0, 12) for _ in range(3)]
+    prompts = [synth.sample(rng, 0, 12) for _ in range(BATCH)]
 
     for name, dp in [("random", draft_params), ("distilled", distilled)]:
         for gamma in (2, 4, 8):
-            dec = SpecDecoder(draft_model, target_model, gamma=gamma,
-                              temperature=0.0)
-            tps, acc = [], []
-            for p in prompts:
-                toks, stats = dec.generate(dp, target_params, p, 24)
-                tps.append(stats.tokens_per_target_pass)
-                acc.append(stats.mean_accepted / gamma)
+            _, stats = _serve(draft_model, target_model, dp, target_params,
+                              prompts, gamma=gamma)
             csv(f"spec_tokens_per_target_pass,draft={name}:gamma={gamma},"
-                f"{np.mean(tps):.3f}")
+                f"{stats['accepted_tokens_per_step']:.3f}")
             csv(f"spec_acceptance_rate,draft={name}:gamma={gamma},"
-                f"{np.mean(acc):.3f}")
+                f"{stats['spec_accept_rate']:.3f}")
 
-    # losslessness check rides along
-    base = autoregressive_baseline(target_model, target_params, prompts[0],
-                                   24, temperature=0.0)
-    dec = SpecDecoder(draft_model, target_model, gamma=4, temperature=0.0)
-    toks, _ = dec.generate(distilled, target_params, prompts[0], 24)
-    csv(f"spec_lossless_greedy,match,{int(toks == base)}")
+    # --- lane sweep: same distilled draft, fixed depth 4, all three
+    # speculation modes (the self lane drafts with the TARGET's own
+    # early-exit head: a 1-layer draft has no interior exit)
+    base = [autoregressive_baseline(target_model, target_params, p,
+                                    MAX_NEW, temperature=0.0)
+            for p in prompts]
+    for mode in ("linear", "tree", "self"):
+        dm = target_model if mode == "self" else draft_model
+        dpm = target_params if mode == "self" else distilled
+        traces, stats = _serve(dm, target_model, dpm, target_params,
+                               prompts, gamma=4,
+                               policy=SpeculativePolicy(-1.0, mode=mode))
+        for t, bb in zip(traces, base):   # every lane is exact (greedy)
+            assert list(t.tokens) == list(bb), \
+                f"{mode} lane diverged from greedy baseline"
+        csv(f"spec_lane_tokens_per_target_pass,mode={mode},"
+            f"{stats['accepted_tokens_per_step']:.3f}")
+
+    csv("spec_lossless_greedy,match,1")
 
 
 if __name__ == "__main__":

@@ -75,6 +75,22 @@ def check(rows: dict, *, require_multi_device: bool = False, out=print) -> None:
     first, last = ad["share_first"], ad["share_last"]
     out(f"bandit cloud-token share adapted: {first:.3f} -> {last:.3f}")
 
+    ts = rows["tree_spec"]
+    lanes = ts["lanes"]
+    for name in ("chain", "tree", "chain_depth4", "self"):
+        lane = lanes[name]
+        assert lane["req_s"] > 0, (name, lane)
+        assert lane["accepted_tokens_per_step"] > 0, (name, lane)
+    # multi-token acceptance: the tree lane must retire >1 token per
+    # verify pass, and must not lose to the matched-budget chain
+    assert lanes["tree"]["accepted_tokens_per_step"] > 1.0, lanes["tree"]
+    assert lanes["tree"]["rounds"] <= lanes["chain"]["rounds"], lanes
+    assert ts["tree_vs_chain_speedup"] >= 1.0, ts
+    out(f"tree speculation: {lanes['tree']['accepted_tokens_per_step']:.2f} "
+        f"tokens/step, x{ts['tree_vs_chain_speedup']:.2f} vs matched-budget "
+        f"chain ({lanes['tree']['rounds']} vs {lanes['chain']['rounds']} "
+        "rounds)")
+
     md = rows["multi_device"]
     if "skipped" in md:
         msg = f"multi_device arm was skipped: {md['skipped']}"

@@ -133,10 +133,31 @@ class ThresholdPolicy(CollabPolicy):
 
 class SpeculativePolicy(ThresholdPolicy):
     """Threshold gate escalating into grouped speculative verification
-    (token-level mixture, the legacy ``escalation="speculative"``)."""
+    (token-level mixture, the legacy ``escalation="speculative"``).
+
+    ``mode`` picks the decoder's speculation lane — the engine reads it at
+    construction (see ``BatchedEngine`` / ``BatchedSpecDecoder``):
+
+      * ``"linear"``: the classic gamma-token draft tape (default).
+      * ``"tree"``: packed token-tree drafts, ``tree_width`` first-level
+        branches, verified in one tree-masked cloud pass.
+      * ``"self"``: self-speculative — the edge model's early-exit prefix
+        (``exit_layer`` blocks, default half depth) drafts for its own
+        full-depth verify; no second model involved.
+    """
 
     name = "speculative"
     action = "speculative"
+
+    def __init__(self, threshold: float = 0.6, *, mode: str = "linear",
+                 tree_width: int = 2, exit_layer: Optional[int] = None):
+        super().__init__(threshold)
+        if mode not in ("linear", "tree", "self"):
+            raise ValueError(f"unknown speculation mode {mode!r}; "
+                             "known: linear | tree | self")
+        self.spec_mode = mode
+        self.spec_tree_width = int(tree_width)
+        self.spec_exit_layer = exit_layer
 
 
 class SkeletonPolicy(ThresholdPolicy):

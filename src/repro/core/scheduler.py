@@ -198,6 +198,9 @@ class BatchedEngine:
                  slo_ms: Optional[float] = None,
                  prefill_chunk: Optional[int] = None,
                  stop_token: Optional[int] = None,
+                 spec_mode: Optional[str] = None,
+                 spec_tree_width: Optional[int] = None,
+                 spec_exit_layer: Optional[int] = None,
                  mesh=None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
@@ -256,9 +259,58 @@ class BatchedEngine:
                           block_size=kv_block_size, mesh=mesh)
         self.cache = SemanticCache(threshold=cache_threshold) if use_cache \
             else None
-        self.spec = BatchedSpecDecoder(edge_model, cloud_model, gamma=gamma,
-                                       temperature=temperature,
-                                       kv_layout=self.kv_layout)
+        # speculation lane: engine kwarg > policy attribute > linear.  A
+        # model family the requested lane cannot serve falls back to the
+        # linear tape; the EFFECTIVE mode is what stats()["spec_mode"]
+        # reports, so callers can detect the downgrade.
+        mode = spec_mode if spec_mode is not None \
+            else getattr(self.policy, "spec_mode", None) or "linear"
+        if mode not in ("linear", "tree", "self"):
+            raise ValueError(f"unknown spec_mode {mode!r}; "
+                             "known: linear | tree | self")
+        width = spec_tree_width if spec_tree_width is not None \
+            else getattr(self.policy, "spec_tree_width", None) or 2
+        exit_layer = spec_exit_layer if spec_exit_layer is not None \
+            else getattr(self.policy, "spec_exit_layer", None)
+        if mode == "tree" and not BatchedSpecDecoder.tree_supported(
+                edge_model, cloud_model):
+            mode = "linear"
+        if mode == "self" and not BatchedSpecDecoder.self_supported(
+                edge_model):
+            mode = "linear"
+        self.spec_mode = mode
+        if mode == "tree":
+            from repro.core.tree_speculation import branching_for
+            self.spec = BatchedSpecDecoder(
+                edge_model, cloud_model, gamma=gamma,
+                temperature=temperature, mode="tree",
+                branching=branching_for(width, gamma))
+        elif mode == "self":
+            self.spec = BatchedSpecDecoder(
+                edge_model, edge_model, gamma=gamma,
+                temperature=temperature, mode="self",
+                exit_layer=exit_layer)
+        else:
+            self.spec = BatchedSpecDecoder(edge_model, cloud_model,
+                                           gamma=gamma,
+                                           temperature=temperature,
+                                           kv_layout=self.kv_layout)
+        # tree/self SpecOps always run dense per-slot caches (block-masked
+        # extends are a dense-layout feature), so their escalation groups
+        # build DENSE side states even when the serving lanes are paged.
+        # Linear groups keep using the serving lanes — byte-identical
+        if mode == "linear" or self.edge.layout == "dense":
+            self._spec_edge = self.edge
+        else:
+            self._spec_edge = Lane(edge_model, estimator, temperature,
+                                   layout="dense", block_size=kv_block_size,
+                                   mesh=mesh, data_shards=self._data_shards)
+        if mode != "tree" or self.cloud.layout == "dense":
+            self._spec_cloud = self.cloud
+        else:
+            self._spec_cloud = Lane(cloud_model, estimator, temperature,
+                                    layout="dense", block_size=kv_block_size,
+                                    mesh=mesh)
         self._queue: collections.deque = collections.deque()
         self._next_rid = 0
         # intra-batch dedup: in-flight leaders and their coalesced followers
@@ -344,9 +396,11 @@ class BatchedEngine:
             sorted(self._queue, key=lambda r: (r.at, r.rid)))
         B = self.batch_size
         # slot capacity: prompt + generation + speculative overdraft margin
-        # (matches SpecDecoder's max_seq so escalation reuses the same pads)
+        # (matches SpecDecoder's max_seq so escalation reuses the same
+        # pads; a tree lane overdrafts a full padded tree per round)
+        ovr = self.spec.plan.n_pad if self.spec_mode == "tree" else self.gamma
         self._slot_len = max(r.prompt.size + r.max_new for r in self._queue) \
-            + 2 * max(self.gamma, 16) + 8
+            + 2 * max(ovr, 16) + 8
         self._kv_stats = {"kv_layout": self.kv_layout}
         state = self.edge.make_state(edge_params, B, self._slot_len,
                                      num_blocks=self.kv_blocks)
@@ -730,23 +784,32 @@ class BatchedEngine:
         return results
 
     def _pick_victim(self, state, slots, steps, wave) -> Optional[int]:
-        """Preemption victim: the occupied slot with the MOST remaining
-        decode steps (it would hold its block reservation longest), tie
-        broken toward the youngest request.  Slots admitted or resumed in
-        the current wave are exempt — their staged device writes have not
-        flushed yet, and exempting them prevents same-tick swap thrash.
-        Slots whose swap-in restore could never fit the pool (admitted
-        over a prefix larger than their private footprint allows) are
-        exempt too — swapping them would strand their completed work.  So
-        are slots mid-chunked-prefill: their device blocks hold garbage
-        until finalize, and swapping would checkpoint that garbage."""
+        """Preemption victim by a cost model: score each candidate by the
+        decode steps its eviction frees (remaining budget — how long it
+        would hold its block reservation) per block of KV it has staged
+        (``steps / (1 + blocks_owned)`` — swap-out checkpoints those bytes
+        to host and swap-in restores them, so a fat slot is an expensive
+        victim even when it has far to go).  Dense states expose no block
+        pool, so the score degrades to raw remaining steps — the historic
+        most-steps ordering — and ties still break toward the youngest
+        request.  Slots admitted or resumed in the current wave are exempt
+        — their staged device writes have not flushed yet, and exempting
+        them prevents same-tick swap thrash.  Slots whose swap-in restore
+        could never fit the pool (admitted over a prefix larger than their
+        private footprint allows) are exempt too — swapping them would
+        strand their completed work.  So are slots mid-chunked-prefill:
+        their device blocks hold garbage until finalize, and swapping
+        would checkpoint that garbage."""
         steps_h = np.asarray(steps)
+        pool = getattr(state, "pool", None)
         best = None
         for b, s in enumerate(slots):
             if s.req is None or b in wave or b in self._prefill_jobs \
                     or not state.swappable(b):
                 continue
-            key = (int(steps_h[b]), s.req.rid)
+            staged = len(pool.owned(b)) if pool is not None else 0
+            key = (float(steps_h[b]) / (1.0 + staged),
+                   int(steps_h[b]), s.req.rid)
             if best is None or key > best[0]:
                 best = (key, b)
         return None if best is None else best[1]
@@ -884,42 +947,58 @@ class BatchedEngine:
     def _spec_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
         """One BatchedSpecDecoder group over all escalated requests.  Paged
         groups pre-grow each slot to prompt + budget + one round of draft
-        overdraft — spec rewinds only move ``pos``, never reallocate."""
+        overdraft — spec rewinds only move ``pos``, never reallocate.
+        A tree lane overdrafts a full padded tree per round and runs on the
+        dense side lanes; the self lane builds ONE edge-side state (draft
+        and verify share cache and params — no cloud involvement, so its
+        traces carry ``cloud_passes=0``)."""
         G = self.batch_size
-        need = [r.prompt.size - 1 + r.max_new + self.gamma + 2 for r in reqs]
-        d_state = self.edge.make_state(edge_params, G, self._slot_len,
-                                       need_tokens=need)
-        t_state = self.cloud.make_state(cloud_params, G, self._slot_len,
-                                        need_tokens=need)
+        mode = self.spec_mode
+        ovr = (self.spec.plan.n_pad if mode == "tree" else self.gamma) + 2
+        need = [r.prompt.size - 1 + r.max_new + ovr for r in reqs]
+        d_state = self._spec_edge.make_state(edge_params, G, self._slot_len,
+                                             need_tokens=need)
+        states = [d_state]
+        if mode != "self":
+            t_state = self._spec_cloud.make_state(
+                cloud_params, G, self._slot_len, need_tokens=need)
+            states.append(t_state)
         last = jnp.zeros((G, 1, 1), jnp.int32)
         for i, (r, nd) in enumerate(zip(reqs, need)):
-            d_state.admit(i, r.prompt, nd)
-            t_state.admit(i, r.prompt, nd)
+            for st in states:
+                st.admit(i, r.prompt, nd)
             last = last.at[i, 0, 0].set(int(r.prompt[-1]))
         overdraft = np.zeros((G,), np.int32)
         overdraft[:len(reqs)] = [n - (r.prompt.size - 1)
                                  for n, r in zip(need, reqs)]
-        for st in (d_state, t_state):
+        for st in states:
             st.flush()
             st.prepare_tick(list(range(len(reqs))), overdraft, 1 << 30)
         max_news = [r.max_new for r in reqs] + [0] * (G - len(reqs))
         for r in reqs:
             self.clock.on_prefill(r.prompt.size - 1)
-        outs, stats = self.spec.generate_group(
-            edge_params, cloud_params, d_state.caches, t_state.caches, last,
-            max_news, rng)
+        if mode == "self":
+            outs, stats = self.spec.generate_group_self(
+                edge_params, d_state.caches, last, max_news, rng)
+        else:
+            outs, stats = self.spec.generate_group(
+                edge_params, cloud_params, d_state.caches, t_state.caches,
+                last, max_news, rng)
         # modeled cost: the group runs the slowest member's rounds, each a
-        # draft chunk (gamma) + one verify + one commit step
+        # draft chunk (gamma steps, or the tree's depth levels) + one
+        # verify + one commit step
+        draft_steps = self.spec.plan.depth if mode == "tree" else self.gamma
         self.clock.on_steps(max(st["rounds"] for st in stats[:len(reqs)])
-                            * (self.gamma + 2))
-        self._note_group(d_state, t_state)
+                            * (draft_steps + 2))
+        self._note_group(*states)
         res = []
         for i, (r, u) in enumerate(zip(reqs, uncs)):
             st = stats[i]
             res.append((r, RequestTrace(
                 "speculative",
-                edge_calls=r.max_new + st["rounds"] * (self.gamma + 1),
-                cloud_passes=st["rounds"], uncertainty=u, tokens=outs[i])))
+                edge_calls=r.max_new + st["rounds"] * (draft_steps + 1),
+                cloud_passes=0 if mode == "self" else st["rounds"],
+                uncertainty=u, tokens=outs[i])))
         return res
 
     # ------------------------------------------------------------ stats
@@ -931,7 +1010,17 @@ class BatchedEngine:
         return self._events
 
     def stats(self) -> Dict[str, Any]:
+        c = self.spec.counters
         return {"cache_hit_rate": self.cache.hit_rate if self.cache else 0.0,
                 "policy": self.policy.name,
+                "spec_mode": self.spec_mode,
+                # acceptance over candidates DRAFTED; emitted per verify
+                # pass (>1 is the whole point of the speculation lanes)
+                "spec_accept_rate": c["accepted_tokens"] / c["draft_tokens"]
+                if c["draft_tokens"] else 0.0,
+                "accepted_tokens_per_step":
+                c["emitted_tokens"] / c["member_rounds"]
+                if c["member_rounds"] else 0.0,
+                "spec_lanes": {self.spec_mode: dict(c)},
                 **self.policy.stats(), **self._kv_stats,
                 **latency_rollup(self._events, self.slo_ms)}

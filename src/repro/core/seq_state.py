@@ -146,6 +146,16 @@ class SpecOps:
             self._vreplay = jax.vmap(
                 lambda p, t, c, n: model.replay_step(p, t[None, :], c, n),
                 in_axes=(None, 0, 0, 0))
+        # token trees need a customizable intra-block mask: dense-layout
+        # attention families only (paged extends and recurrent scans are
+        # linear-order — see DESIGN.md §Arch-applicability)
+        self.tree_ok = (layout == "dense"
+                        and model.cfg.family in ("dense", "moe", "vlm"))
+        if self.tree_ok:
+            self._vext_tree = jax.vmap(
+                lambda p, t, c, m, d: model.extend_step(
+                    p, t, c, block_mask=m, q_positions=c["pos"] + d),
+                in_axes=(None, 0, 0, None, None))
 
     def step(self, params, tok, caches):
         """tok (G, 1, 1) -> (logits (G, V), caches)."""
@@ -154,6 +164,63 @@ class SpecOps:
     def extend(self, params, tokens, caches):
         """tokens (G, T) -> (logits (G, T, V), caches)."""
         return self._extend(params, tokens, caches)
+
+    def extend_tree(self, params, tokens, caches, block_mask, depths):
+        """Tree-masked extend: each slot's ``tokens`` (G, T) row is a packed
+        token tree whose node ``i`` attends the cache prefix plus
+        ``block_mask[i]`` of the block itself, with RoPE positions
+        ``pos + depths``.  Dense attention layouts only (``tree_ok``)."""
+        if not self.tree_ok:
+            raise ValueError(
+                f"token trees need a dense-layout attention model; got "
+                f"family {self.model.cfg.family!r} on layout {self.layout!r}")
+        logits, caches = self._vext_tree(params, tokens[:, None, :], caches,
+                                         block_mask, depths)
+        return logits[:, 0], caches
+
+    def reset(self, caches, snap):
+        """Roll the group back to the pre-round snapshot WITHOUT committing
+        anything (tree rounds re-anchor between draft levels and before the
+        replay commit)."""
+        if self.layout == "recurrent":
+            return snap
+        return {**caches, "pos": snap}
+
+    def commit_replay(self, params, caches, snap, tokens, counts):
+        """Replay-based commit for tree rounds: the accepted root path's
+        K/V live at non-contiguous tree positions, so a bare ``pos`` write
+        (``commit``) would keep sibling garbage inside the visible prefix.
+        Rewind to the snapshot, re-extend through the padded accepted tape
+        ``tokens`` (G, T), then mask to each slot's ``counts`` — one extra
+        target pass per round, exactly the seed ``TreeSpecDecoder`` rewind.
+        Recurrent layouts already commit by replay."""
+        if self.layout == "recurrent":
+            return self._vreplay(params, tokens, snap, counts)
+        caches = {**caches, "pos": snap}
+        _, caches = self.extend(params, tokens, caches)
+        return {**caches, "pos": snap + counts}
+
+    def commit_permute(self, caches, snap, perm, counts):
+        """Gather-based tree commit for KV layouts: the verify extend
+        wrote every tree node's K/V at cache row ``snap + node`` with RoPE
+        position ``snap + depth(node)``, and the accepted root path has
+        exactly one node per depth — so its rows are already
+        position-correct and merely sit at the wrong cache index.  Gather
+        them down to the contiguous prefix [snap, snap + T) and advance
+        ``pos``: no replay forward pass.  ``perm`` (G, T) holds the path's
+        node indices per slot (entries past ``counts`` land beyond ``pos``
+        and are dead).  Tree-capable families share the transformer cache
+        layout (``k``/``v`` with the sequence on axis -3); recurrent tree
+        groups cannot exist (``tree_ok``)."""
+        def one(cache, s, pm):
+            def move(x):
+                rows = jnp.take(x, s + pm, axis=-3, mode="clip")
+                return jax.lax.dynamic_update_slice_in_dim(x, rows, s,
+                                                           axis=-3)
+            return {**cache, "k": move(cache["k"]), "v": move(cache["v"])}
+
+        caches = jax.vmap(one)(caches, snap, perm)
+        return {**caches, "pos": snap + counts}
 
     def snapshot(self, caches):
         """Pre-round rewind anchor: ``pos`` (G,) for KV layouts, the cache

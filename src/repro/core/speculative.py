@@ -287,19 +287,105 @@ class BatchedSpecDecoder:
     masked out and overwritten by the next round.  The caller must have
     grown each slot's block table to cover prompt + budget + one round of
     draft overdraft before calling ``generate_group``.
+
+    ``mode`` picks the speculation lane:
+
+    * ``"linear"`` (default) — the gamma-token chain above, any family pair.
+    * ``"tree"`` — each slot drafts a PACKED TOKEN TREE (static
+      ``TreePlan`` topology, pow2-padded width) level-by-level via top-k
+      expansion, each level a rectangular-masked extend over ONLY its new
+      nodes (each node forwarded exactly once per round); verification is
+      ONE batched tree-masked target extend (``SpecOps.extend_tree`` — the
+      Pallas tree-attention kernel on TPU) and acceptance walks the
+      longest target-consistent root path (``tree_accept``).  The accepted
+      path's K/V sit at non-contiguous but position-correct tree rows, so
+      BOTH commits are row gathers down to the contiguous prefix
+      (``SpecOps.commit_permute`` — no replay forward pass).  Dense-layout
+      attention families only (``tree_supported``); group states are
+      always dense.
+    * ``"self"`` — no second model: the draft model's OWN early-exit head
+      (first ``exit_layer`` blocks + shared LM head,
+      ``self_speculative.partial_extend_step``) drafts into the shared
+      cache and the full depth verifies, overwriting the shallow K/V.
+      One cache, one params pytree (``second_model_params == 0``); use
+      ``generate_group_self``.
+
+    ``counters`` accumulates per-lane totals across ``generate_group``
+    calls: member_rounds (active member-rounds = verify passes),
+    draft_tokens (candidate tokens drafted), verify_tokens (positions the
+    target forward covers, replay included), accepted_tokens and
+    emitted_tokens — the engine's ``stats()`` derives
+    ``spec_accept_rate`` / ``accepted_tokens_per_step`` from these.
     """
 
     def __init__(self, draft_model, target_model, *, gamma: int = 4,
-                 temperature: float = 0.0, kv_layout: str = "dense"):
+                 temperature: float = 0.0, kv_layout: str = "dense",
+                 mode: str = "linear", branching=None, exit_layer=None):
         from repro.core.seq_state import SpecOps, layout_for
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if mode not in ("linear", "tree", "self"):
+            raise ValueError(f"unknown speculation mode {mode!r}; "
+                             "known: linear | tree | self")
         self.gamma = gamma
         self.temperature = temperature
         self.kv_layout = kv_layout
-        self._dops = SpecOps(draft_model, layout_for(draft_model, kv_layout))
-        self._tops = SpecOps(target_model, layout_for(target_model, kv_layout))
-        self._round = jax.jit(self._round_impl)
+        self.mode = mode
+        self.counters = {"member_rounds": 0, "draft_tokens": 0,
+                         "verify_tokens": 0, "accepted_tokens": 0,
+                         "emitted_tokens": 0}
+        if mode == "linear":
+            self._dops = SpecOps(draft_model, layout_for(draft_model, kv_layout))
+            self._tops = SpecOps(target_model, layout_for(target_model, kv_layout))
+            self._round = jax.jit(self._round_impl)
+            self._per_round = (gamma, gamma + 1)
+        elif mode == "tree":
+            from repro.core.tree_speculation import TreePlan, branching_for
+            if not self.tree_supported(draft_model, target_model):
+                raise ValueError(
+                    "tree speculation needs dense-layout attention families "
+                    f"on both models, got {draft_model.cfg.family!r} / "
+                    f"{target_model.cfg.family!r} (DESIGN.md "
+                    "§Arch-applicability)")
+            # tree groups always run dense per-slot caches: block masks are
+            # a dense-layout feature (paged extends stay linear-order)
+            self._dops = SpecOps(draft_model, "dense")
+            self._tops = SpecOps(target_model, "dense")
+            self.plan = TreePlan(branching if branching is not None
+                                 else branching_for(2, gamma))
+            self._round = jax.jit(self._tree_round_impl)
+            self._per_round = (self.plan.n - 1, self.plan.n_pad)
+        else:                                            # self
+            from repro.core.self_speculative import partial_extend_step
+            model = draft_model
+            if not self.self_supported(model):
+                raise ValueError(
+                    "self-speculation needs a scan-stacked attention edge "
+                    f"model, got family {model.cfg.family!r}")
+            k = exit_layer if exit_layer is not None \
+                else max(model.cfg.num_layers // 2, 1)
+            if not 0 < k < model.cfg.num_layers:
+                raise ValueError(f"exit_layer {k} out of range "
+                                 f"(0, {model.cfg.num_layers})")
+            self.exit_layer = k
+            self.second_model_params = 0
+            cfg = model.cfg
+            self._tops = SpecOps(model, "dense")
+            self._vpartial = jax.vmap(
+                lambda p, t, c: partial_extend_step(p, t, c, cfg, k),
+                in_axes=(None, 0, 0))
+            self._round = jax.jit(self._self_round_impl)
+            self._per_round = (gamma, gamma + 1)
+
+    @staticmethod
+    def tree_supported(draft_model, target_model) -> bool:
+        fams = ("dense", "moe", "vlm")
+        return (draft_model.cfg.family in fams
+                and target_model.cfg.family in fams)
+
+    @staticmethod
+    def self_supported(model) -> bool:
+        return model.cfg.family in ("dense", "moe", "vlm")
 
     def _round_impl(self, draft_params, target_params, d_slots, t_slots,
                     last, active, rng):
@@ -359,13 +445,148 @@ class BatchedSpecDecoder:
             jnp.where(active[:, None, None], next_tok[:, None, None], last))
         return d_slots, t_slots, last, draft_toks, n_acc, next_tok
 
+    def _tree_round_impl(self, draft_params, target_params, d_slots, t_slots,
+                         last, active, rng):
+        """One packed-tree draft/verify/commit round over the whole group.
+
+        Drafting expands the static ``TreePlan`` level-by-level and
+        INCREMENTALLY: each span (root, then each level) is one rectangular
+        tree-masked extend over only that span's NEW nodes — the mask's
+        earlier columns cover the tree rows previous spans already wrote to
+        the cache — so a round forwards each of the ``n`` nodes exactly
+        once (O(n), not the O(n^2) recompute-from-snapshot alternative).
+        Parent-row logits feed static top-k child selection.  Verification
+        is one batched tree-masked target extend over all ``n_pad`` nodes —
+        the same gather/scatter wave crossing as the linear round — and
+        ``tree_accept`` walks the longest target-consistent root path per
+        slot.  Accepted-path K/V sit at non-contiguous tree positions, so a
+        bare ``pos`` write would keep sibling garbage inside the visible
+        prefix — but every node's row is position-correct (written once at
+        RoPE position snap + depth), so BOTH commits are row permutes
+        (``commit_permute``): gather the accepted path down to the
+        contiguous prefix, zero extra forward passes.
+        """
+        from repro.core.tree_speculation import tree_accept
+        plan = self.plan
+        G = last.shape[0]
+        D = plan.depth
+        mask = jnp.asarray(plan.mask)
+        depths = jnp.asarray(plan.depths)
+        d_snap = self._dops.snapshot(d_slots)
+        t_snap = self._tops.snapshot(t_slots)
+
+        # ---- draft: deterministic top-k tree expansion (OPT-Tree style);
+        # node c's acceptance distribution q is its PARENT's draft logits
+        toks = jnp.zeros((G, plan.n_pad), jnp.int32).at[:, 0].set(last[:, 0, 0])
+        q_lgs = [None] * plan.n_pad
+        spans = [(0, 1)] + list(plan.levels)     # contiguous: b_i == a_{i+1}
+        for si, (a, b) in enumerate(spans):
+            # extend ONLY nodes [a, b); mask rows a..b over all b tree
+            # columns written so far; RoPE offset depths - a because the
+            # cache pos already advanced to snap + a
+            lgs, d_slots = self._dops.extend_tree(
+                draft_params, toks[:, a:b], d_slots,
+                mask[a:b, :b], depths[a:b] - a)
+            if si + 1 == len(spans):
+                break                            # deepest level: K/V only
+            lo, hi = spans[si + 1]
+            by_parent = {}
+            for c in range(lo, hi):
+                by_parent.setdefault(int(plan.parent[c]), []).append(c)
+            for pnode, kids in sorted(by_parent.items()):
+                plg = lgs[:, pnode - a]                      # (G, V)
+                top = jax.lax.top_k(plg, len(kids))[1]
+                for j, c in enumerate(kids):
+                    toks = toks.at[:, c].set(top[:, j].astype(jnp.int32))
+                    q_lgs[c] = plg
+        V = q_lgs[plan.levels[0][0]].shape[-1]
+        zero = jnp.zeros((G, V), jnp.float32)
+        q_logits = jnp.stack([zero if l is None else l.astype(jnp.float32)
+                              for l in q_lgs], axis=1)       # (G, n_pad, V)
+
+        # ---- verify: ONE batched tree-masked target extend over the
+        # flattened trees.  Same wave crossing as the linear round: the
+        # data-sharded trees are all-gathered for the tensor-parallel
+        # verifier, the committed result scattered back below.
+        toks = runtime.gather_wave(toks)
+        t_lgs, t_slots = self._tops.extend_tree(target_params, toks, t_slots,
+                                                mask, depths)
+
+        n_acc, em, path = jax.vmap(
+            functools.partial(tree_accept, plan=plan,
+                              temperature=self.temperature)
+        )(jax.random.split(rng, G), t_lgs, q_logits, toks)
+        next_tok = jnp.take_along_axis(em, n_acc[:, None], axis=1)[:, 0]
+
+        # ---- commit the accepted root path.  Both caches hold every tree
+        # node's K/V at row snap + node with RoPE position snap + depth
+        # (the draft wrote them level by level, the verify in one pass), so
+        # both commits are row PERMUTES — gather the accepted path down to
+        # the contiguous prefix — with zero extra forward passes.
+        counts = jnp.where(active, n_acc + 1, 0).astype(jnp.int32)
+        d_slots = self._dops.commit_permute(d_slots, d_snap, path, counts)
+        t_slots = self._tops.commit_permute(t_slots, t_snap, path, counts)
+        last = runtime.scatter_wave(
+            jnp.where(active[:, None, None], next_tok[:, None, None], last))
+        return d_slots, t_slots, last, em[:, :D], n_acc, next_tok
+
+    def _self_round_impl(self, params, slots, last, active, rng):
+        """One self-speculative round: the model's first ``exit_layer``
+        blocks + shared head draft a gamma-chain into the SHARED cache
+        (shallow K/V at the draft positions, ``pos`` advanced manually),
+        then the full depth verifies from the snapshot — overwriting every
+        layer's K/V at those positions — and the commit is the usual
+        ``pos`` write.  One cache, one params pytree."""
+        gamma = self.gamma
+        G = last.shape[0]
+        snap = self._tops.snapshot(slots)
+        r_draft, r_ver = jax.random.split(rng)
+
+        def body(carry, r):
+            caches, tok = carry
+            lg, caches = self._vpartial(params, tok, caches)  # tok (G,1,1)
+            lg = lg[:, 0, 0]                                 # (G, V)
+            caches = {**caches, "pos": caches["pos"] + 1}
+            if self.temperature == 0.0:
+                nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+            else:
+                nxt = jax.random.categorical(
+                    r, lg / self.temperature, axis=-1).astype(jnp.int32)
+            return (caches, nxt[:, None, None]), (nxt, lg)
+
+        (slots, _), (toks, lgs) = jax.lax.scan(
+            body, (slots, last), jax.random.split(r_draft, gamma))
+        draft_toks = toks.T                                  # (G, gamma)
+        draft_lgs = jnp.moveaxis(lgs, 0, 1)                  # (G, gamma, V)
+
+        ver_in = jnp.concatenate([last[:, :, 0], draft_toks], axis=1)
+        ver_in, draft_toks = runtime.gather_wave(ver_in, draft_toks)
+        slots = self._tops.reset(slots, snap)
+        t_logits, slots = self._tops.extend(params, ver_in, slots)
+
+        n_acc, next_tok = jax.vmap(
+            functools.partial(speculative_sample,
+                              temperature=self.temperature)
+        )(jax.random.split(r_ver, G), t_logits, draft_lgs, draft_toks)
+
+        counts = jnp.where(active, n_acc + 1, 0).astype(jnp.int32)
+        slots = self._tops.commit(params, slots, snap, ver_in, counts)
+        last = runtime.scatter_wave(
+            jnp.where(active[:, None, None], next_tok[:, None, None], last))
+        return slots, last, draft_toks, n_acc, next_tok
+
     def generate_group(self, draft_params, target_params, d_slots, t_slots,
                        last, max_news, rng=None):
         """Decode a prefilled group until every member has its tokens.
 
         max_news: per-slot budget (0 for padding slots).  Returns
         (token lists, per-member stats dicts with rounds/accepted).
+        ``mode="linear"`` and ``mode="tree"`` share this loop — a tree
+        round's tape is its emitted-path tokens, so the per-round emission
+        is ``tape[i, :n_acc] + [next_tok]`` in both.
         """
+        assert self.mode in ("linear", "tree"), \
+            "self mode decodes one shared state: use generate_group_self"
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         G = last.shape[0]
         remaining = np.asarray(max_news, np.int64).copy()
@@ -377,19 +598,52 @@ class BatchedSpecDecoder:
             rng, r = jax.random.split(rng)
             d_slots, t_slots, last, draft_toks, n_acc, next_tok = self._round(
                 draft_params, target_params, d_slots, t_slots, last, active, r)
-            dt = np.asarray(draft_toks)
-            na = np.asarray(n_acc)
-            nt = np.asarray(next_tok)
-            for i in range(G):
-                if remaining[i] <= 0:
-                    continue
-                emitted = [int(t) for t in dt[i, :int(na[i])]] + [int(nt[i])]
-                take = min(len(emitted), int(remaining[i]))
-                out[i].extend(emitted[:take])
-                remaining[i] -= take
-                member_stats[i]["rounds"] += 1
-                member_stats[i]["accepted"].append(int(na[i]))
+            self._collect(remaining, draft_toks, n_acc, next_tok, out,
+                          member_stats)
         return out, member_stats
+
+    def generate_group_self(self, params, slots, last, max_news, rng=None):
+        """Self-speculative twin of ``generate_group``: ONE model, ONE
+        stacked dense cache (shallow draft + full-depth verify share it)."""
+        assert self.mode == "self"
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        G = last.shape[0]
+        remaining = np.asarray(max_news, np.int64).copy()
+        out: List[List[int]] = [[] for _ in range(G)]
+        member_stats = [{"rounds": 0, "accepted": []} for _ in range(G)]
+
+        while (remaining > 0).any():
+            active = jnp.asarray(remaining > 0)
+            rng, r = jax.random.split(rng)
+            slots, last, draft_toks, n_acc, next_tok = self._round(
+                params, slots, last, active, r)
+            self._collect(remaining, draft_toks, n_acc, next_tok, out,
+                          member_stats)
+        return out, member_stats
+
+    def _collect(self, remaining, draft_toks, n_acc, next_tok, out,
+                 member_stats):
+        """Host half of a round: slice each active member's emission off
+        the padded tape and accumulate the lane counters."""
+        dt = np.asarray(draft_toks)
+        na = np.asarray(n_acc)
+        nt = np.asarray(next_tok)
+        per_draft, per_verify = self._per_round
+        for i in range(len(out)):
+            if remaining[i] <= 0:
+                continue
+            emitted = [int(t) for t in dt[i, :int(na[i])]] + [int(nt[i])]
+            take = min(len(emitted), int(remaining[i]))
+            out[i].extend(emitted[:take])
+            remaining[i] -= take
+            member_stats[i]["rounds"] += 1
+            member_stats[i]["accepted"].append(int(na[i]))
+            c = self.counters
+            c["member_rounds"] += 1
+            c["draft_tokens"] += per_draft
+            c["verify_tokens"] += per_verify
+            c["accepted_tokens"] += int(na[i])
+            c["emitted_tokens"] += take
 
 
 def autoregressive_baseline(model, params, prompt, max_new: int, rng=None,

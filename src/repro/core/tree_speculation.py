@@ -58,6 +58,191 @@ class TokenTree:
         return d
 
 
+class TreePlan:
+    """Static packed topology for BATCHED tree speculation.
+
+    A fixed branching plan makes every per-round shape static: node i's
+    parent, depth and ancestor mask are numpy constants, so the batched
+    decoder's draft expansion, verify mask and acceptance walk all trace
+    once.  Nodes are level-contiguous (root = node 0, then every level-1
+    node, …), which makes the children of the level-``l`` node of rank
+    ``r`` a pure arithmetic range — the acceptance walk needs no gather
+    over a parent table.
+
+    The packed width is pow2-padded (``n_pad``); pad nodes carry a
+    self-only mask row (so their softmax rows stay finite) and are never
+    visited by the walk.
+    """
+
+    def __init__(self, branching: Sequence[int]):
+        branching = tuple(int(b) for b in branching)
+        if not branching or any(b < 1 for b in branching):
+            raise ValueError(f"bad branching plan {branching!r}")
+        widths = np.cumprod(branching)               # level 1..D node counts
+        self.branching = branching
+        self.depth = len(branching)                  # accepted path <= depth
+        self.n = 1 + int(widths.sum())
+        self.n_pad = 1 << (self.n - 1).bit_length()
+        # level_lo[l] = first node index of level l (level 0 = the root)
+        self.level_lo = (0,) + tuple(1 + int(widths[:l].sum())
+                                     for l in range(self.depth))
+        # children of the rank-r node of level l:
+        #   level_lo[l+1] + r*branching[l] + [0, branching[l])
+        parent = np.full(self.n_pad, -1, np.int32)
+        depths = np.zeros(self.n_pad, np.int32)
+        for l in range(1, self.depth + 1):
+            lo, w, k = self.level_lo[l], int(widths[l - 1]), branching[l - 1]
+            for r in range(w):
+                parent[lo + r] = self.level_lo[l - 1] + r // k
+                depths[lo + r] = l
+        self.parent = parent                         # pads: -1
+        self.depths = depths                         # pads: 0
+        mask = np.eye(self.n_pad, dtype=bool)        # pads: self-only rows
+        for i in range(self.n):
+            j = i
+            while j != -1:
+                mask[i, j] = True
+                j = int(parent[j]) if j else -1
+        self.mask = mask
+        # draft expansion: level l's new nodes are [lo, hi) and their
+        # parents are the previous level — one tree-masked extend over the
+        # prefix [0, lo) yields every parent row's logits
+        self.levels = tuple((self.level_lo[l],
+                             self.level_lo[l] + int(widths[l - 1]))
+                            for l in range(1, self.depth + 1))
+
+
+def branching_for(width: int, gamma: int) -> tuple:
+    """Default branching plan for ``--spec-tree-width`` at draft depth
+    ``gamma``: fan out wide at the root (where the draft is least certain),
+    once more below it, then single chains — the Sequoia/OPT-Tree shape
+    that keeps node count linear in depth."""
+    width, gamma = max(int(width), 1), max(int(gamma), 1)
+    return (width,) if gamma == 1 else (width, 2) + (1,) * (gamma - 2)
+
+
+def tree_accept(rng, t_logits, q_logits, tokens, plan: TreePlan, *,
+                temperature: float = 1.0):
+    """Packed-tree acceptance walk for ONE slot (vmapped by
+    ``BatchedSpecDecoder``): from the root, rejection-sample one child per
+    level against the draft distribution it was drawn from (siblings tried
+    in order, union-bound residual on total rejection — the ``verify_tree``
+    math, statically unrolled).
+
+    t_logits/q_logits: (n_pad, V) target/draft logits per node (q at node c
+    = its PARENT's draft logits — the distribution c's token was drawn
+    from); tokens: (n_pad,) int32.  Returns (n_acc, emitted (depth+1,),
+    path (depth+1,)): the round emits ``emitted[:n_acc+1]``, whose last
+    entry is the resample/bonus token, and ``path[d]`` is the accepted
+    node INDEX at depth d (``path[0] = 0``, the root; entries past
+    ``n_acc`` are dead) — the permutation ``SpecOps.commit_permute`` uses
+    to relocate the accepted K/V rows.  temperature == 0 degenerates to
+    the exact greedy walk (accept iff a child carries the target argmax).
+    """
+    D, V = plan.depth, t_logits.shape[-1]
+    kmax = max(plan.branching)
+    r_acc, r_res = jax.random.split(rng)
+    u_acc = jax.random.uniform(r_acc, (D, kmax))
+    u_res = jax.random.uniform(r_res, (D + 1,))
+
+    def probs(l):
+        l = l.astype(jnp.float32)
+        if temperature == 0.0:
+            p = (l >= jnp.max(l, -1, keepdims=True)).astype(jnp.float32)
+            return p / jnp.sum(p, -1, keepdims=True)
+        return jax.nn.softmax(l / temperature, -1)
+
+    def sample(dist, u):                     # inverse-CDF, as spec_verify
+        cdf = jnp.cumsum(dist, -1)
+        return jnp.minimum(jnp.sum((cdf < u).astype(jnp.int32), -1), V - 1)
+
+    cur = jnp.int32(0)
+    alive = jnp.bool_(True)
+    n_acc = jnp.int32(0)
+    emitted = []
+    path = [jnp.int32(0)]
+    for l in range(D):
+        k = plan.branching[l]
+        child0 = plan.level_lo[l + 1] + (cur - plan.level_lo[l]) * k
+        p = probs(t_logits[cur])
+        chosen = jnp.int32(-1)
+        q_total = jnp.zeros((V,), jnp.float32)
+        for j in range(k):
+            c = child0 + j
+            tok_c = tokens[c]
+            q_c = probs(q_logits[c])
+            ratio = p[tok_c] / jnp.maximum(q_c[tok_c], 1e-20)
+            tried = chosen < 0
+            acc_j = tried & (u_acc[l, j] < jnp.minimum(ratio, 1.0))
+            q_total = jnp.where(tried & ~acc_j,
+                                jnp.maximum(q_total, q_c), q_total)
+            chosen = jnp.where(acc_j, c, chosen)
+        resid = jnp.clip(p - q_total, 0.0, None)
+        tot = jnp.sum(resid)
+        resid = jnp.where(tot > 0, resid / jnp.maximum(tot, 1e-20), p)
+        hit = chosen >= 0
+        emit = jnp.where(hit, tokens[jnp.maximum(chosen, 0)],
+                         sample(resid, u_res[l]))
+        emitted.append(jnp.where(alive, emit, 0))
+        n_acc = n_acc + (alive & hit)
+        cur = jnp.where(hit, jnp.maximum(chosen, 0), cur)
+        path.append(cur)
+        alive = alive & hit
+    emitted.append(jnp.where(alive, sample(probs(t_logits[cur]), u_res[D]), 0))
+    return n_acc, jnp.stack(emitted), jnp.stack(path)
+
+
+def tree_accept_ref(rng, t_logits, q_logits, tokens, plan: TreePlan, *,
+                    temperature: float = 1.0):
+    """Sequential rejection-sampling oracle for ``tree_accept`` — same rng
+    stream (split + uniform draws of the same shapes), python control flow.
+    Returns (n_acc, emitted list of n_acc+1 ints)."""
+    r_acc, r_res = jax.random.split(rng)
+    u_acc = np.asarray(jax.random.uniform(r_acc, (plan.depth,
+                                                  max(plan.branching))))
+    u_res = np.asarray(jax.random.uniform(r_res, (plan.depth + 1,)))
+    t_logits = np.asarray(t_logits, np.float32)
+    q_logits = np.asarray(q_logits, np.float32)
+    tokens = np.asarray(tokens)
+    V = t_logits.shape[-1]
+
+    def probs(l):
+        if temperature == 0.0:
+            p = (l >= l.max()).astype(np.float32)
+            return p / p.sum()
+        z = np.exp((l - l.max()) / temperature)
+        return z / z.sum()
+
+    def sample(dist, u):
+        return min(int((np.cumsum(dist) < u).sum()), V - 1)
+
+    cur, n_acc, emitted = 0, 0, []
+    for l in range(plan.depth):
+        k = plan.branching[l]
+        child0 = plan.level_lo[l + 1] + (cur - plan.level_lo[l]) * k
+        p = probs(t_logits[cur])
+        chosen = None
+        q_total = np.zeros(V, np.float32)
+        for j in range(k):
+            c = child0 + j
+            q_c = probs(q_logits[c])
+            tok = int(tokens[c])
+            if u_acc[l, j] < min(1.0, p[tok] / max(q_c[tok], 1e-20)):
+                chosen = c
+                break
+            q_total = np.maximum(q_total, q_c)
+        if chosen is None:
+            resid = np.clip(p - q_total, 0.0, None)
+            resid = resid / resid.sum() if resid.sum() > 0 else p
+            emitted.append(sample(resid, u_res[l]))
+            return n_acc, emitted
+        emitted.append(int(tokens[chosen]))
+        n_acc += 1
+        cur = chosen
+    emitted.append(sample(probs(t_logits[cur]), u_res[plan.depth]))
+    return n_acc, emitted
+
+
 def build_tree(draft_model, draft_params, draft_cache, last_token: int,
                branching: Sequence[int], rng, temperature: float = 1.0):
     """Greedy top-k tree expansion (OPT-Tree style, static branching plan).

@@ -15,6 +15,7 @@ from repro.kernels.decode_attention import paged_decode_attention as _paged
 from repro.kernels.spec_verify import spec_verify as _verify
 from repro.kernels.spec_verify import spec_verify_batched as _verify_batched
 from repro.kernels.ssd_scan import ssd_chunk_scan as _ssd
+from repro.kernels.tree_attention import tree_verify_attention as _tree
 
 
 def on_cpu() -> bool:
@@ -36,6 +37,16 @@ def paged_decode_attention(q, k_pool, v_pool, table, length, *, window=0):
     the sliding-window variant (trailing-window blocks only)."""
     return _paged(q, k_pool, v_pool, table, length, window=window,
                   interpret=on_cpu())
+
+
+def tree_verify_attention(q, k, v, length, tree_mask, q_pos, *, window=0,
+                          bs=512):
+    """Tree-speculation verify attention: N node-queries per sequence over
+    cache prefix + packed ancestor mask (the tree K/V sit at
+    [length, length+N)).  The TPU half of ``extend_attention``'s
+    block-mask path."""
+    return _tree(q, k, v, length, tree_mask, q_pos, window=window, bs=bs,
+                 interpret=on_cpu())
 
 
 def spec_verify(rng, target_logits, draft_logits, draft_tokens, *,

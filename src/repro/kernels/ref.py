@@ -54,6 +54,37 @@ def paged_decode_attention_ref(q, k_pool, v_pool, table, length, *,
     return decode_attention_ref(q, kk, vv, length, window=window)
 
 
+def tree_verify_attention_ref(q, k, v, length, tree_mask, q_pos, *,
+                              window: int = 0):
+    """Oracle for the tree-verification kernel, and the CPU-CI fallback
+    behind ``layers.extend_attention``'s block-mask path.  q:
+    (B,Kv,G,N,hd); k,v: (B,Kv,S,hd); length: (B,) valid cache entries
+    BEFORE this call's N new tokens at [length, length+N); tree_mask:
+    (N,C) bool with C >= N — the mask's LAST N columns align with the new
+    tokens, earlier columns cover tree nodes already written at
+    [length-(C-N), length) by previous level extends (C == N is the
+    one-shot verify case where the whole tree arrives at once); q_pos:
+    (B,N) per-node positions (tree base + depth)."""
+    B, Kv, G, N, hd = q.shape
+    C = tree_mask.shape[1]
+    S = k.shape[2]
+    s = jnp.einsum("bkgnd,bksd->bkgns", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    base = length - (C - N)                                       # tree start
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    in_cache = k_pos[None, :] < base[:, None]                     # (B,S)
+    t = k_pos[None, :] - base[:, None]                            # (B,S)
+    in_tree = (t >= 0) & (t < C)
+    cols = jnp.moveaxis(tree_mask[:, jnp.clip(t, 0, C - 1)], 1, 0)  # (B,N,S)
+    mask = in_cache[:, None, :] | (in_tree[:, None, :] & cols)
+    if window:
+        mask = mask & (k_pos[None, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgns,bksd->bkgnd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def spec_verify_ref(rng, target_logits, draft_logits, draft_tokens, *,
                     temperature: float = 1.0):
     """Mirrors kernels.spec_verify exactly (same rng stream / tie-breaks)."""

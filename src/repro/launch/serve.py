@@ -42,6 +42,29 @@ overcommitted pool still completes every request.  The default sizes the
 pool to the dense worst case.  ``--kv-layout dense`` keeps the padded-slab
 layout as the parity oracle.
 
+Speculation lanes (batched scheduler): ``--spec-mode`` picks how a
+grouped speculative escalation drafts and verifies —
+
+* ``linear`` (default): the classic gamma-token draft tape; any edge/cloud
+  family pair, dense or paged group states.
+* ``tree``: each slot drafts a packed token TREE (``--spec-tree-width``
+  first-level branches, depth ``--gamma``) expanded top-k level-by-level,
+  and the cloud verifies ALL candidate branches in ONE tree-masked pass
+  (the Pallas tree-attention kernel on TPU) — the longest target-
+  consistent root path is accepted, so one verify can commit several
+  tokens down the most probable branch.  Dense-attention families only;
+  other families fall back to linear (see ``spec_mode`` in the stats).
+* ``self``: self-speculative — the EDGE model's early-exit prefix
+  (``--spec-exit-layer`` blocks, default half depth) drafts for its own
+  full-depth verify through the shared cache.  No second model, no cloud
+  verifier: traces carry ``cloud_passes=0``.
+
+All three lanes are lossless against their verifier (greedy outputs are
+bit-identical to decoding the verifier alone); the stats line reports
+``spec_accept_rate`` and ``accepted_tokens_per_step`` so the lanes can be
+compared on acceptance, and ``benchmarks/bench_serving.py --arm
+tree_spec`` quotes req/s across them.
+
 Open-loop traffic (batched scheduler): ``--arrival poisson|bursty`` stops
 pretending every request is already waiting at t=0 and instead submits
 them at sampled arrival times (``--arrival-rate`` req/s long-run average;
@@ -137,6 +160,19 @@ def main():
     ap.add_argument("--budget-tokens", type=float, default=8.0,
                     help="cloud tokens accrued per admitted request "
                          "(budget policy)")
+    ap.add_argument("--spec-mode", default=None,
+                    choices=["linear", "tree", "self"],
+                    help="speculation lane for grouped speculative "
+                         "escalations (batched scheduler): linear draft "
+                         "tape, packed token-tree verify, or "
+                         "self-speculative early-exit drafting; default: "
+                         "linear")
+    ap.add_argument("--spec-tree-width", type=int, default=None,
+                    help="first-level branches of the draft tree "
+                         "(--spec-mode tree); default 2")
+    ap.add_argument("--spec-exit-layer", type=int, default=None,
+                    help="draft exit layer (--spec-mode self); default: "
+                         "half the edge model's depth")
     ap.add_argument("--escalation", default=None,
                     choices=["speculative", "cloud", "skeleton"],
                     help="DEPRECATED: legacy mode name; use --policy")
@@ -221,6 +257,10 @@ def main():
     if args.mesh is not None and args.scheduler != "batched":
         raise SystemExit("--mesh needs --scheduler batched (the "
                          "per-request loop is single-device)")
+    if args.spec_mode not in (None, "linear") \
+            and args.scheduler != "batched":
+        raise SystemExit("--spec-mode tree/self needs --scheduler batched "
+                         "(the per-request loop only drafts linear tapes)")
     mesh = None
     if args.mesh is not None:
         from repro.launch.mesh import parse_mesh_arg
@@ -236,6 +276,9 @@ def main():
                             kv_blocks=args.kv_blocks,
                             slo_ms=args.slo_ms,
                             prefill_chunk=args.prefill_chunk,
+                            spec_mode=args.spec_mode,
+                            spec_tree_width=args.spec_tree_width,
+                            spec_exit_layer=args.spec_exit_layer,
                             mesh=mesh)
         t0 = time.perf_counter()
         if args.arrival != "none":
@@ -270,6 +313,18 @@ def main():
     print(f"policy: {stats['policy']} "
           + " ".join(f"{k.removeprefix('policy_')}={v}"
                      for k, v in stats.items() if k.startswith("policy_")))
+    if stats.get("spec_lanes") and any(
+            c["member_rounds"] for c in stats["spec_lanes"].values()):
+        print(f"spec: mode={stats['spec_mode']} "
+              f"accept_rate={stats['spec_accept_rate']:.2f} "
+              f"accepted_tokens_per_step="
+              f"{stats['accepted_tokens_per_step']:.2f} "
+              + " ".join(f"{m}[draft={c['draft_tokens']} "
+                         f"verify={c['verify_tokens']} "
+                         f"accepted={c['accepted_tokens']} "
+                         f"emitted={c['emitted_tokens']} "
+                         f"rounds={c['member_rounds']}]"
+                         for m, c in stats["spec_lanes"].items()))
     if "kv_peak_bytes" in stats:
         print(f"kv: layout={stats['kv_layout']} "
               f"peak={stats['kv_peak_bytes'] / 1e6:.2f}MB "

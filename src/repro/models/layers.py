@@ -341,9 +341,12 @@ def extend_attention(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0,
     """Multi-token cached decode (chunked prefill / speculative verify).
 
     x: (B,T,d); new k/v written into the cache at [pos, pos+T).  By default
-    intra-block attention is causal; ``block_mask`` (T,T) overrides it and
-    ``q_positions`` (T,) overrides the RoPE positions (token-tree
-    verification uses pos + node depth).
+    intra-block attention is causal; ``block_mask`` (T,C) with C >= T
+    overrides it — its LAST T columns align with the new tokens, earlier
+    columns cover tokens already in the cache at [pos-(C-T), pos) (token
+    trees drafted level by level; one-shot verification passes C == T) —
+    and ``q_positions`` (T,) overrides the RoPE positions (token-tree
+    nodes use tree base + node depth).
     Returns (out (B,T,d), new_k, new_v).
     """
     B, T, d = x.shape
@@ -363,9 +366,24 @@ def extend_attention(p, x, cache_k, cache_v, pos, cfg, *, window: int = 0,
     if block_mask is None:
         mask = k_pos[None, :] <= q_pos[:, None]                     # (T, Smax)
     else:
-        base = k_pos[None, :] < pos                                  # cached part
+        from repro.kernels import ops
+        if not ops.on_cpu():
+            # token-tree verify on TPU: the flash-decoding tree kernel
+            # streams the cache once instead of materializing the
+            # (T, Smax) mask; CPU keeps the jnp masked-mha path below
+            G = H // Kv
+            qh = jnp.transpose(q.reshape(B, T, Kv, G, hd), (0, 2, 3, 1, 4))
+            out = ops.tree_verify_attention(
+                qh, jnp.moveaxis(cache_k, 2, 1), jnp.moveaxis(cache_v, 2, 1),
+                jnp.broadcast_to(pos, (B,)), block_mask,
+                jnp.broadcast_to(q_pos, (B, T)), window=window)
+            out = jnp.transpose(out, (0, 3, 1, 2, 4)).astype(x.dtype)
+            return out.reshape(B, T, H * hd) @ p["wo"], cache_k, cache_v
+        off = block_mask.shape[1] - T            # tree nodes already cached
+        base = k_pos[None, :] < pos - off                            # cached part
         placed = jax.lax.dynamic_update_slice(
-            jnp.zeros((T, Smax), bool), block_mask.astype(bool), (0, pos))
+            jnp.zeros((T, Smax), bool), block_mask.astype(bool),
+            (0, pos - off))
         mask = base | placed
     if window:
         mask = mask & (k_pos[None, :] > q_pos[:, None] - window)

@@ -260,7 +260,9 @@ def prefill(params, tokens, cfg, *, max_seq: Optional[int] = None,
 def extend_step(params, tokens, cache, cfg, *, window: int = 0, block_mask=None,
                 q_positions=None):
     """Multi-token cached decode. tokens (B,T) -> (logits (B,T,V), cache).
-    ``block_mask`` (T,T) customizes intra-block attention; ``q_positions``
+    ``block_mask`` (T,C), C >= T, customizes intra-block attention (its
+    last T columns are the new tokens, earlier columns cover tree nodes
+    already in the cache — see layers.extend_attention); ``q_positions``
     overrides RoPE positions (token trees)."""
     h = L.embed(params["embed"], tokens).astype(_adt(cfg))
     pos = cache["pos"]

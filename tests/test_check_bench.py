@@ -42,6 +42,23 @@ def _rows():
             "bandit": {"req_s": 2.0, "cloud_token_share": 0.5,
                        "quality_proxy": 0.7},
             "bandit_adaptation": {"share_first": 0.9, "share_last": 0.2}},
+        "tree_spec": {
+            "noise_scale": 1e-3, "verify_budget": 16,
+            "tree_vs_chain_speedup": 1.4,
+            "lanes": {
+                "chain": {"req_s": 2.0, "accepted_tokens_per_step": 3.0,
+                          "accept_rate": 0.2, "rounds": 60,
+                          "spec_mode": "linear"},
+                "tree": {"req_s": 2.8, "accepted_tokens_per_step": 3.6,
+                         "accept_rate": 0.2, "rounds": 50,
+                         "spec_mode": "tree"},
+                "chain_depth4": {"req_s": 3.0,
+                                 "accepted_tokens_per_step": 2.7,
+                                 "accept_rate": 0.5, "rounds": 70,
+                                 "spec_mode": "linear"},
+                "self": {"req_s": 3.2, "accepted_tokens_per_step": 1.4,
+                         "accept_rate": 0.1, "rounds": 90,
+                         "spec_mode": "self"}}},
         "multi_device": {
             "mesh_shape": {"data": 2, "model": 4}, "mesh_devices": 8,
             "single_req_s": 2.0, "mesh_req_s": 1.5, "kv_shards": 8,
@@ -87,6 +104,13 @@ def test_multi_device_skip_fails_when_required():
     lambda r: r["policy"]["cascade"].__setitem__("cloud_token_share", 9.0),
     lambda r: r["policy"]["bandit_adaptation"].__setitem__(
         "share_last", 0.95),
+    lambda r: r["tree_spec"]["lanes"]["tree"].__setitem__(
+        "accepted_tokens_per_step", 0.9),
+    lambda r: r["tree_spec"].__setitem__("tree_vs_chain_speedup", 0.8),
+    lambda r: r["tree_spec"]["lanes"]["tree"].__setitem__("rounds", 99),
+    lambda r: r["tree_spec"]["lanes"]["self"].pop("req_s"),
+    lambda r: r["tree_spec"]["lanes"].pop("chain"),
+    lambda r: r.pop("tree_spec"),
     lambda r: r["multi_device"].__setitem__("token_parity", False),
     lambda r: r["multi_device"].__setitem__("kv_capacity_scale_x", 1.0),
     lambda r: r["multi_device"].__setitem__("kv_shards", 1),

@@ -42,6 +42,35 @@ def test_acceptance_bound_is_probability(seed, V):
 
 
 @_settings
+@given(st.integers(0, 10_000), st.sampled_from([(2, 1), (2, 3), (2, 4),
+                                                (3, 2), (4, 2)]),
+       st.integers(4, 24), st.sampled_from([0.0, 0.7, 1.0]))
+def test_tree_accept_matches_sequential_oracle(seed, shape, V, temperature):
+    """The vectorized packed-tree acceptance walk equals the sequential
+    python rejection-sampling oracle (same rng stream) for every tree
+    shape, vocab and temperature; the returned path is a root-anchored
+    ancestor chain."""
+    from repro.core.tree_speculation import (TreePlan, branching_for,
+                                             tree_accept, tree_accept_ref)
+    plan = TreePlan(branching_for(*shape))
+    rng = jax.random.PRNGKey(seed)
+    kt, kq, kk = jax.random.split(jax.random.fold_in(rng, 1), 3)
+    tl = jax.random.normal(kt, (plan.n_pad, V)) * 2
+    ql = jax.random.normal(kq, (plan.n_pad, V)) * 2
+    toks = jax.random.randint(kk, (plan.n_pad,), 0, V)
+    n, em, path = tree_accept(rng, tl, ql, toks, plan,
+                              temperature=temperature)
+    n_ref, em_ref = tree_accept_ref(rng, tl, ql, toks, plan,
+                                    temperature=temperature)
+    assert int(n) == n_ref
+    assert [int(x) for x in em[: int(n) + 1]] == em_ref
+    assert 0 <= int(n) <= plan.depth
+    assert int(path[0]) == 0
+    for d in range(1, int(n) + 1):
+        assert int(plan.parent[int(path[d])]) == int(path[d - 1])
+
+
+@_settings
 @given(st.integers(0, 1000), st.sampled_from([1, 2, 4, 8, 16]))
 def test_gla_chunk_size_invariance(seed, chunk):
     """The chunked GLA recurrence gives identical (un-stabilized) outputs

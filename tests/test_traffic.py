@@ -349,6 +349,25 @@ def test_pick_victim_most_steps_then_youngest():
     assert pick(me, st, slots, steps, wave=set()) == 0
 
 
+def test_pick_victim_cost_model_bytes_vs_steps():
+    """Paged states expose per-slot staged blocks (``pool.owned``): the
+    victim maximizes decode-steps-saved per block staged, so a slot that
+    would stage many blocks needs proportionally more remaining steps to
+    be picked.  Zero-staging slots and dense states (no ``pool``) reduce
+    to the raw most-steps ordering pinned above."""
+    pick = BatchedEngine._pick_victim
+    me, st, slots, steps = _victim_env([(0, 8), (1, 6), (2, 6)])
+    owned = {0: [0] * 7, 1: [0], 2: [0]}
+    st.pool = types.SimpleNamespace(owned=lambda b: owned[b])
+    # slot 0 leads on steps (8) but stages 7 blocks (score 8/8 = 1.0);
+    # slots 1/2 stage one block each (6/2 = 3.0) — the cheap swaps win,
+    # and their exact tie falls back to the youngest (largest) rid
+    assert pick(me, st, slots, steps, wave=set()) == 2
+    # equal staging -> same order as the dense tie-break
+    owned = {b: [0] for b in range(3)}
+    assert pick(me, st, slots, steps, wave=set()) == 0
+
+
 # ---------------------------------------------------------------- property
 @pytest.fixture(scope="module")
 def mono_engine(pair):

@@ -1,11 +1,18 @@
-"""Token-tree speculation (§2.4.4) and self-speculative decoding (§2.4.2)."""
+"""Token-tree speculation (§2.4.4) and self-speculative decoding (§2.4.2):
+the per-request seed decoders, the packed ``TreePlan`` the batched lanes
+run on, and the ``BatchedEngine`` speculation-lane wiring
+(``SpeculativePolicy(mode=...)`` -> ``BatchedSpecDecoder`` mode)."""
 import jax
 import pytest
 
 from repro.configs import get_config
+from repro.core.policy import SpeculativePolicy
+from repro.core.scheduler import BatchedEngine
 from repro.core.self_speculative import SelfSpecDecoder
-from repro.core.speculative import autoregressive_baseline
-from repro.core.tree_speculation import TokenTree, TreeSpecDecoder
+from repro.core.speculative import BatchedSpecDecoder, autoregressive_baseline
+from repro.core.tree_speculation import (TokenTree, TreePlan, TreeSpecDecoder,
+                                         branching_for, tree_accept,
+                                         tree_accept_ref)
 import numpy as np
 
 from repro.models import Model
@@ -58,3 +65,142 @@ def test_self_spec_greedy_lossless(small, gamma):
     toks, stats = dec.generate(params, prompt, 12)
     assert toks == base
     assert stats.target_passes == stats.rounds
+
+
+# ---------------------------------------------------------------- TreePlan
+@pytest.mark.parametrize("width,gamma", [(2, 1), (2, 4), (3, 3), (4, 2)])
+def test_tree_plan_matches_seed_token_tree(width, gamma):
+    """The packed static plan reproduces the seed ``TokenTree``'s ancestor
+    mask and depths exactly over the real (un-padded) nodes."""
+    plan = TreePlan(branching_for(width, gamma))
+    tree = TokenTree(np.zeros(plan.n, np.int32),
+                     np.asarray(plan.parent[:plan.n], np.int32),
+                     np.zeros((plan.n, 4), np.float32))
+    assert np.array_equal(np.asarray(plan.mask)[:plan.n, :plan.n],
+                          tree.attention_mask())
+    assert np.array_equal(np.asarray(plan.depths)[:plan.n], tree.depths())
+
+
+@pytest.mark.parametrize("width,gamma", [(2, 1), (2, 4), (3, 3), (4, 2)])
+def test_tree_plan_invariants(width, gamma):
+    plan = TreePlan(branching_for(width, gamma))
+    assert plan.depth == gamma
+    assert plan.n_pad >= plan.n and plan.n_pad & (plan.n_pad - 1) == 0
+    # levels are contiguous and every child's parent sits one level up
+    prev = (0, 1)
+    for lo, hi in plan.levels:
+        assert lo == prev[1]
+        for c in range(lo, hi):
+            assert prev[0] <= plan.parent[c] < prev[1]
+        prev = (lo, hi)
+    assert prev[1] == plan.n
+    # pad nodes: parentless, depth 0, self-only mask rows (never attended)
+    for i in range(plan.n, plan.n_pad):
+        assert plan.parent[i] == -1 and plan.depths[i] == 0
+        row = np.asarray(plan.mask)[i]
+        assert row[i] and row.sum() == 1
+
+
+@pytest.mark.parametrize("temperature", [0.0, 1.0])
+def test_tree_accept_matches_sequential_oracle(temperature):
+    plan = TreePlan(branching_for(2, 4))
+    V = 12
+    for seed in range(8):
+        rng = jax.random.PRNGKey(seed)
+        kt, kq, kk = jax.random.split(jax.random.fold_in(rng, 1), 3)
+        tl = jax.random.normal(kt, (plan.n_pad, V)) * 2
+        ql = jax.random.normal(kq, (plan.n_pad, V)) * 2
+        toks = jax.random.randint(kk, (plan.n_pad,), 0, V)
+        n, em, path = tree_accept(rng, tl, ql, toks, plan,
+                                  temperature=temperature)
+        n_ref, em_ref = tree_accept_ref(rng, tl, ql, toks, plan,
+                                        temperature=temperature)
+        assert int(n) == n_ref
+        assert [int(x) for x in em[:int(n) + 1]] == em_ref
+        # path is a root-anchored ancestor chain over real nodes
+        assert int(path[0]) == 0
+        for d in range(1, int(n) + 1):
+            assert int(plan.parent[int(path[d])]) == int(path[d - 1])
+
+
+# ------------------------------------------------------- batched engine lanes
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, specs):
+    return [((np.arange(n) * 7 + off) % vocab).astype(np.int32)
+            for n, off in specs]
+
+
+@pytest.mark.slow
+def test_batched_tree_lane_matches_linear_and_baseline(pair):
+    """The tree lane is exact: greedy output token-identical to both the
+    linear lane and cloud-only greedy decode, with multi-token acceptance
+    visible in the stats."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3), (10, 5)])
+    outs = {}
+    for mode in ("linear", "tree"):
+        be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                           policy=SpeculativePolicy(-1.0, mode=mode),
+                           use_cache=False)
+        outs[mode] = be.serve_batch(ep, cp, prompts, 8)
+        st = be.stats()
+        assert st["spec_mode"] == mode
+        assert st["accepted_tokens_per_step"] > 0
+        assert set(st["spec_lanes"][mode]) == {
+            "member_rounds", "draft_tokens", "verify_tokens",
+            "accepted_tokens", "emitted_tokens"}
+    for p, lt, tt in zip(prompts, outs["linear"], outs["tree"]):
+        base = autoregressive_baseline(cloud, cp, p, 8, temperature=0.0)
+        assert tt.tokens == lt.tokens == base
+        assert tt.path == "speculative"
+
+
+@pytest.mark.slow
+def test_batched_self_lane_zero_second_model(pair):
+    """mode="self": the edge's own early-exit head drafts, its full depth
+    verifies — zero second-model params, zero cloud passes, and the
+    output equals plain edge greedy decode."""
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, [(8, 0), (6, 3)])
+    be = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                       policy=SpeculativePolicy(-1.0, mode="self"),
+                       use_cache=False)
+    assert be.spec.second_model_params == 0
+    bts = be.serve_batch(ep, cp, prompts, 8)
+    for p, bt in zip(prompts, bts):
+        base = autoregressive_baseline(edge, ep, p, 8, temperature=0.0)
+        assert bt.tokens == base
+        assert bt.cloud_passes == 0
+    assert be.stats()["spec_mode"] == "self"
+
+
+def test_mode_fallback_and_validation(pair):
+    """Unknown modes raise everywhere the mode enters; unsupported
+    families downgrade to the linear lane and report it."""
+    edge, ep, cloud, cp = pair
+    with pytest.raises(ValueError, match="speculation mode"):
+        SpeculativePolicy(-1.0, mode="bogus")
+    with pytest.raises(ValueError, match="speculation mode"):
+        BatchedSpecDecoder(edge, cloud, mode="bogus")
+    with pytest.raises(ValueError, match="mode"):
+        BatchedEngine(edge, cloud, batch_size=2, spec_mode="bogus")
+    with pytest.raises(ValueError, match="exit_layer"):
+        BatchedSpecDecoder(edge, edge, mode="self", exit_layer=99)
+    # recurrent drafts can't run block-masked tree extends -> linear
+    r_cfg = get_config("mamba2-370m").reduced().replace(
+        vocab_size=edge.cfg.vocab_size)
+    rec = Model(r_cfg)
+    be = BatchedEngine(rec, cloud, batch_size=2, temperature=0.0,
+                       policy=SpeculativePolicy(-1.0, mode="tree"),
+                       use_cache=False)
+    assert be.spec_mode == "linear"
+    assert be.stats()["spec_mode"] == "linear"
