@@ -64,6 +64,13 @@ token-identical to the greedy non-speculative baseline; the tree must
 retire the stream in no more verify rounds — and at least the req/s — of
 the matched-budget chain, with accepted-tokens-per-step > 1.5.
 
+The COMPILE-STABILITY arm re-serves an identical drain through a warmed
+engine under ``jax.log_compiles``: the cold drain's compile count is
+reported as ``decode_compiles``, and the steady-state drain must trigger
+ZERO further compilations (``steady_state_recompiles == 0``) — the
+runtime complement of repro-lint's static recompile-hazard rule (R2),
+gated by ``scripts/check_bench.py``.
+
 The RECURRENT arm runs mixed-family speculative escalation — mamba2 (ssm)
 and zamba2 (hybrid) drafts against a granite (transformer) cloud — where
 the batched scheduler's rewind is a replayed state select
@@ -592,6 +599,46 @@ def _tree_spec(edge, ep, cloud, cp, csv, rows):
         f"tree lane slower than the matched-budget chain: {tr} vs {ch}"
 
 
+def _compile_stability(edge, ep, cloud, cp, csv, rows):
+    """COMPILE-STABILITY arm: the runtime complement of repro-lint's static
+    R2 rule.  Two identical drains through ONE engine under
+    ``jax.log_compiles`` (``repro.analysis.compile_guard.CompileCounter``):
+    the first (cold) drain is allowed to compile — that count is reported
+    as ``decode_compiles``, the size of the steady compile set — but the
+    second drain re-serves the SAME shapes through the SAME engine, so any
+    compilation it triggers is a recompile leaking into steady state
+    (a traced-value branch, an unhashable static, an unbucketed shape).
+    ``steady_state_recompiles`` must be 0; the offending jit names are
+    carried in ``recompile_events`` so a regression names its culprit.
+    Every request escalates (threshold -1) so the speculative group path
+    compiles too, and token parity across the two drains is asserted."""
+    from repro.analysis.compile_guard import CompileCounter
+
+    synth = SyntheticLM(edge.cfg.vocab_size)
+    rng = np.random.default_rng(10)
+    prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+               for i in range(REQUESTS)]
+    eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
+                        policy=SpeculativePolicy(-1.0), use_cache=False)
+    with CompileCounter() as cold:
+        tr_cold = eng.serve_batch(ep, cp, prompts, MAX_NEW)
+    with CompileCounter() as steady:
+        tr_steady = eng.serve_batch(ep, cp, prompts, MAX_NEW)
+    assert all(a.tokens == b.tokens for a, b in zip(tr_cold, tr_steady)), \
+        "steady-state drain diverged from the cold drain"
+    rows["compile_stability"] = {
+        "decode_compiles": cold.count,
+        "steady_state_recompiles": steady.count,
+        "recompile_events": steady.events,
+    }
+    csv(f"compile_stability,decode_compiles,{cold.count}")
+    csv(f"compile_stability,steady_state_recompiles,{steady.count}")
+    assert cold.count > 0, \
+        "log_compiles saw no cold-drain compilation (counter broken?)"
+    assert steady.count == 0, \
+        f"steady-state recompiles: {steady.events}"
+
+
 def _multi_device(edge, ep, cloud, cp, csv, rows):
     """SHARDED-SERVING arm: the batched scheduler on a simulated (2, 4)
     host mesh — cloud verifier tensor-parallel over 'model', edge drafts
@@ -664,6 +711,7 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
         _recurrent_mix(cloud, cp, csv, rows)
         _policies(edge, ep, cloud, cp, csv, rows)
         _tree_spec(edge, ep, cloud, cp, csv, rows)
+        _compile_stability(edge, ep, cloud, cp, csv, rows)
         _multi_device(edge, ep, cloud, cp, csv, rows)
     finally:
         REQUESTS, MAX_NEW, BATCH = saved

@@ -91,6 +91,15 @@ def check(rows: dict, *, require_multi_device: bool = False, out=print) -> None:
         f"chain ({lanes['tree']['rounds']} vs {lanes['chain']['rounds']} "
         "rounds)")
 
+    cs = rows["compile_stability"]
+    # the cold drain must have compiled SOMETHING (a zero here means the
+    # log_compiles counter never saw the decode path — a broken probe, not
+    # a fast one) and the warmed identical-shape drain must compile NOTHING
+    assert cs["decode_compiles"] > 0, cs
+    assert cs["steady_state_recompiles"] == 0, cs
+    out(f"compile stability: {cs['decode_compiles']} cold compiles, "
+        f"{cs['steady_state_recompiles']} steady-state recompiles")
+
     md = rows["multi_device"]
     if "skipped" in md:
         msg = f"multi_device arm was skipped: {md['skipped']}"

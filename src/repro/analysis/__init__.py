@@ -1,0 +1,25 @@
+"""repro-lint: static analysis enforcing the repo's serving invariants.
+
+Rules (see ``scripts/repro_lint.py --help`` and the per-rule docs):
+
+* **R1** — no host syncs inside ``@hot_path`` functions.
+* **R2** — no recompile hazards in jitted code.
+* **R3** — Pallas kernel hygiene (pure index maps, side-effect-free
+  bodies, ref.py oracle + interpret dispatch).
+* **R4** — protocol conformance and scheduler layout/family purity.
+* **R0** — suppression markers must carry a reason.
+
+This package deliberately avoids importing ``jax`` at top level so that
+production modules can import ``hot_path`` for free; the runtime
+compile counter lives in ``repro.analysis.compile_guard``.
+"""
+from repro.analysis.core import (Finding, RULE_DOCS, RULES, analyze_file,
+                                 analyze_paths, analyze_source)
+from repro.analysis.markers import hot_path
+
+# importing the rule modules populates the registry
+from repro.analysis import protocol as _protocol  # noqa: F401
+from repro.analysis import rules as _rules  # noqa: F401
+
+__all__ = ["Finding", "RULES", "RULE_DOCS", "analyze_file", "analyze_paths",
+           "analyze_source", "hot_path"]

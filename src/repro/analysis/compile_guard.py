@@ -1,0 +1,65 @@
+"""Runtime complement to the static pass: a compile counter built on
+``jax.log_compiles``.
+
+``CompileCounter`` is a context manager that turns on JAX's
+compile-event logging and counts every "Compiling ..." record emitted
+under the ``jax`` logger hierarchy while it is active.  The serving
+invariant it enforces: warm-up ticks may compile (``count > 0``), but
+the steady-state decode loop must not (``reset()`` then drive identical-
+shape ticks and assert ``count == 0``) — one silent retrace inside the
+tick loop corrupts every latency number the bench asserts.
+
+Used by the ``compile_counter`` pytest fixture (``tests/conftest.py``)
+and by the ``compile_stability`` arm of ``benchmarks/bench_serving.py``
+(the ``decode_compiles`` / ``steady_state_recompiles`` fields of
+``BENCH_serving.json``).
+"""
+from __future__ import annotations
+
+import logging
+from typing import List
+
+
+class CompileCounter(logging.Handler):
+    """Count XLA compilations while the context is active.
+
+    >>> with CompileCounter() as cc:
+    ...     warm_up()          # compiles: cc.count > 0
+    ...     cc.reset()
+    ...     steady_state()     # must not: cc.count == 0
+    """
+
+    _MARKER = "Compiling "
+
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.events: List[str] = []
+        self._log_ctx = None
+
+    @property
+    def count(self) -> int:
+        return len(self.events)
+
+    def reset(self):
+        self.events = []
+
+    # ----------------------------------------------------- logging.Handler
+    def emit(self, record: logging.LogRecord):
+        msg = record.getMessage()
+        if msg.startswith(self._MARKER):
+            self.events.append(msg.split(" with ")[0])
+
+    # ---------------------------------------------------- context manager
+    def __enter__(self) -> "CompileCounter":
+        import jax
+
+        self._log_ctx = jax.log_compiles()
+        self._log_ctx.__enter__()
+        logging.getLogger("jax").addHandler(self)
+        return self
+
+    def __exit__(self, *exc):
+        logging.getLogger("jax").removeHandler(self)
+        ctx, self._log_ctx = self._log_ctx, None
+        ctx.__exit__(*exc)
+        return False

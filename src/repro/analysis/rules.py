@@ -1,0 +1,327 @@
+"""repro-lint rules R1-R3: hot-path purity, recompile hazards, Pallas
+kernel hygiene.  R4 (protocol conformance) lives in ``protocol.py``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set
+
+from repro.analysis.core import Finding, ModuleContext, _name_is, rule
+
+# attributes of a traced value that are static under trace — branching on
+# them never retraces
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "nbytes",
+                "itemsize", "weak_type"}
+# call roots allowed inside a BlockSpec index map: trace-safe arithmetic
+INDEX_MAP_ROOTS = {"jnp", "jax", "lax", "pl", "pltpu", "min", "max", "abs",
+                   "divmod", "int", "sum", "len", "functools", "partial"}
+
+
+# ------------------------------------------------------------------- R1
+@rule("R1", "no host syncs on the hot path: `.item()`, `np.asarray` on "
+            "device values, `float()`/`int()` on device scalars, "
+            "`device_get`/`block_until_ready` inside @hot_path functions")
+def check_host_sync(ctx: ModuleContext) -> Iterable[Finding]:
+    if not ctx.hot_functions:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not ctx.in_hot_function(node):
+            continue
+        msg = _host_sync_message(node)
+        if msg:
+            yield Finding(ctx.path, node.lineno, node.col_offset, "R1", msg)
+
+
+def _host_sync_message(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        if fn.attr == "item" and not call.args:
+            return "`.item()` forces a device->host sync"
+        if fn.attr == "block_until_ready":
+            return "`.block_until_ready()` stalls the dispatch pipeline"
+        if (fn.attr == "asarray" and isinstance(fn.value, ast.Name)
+                and fn.value.id in ("np", "numpy")):
+            return ("`np.asarray(...)` on a device value is an implicit "
+                    "device->host sync; batch it into one explicit "
+                    "`jax.device_get` per wave (use `np.array` for "
+                    "host-list conversions)")
+        if (fn.attr in ("device_get", "block_until_ready")
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "jax"):
+            return (f"`jax.{fn.attr}` syncs host and device — allowed only "
+                    "as the single batched pull per wave (suppress with a "
+                    "reason)")
+    elif isinstance(fn, ast.Name):
+        if fn.id == "device_get":
+            return ("`device_get` syncs host and device — allowed only as "
+                    "the single batched pull per wave (suppress with a "
+                    "reason)")
+        if fn.id in ("float", "int", "bool") and len(call.args) == 1:
+            arg = call.args[0]
+            if isinstance(arg, ast.Call) and _host_sync_message(arg):
+                return (f"`{fn.id}(...)` over a syncing call — double "
+                        "host pull")
+            if isinstance(arg, ast.Call) and isinstance(
+                    arg.func, ast.Attribute) and arg.func.attr in (
+                    "sum", "mean", "max", "min", "argmax", "argmin"):
+                return (f"`{fn.id}(array.{arg.func.attr}())` pulls a "
+                        "device scalar to host")
+    return None
+
+
+# ------------------------------------------------------------------- R2
+@rule("R2", "no recompile hazards in jitted code: Python branching or "
+            "f-strings on traced params, unhashable static args at jit "
+            "call sites, shape-dependent Python loops")
+def check_recompile_hazards(ctx: ModuleContext) -> Iterable[Finding]:
+    for fn, _ in ctx.jit_static.items():
+        traced = ctx.traced_params(fn)
+        if not traced:
+            continue
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            yield from _scan_traced_use(ctx, stmt, traced, fn)
+    yield from _check_static_call_sites(ctx)
+
+
+def _scan_traced_use(ctx: ModuleContext, root: ast.AST, traced: Set[str],
+                     fn: ast.AST) -> Iterable[Finding]:
+    # nested defs (scan bodies, vmapped closures) are traced too, so the
+    # walk descends into them; shadowed names can in principle false-
+    # positive, which is what the suppression markers are for
+    for node in ast.walk(root):
+        if isinstance(node, (ast.If, ast.While)):
+            name = _traced_ref(node.test, traced)
+            if name:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, "R2",
+                    f"Python `{kind}` on traced param `{name}` retraces "
+                    "per value — use `jnp.where`/`lax.cond` or mark the "
+                    "param static")
+        elif isinstance(node, ast.IfExp):
+            name = _traced_ref(node.test, traced)
+            if name:
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, "R2",
+                    f"conditional expression on traced param `{name}` "
+                    "retraces per value — use `jnp.where`")
+        elif isinstance(node, ast.JoinedStr):
+            for val in node.values:
+                if isinstance(val, ast.FormattedValue):
+                    name = _traced_ref(val.value, traced)
+                    if name:
+                        yield Finding(
+                            ctx.path, node.lineno, node.col_offset, "R2",
+                            f"f-string formats traced param `{name}` — "
+                            "forces a trace-time value read")
+        elif isinstance(node, ast.For):
+            name = _loop_over_traced(node.iter, traced)
+            if name:
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, "R2",
+                    f"Python loop over traced param `{name}` unrolls "
+                    "per value — use `lax.scan`/`lax.fori_loop`")
+
+
+def _traced_ref(expr: ast.AST, traced: Set[str]) -> Optional[str]:
+    """Name of a traced param whose VALUE the expression depends on, or
+    None.  References through static attributes (``x.shape``...), through
+    ``len(x)``/``isinstance(x, ...)`` and identity tests (``x is None``)
+    are static under trace and excluded."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return None
+        if not isinstance(node, ast.Name) or node.id not in traced:
+            continue
+        parent = getattr(node, "_rl_parent", None)
+        if (isinstance(parent, ast.Attribute) and parent.value is node
+                and parent.attr in STATIC_ATTRS):
+            continue
+        if (isinstance(parent, ast.Call) and node in parent.args
+                and isinstance(parent.func, ast.Name)
+                and parent.func.id in ("len", "isinstance", "type")):
+            continue
+        return node.id
+    return None
+
+
+def _loop_over_traced(it: ast.AST, traced: Set[str]) -> Optional[str]:
+    if isinstance(it, ast.Call) and _name_is(it.func, "range"):
+        for arg in it.args:
+            name = _traced_ref(arg, traced)
+            if name:
+                return name
+        return None
+    if isinstance(it, ast.Name) and it.id in traced:
+        return it.id
+    return None
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+def _check_static_call_sites(ctx: ModuleContext) -> Iterable[Finding]:
+    if not ctx.jit_aliases:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        statics = ctx.jit_aliases.get(name)
+        if not statics:
+            continue
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(kw.value, _UNHASHABLE):
+                yield Finding(
+                    ctx.path, node.lineno, node.col_offset, "R2",
+                    f"unhashable value for static arg `{kw.arg}` of jitted "
+                    f"`{name}` — every call raises or retraces; pass a "
+                    "tuple/scalar")
+
+
+# ------------------------------------------------------------------- R3
+@rule("R3", "Pallas hygiene: pure BlockSpec index maps, side-effect-free "
+            "kernel bodies, and a `ref.py` oracle + interpret-mode "
+            "dispatch for every kernel entry point")
+def check_pallas(ctx: ModuleContext) -> Iterable[Finding]:
+    if "pallas" not in ctx.source:
+        return
+    defs_by_name: Dict[str, List[ast.FunctionDef]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    kernel_names: Set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _name_is(node.func, "BlockSpec"):
+            yield from _check_index_map(ctx, node, defs_by_name)
+        elif _name_is(node.func, "pallas_call") and node.args:
+            kname = _callable_name(node.args[0])
+            if kname:
+                kernel_names.add(kname)
+                for kdef in defs_by_name.get(kname, []):
+                    yield from _check_kernel_body(ctx, kdef)
+    if kernel_names:
+        yield from _check_oracle_and_interpret(ctx)
+
+
+def _callable_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if (isinstance(node, ast.Call) and _name_is(node.func, "partial")
+            and node.args and isinstance(node.args[0], ast.Name)):
+        return node.args[0].id
+    return None
+
+
+def _check_index_map(ctx: ModuleContext, call: ast.Call,
+                     defs_by_name) -> Iterable[Finding]:
+    imap: Optional[ast.AST] = None
+    if len(call.args) >= 2:
+        imap = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            imap = kw.value
+    if imap is None:
+        return
+    body: List[ast.AST]
+    if isinstance(imap, ast.Lambda):
+        body = [imap.body]
+    elif isinstance(imap, ast.Name):
+        defs = defs_by_name.get(imap.id, [])
+        if not defs:
+            return
+        body = defs[0].body
+    else:
+        return
+    for stmt in body:
+        for node in ast.walk(stmt):
+            bad = _index_map_impurity(node)
+            if bad:
+                yield Finding(ctx.path, node.lineno, node.col_offset, "R3",
+                              f"BlockSpec index map must be a pure function "
+                              f"of grid indices: {bad}")
+
+
+def _index_map_impurity(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Call):
+        root = node.func
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        if isinstance(root, ast.Name) and root.id not in INDEX_MAP_ROOTS:
+            return f"calls `{ast.unparse(node.func)}`"
+    if isinstance(node, (ast.Global, ast.Nonlocal)):
+        return "rebinds an outer name"
+    if isinstance(node, (ast.Assign, ast.AugAssign)):
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for t in targets:
+            if isinstance(t, (ast.Attribute, ast.Subscript)):
+                return "writes through an attribute/subscript"
+    return None
+
+
+def _check_kernel_body(ctx: ModuleContext,
+                       kdef: ast.FunctionDef) -> Iterable[Finding]:
+    for node in ast.walk(kdef):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            yield Finding(ctx.path, node.lineno, node.col_offset, "R3",
+                          "kernel body rebinds an outer name — Pallas "
+                          "kernels must be side-effect-free")
+        elif (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id in ("print", "open", "input")):
+            yield Finding(ctx.path, node.lineno, node.col_offset, "R3",
+                          f"kernel body calls `{node.func.id}` — Python "
+                          "side effects don't exist on device and break "
+                          "interpret-mode parity")
+
+
+def _check_oracle_and_interpret(ctx: ModuleContext) -> Iterable[Finding]:
+    """Every public entry point wrapping a `pallas_call` needs an
+    `interpret` kwarg (CPU/CI dispatch) and a `<name>_ref` oracle in the
+    sibling `ref.py`."""
+    ref_names = _ref_oracle_names(Path(ctx.path).parent)
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name.startswith("_"):
+            continue
+        if not any(isinstance(n, ast.Call)
+                   and _name_is(n.func, "pallas_call")
+                   for n in ast.walk(node)):
+            continue
+        params = {a.arg for a in node.args.args + node.args.kwonlyargs}
+        if "interpret" not in params:
+            yield Finding(ctx.path, node.lineno, node.col_offset, "R3",
+                          f"kernel entry `{node.name}` has no `interpret` "
+                          "parameter — CPU CI cannot dispatch it")
+        if f"{node.name}_ref" not in (ref_names or set()):
+            where = ("ref.py" if ref_names is not None
+                     else "a sibling ref.py (missing)")
+            yield Finding(ctx.path, node.lineno, node.col_offset, "R3",
+                          f"kernel entry `{node.name}` has no "
+                          f"`{node.name}_ref` oracle in {where}")
+
+
+_REF_CACHE: Dict[str, Optional[Set[str]]] = {}
+
+
+def _ref_oracle_names(directory: Path) -> Optional[Set[str]]:
+    key = str(directory)
+    if key not in _REF_CACHE:
+        ref = directory / "ref.py"
+        if not ref.is_file():
+            _REF_CACHE[key] = None
+        else:
+            tree = ast.parse(ref.read_text())
+            _REF_CACHE[key] = {n.name for n in tree.body
+                               if isinstance(n, ast.FunctionDef)}
+    return _REF_CACHE[key]

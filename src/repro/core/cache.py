@@ -75,8 +75,12 @@ class SemanticCache:
 
 
 def embed_tokens_mean(model, params, tokens) -> np.ndarray:
-    """Cheap request embedding: mean of the model's token embeddings."""
+    """Cheap request embedding: mean of the model's token embeddings.
+    The pull to host is explicit (``device_get``) — the cache index
+    lives host-side, and an implicit transfer here would trip the
+    transfer-guard tier-1 test."""
+    import jax
     import jax.numpy as jnp
     emb = params["embed"]
     v = jnp.mean(jnp.take(emb, jnp.asarray(tokens, jnp.int32), axis=0), axis=-2)
-    return np.asarray(v, np.float32)
+    return np.array(jax.device_get(v), np.float32)

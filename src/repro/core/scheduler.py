@@ -90,6 +90,17 @@ tokens) but executes them slot-based and batched:
     recurrent layouts — EVERY family pair, mixed ones included (e.g. mamba2
     draft -> granite verify), runs the same grouped batched escalation.
 
+Serving invariants here are pinned mechanically by ``repro-lint``
+(``scripts/repro_lint.py``): the tick loop and escalation groups are
+``@hot_path`` — ONE batched ``jax.device_get`` per tick/wave is the
+only host readback (rule R1, enforced at runtime by the transfer-guard
+tier-1 test); steady-state ticks never retrace (rule R2 + the
+``compile_stability`` bench arm); and the scheduler knows nothing about
+concrete KV layouts or model families — zero ``isinstance``/attribute
+probes against them (rule R4: layout queries go through the
+``SequenceState`` protocol, e.g. ``owned_blocks``, and layout dispatch
+through ``Lane``, e.g. ``dense_side``).
+
 Remaining gaps (see ROADMAP "Serving architecture"): scheduling is
 single-host/single-device.
 """
@@ -103,6 +114,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.cache import SemanticCache, embed_tokens_mean
 from repro.core.policy import (ACTIONS, LANES, cloud_tokens, resolve_policy,
                                trace_quality)
@@ -298,19 +310,14 @@ class BatchedEngine:
         # tree/self SpecOps always run dense per-slot caches (block-masked
         # extends are a dense-layout feature), so their escalation groups
         # build DENSE side states even when the serving lanes are paged.
-        # Linear groups keep using the serving lanes — byte-identical
-        if mode == "linear" or self.edge.layout == "dense":
-            self._spec_edge = self.edge
-        else:
-            self._spec_edge = Lane(edge_model, estimator, temperature,
-                                   layout="dense", block_size=kv_block_size,
-                                   mesh=mesh, data_shards=self._data_shards)
-        if mode != "tree" or self.cloud.layout == "dense":
-            self._spec_cloud = self.cloud
-        else:
-            self._spec_cloud = Lane(cloud_model, estimator, temperature,
-                                    layout="dense", block_size=kv_block_size,
-                                    mesh=mesh)
+        # Linear groups keep using the serving lanes — byte-identical.
+        # Lane.dense_side() owns the layout decision (rule R4: the
+        # scheduler never compares `.layout`); it is identity on lanes
+        # that are already dense.
+        self._spec_edge = self.edge if mode == "linear" \
+            else self.edge.dense_side()
+        self._spec_cloud = self.cloud.dense_side() if mode == "tree" \
+            else self.cloud
         self._queue: collections.deque = collections.deque()
         self._next_rid = 0
         # intra-batch dedup: in-flight leaders and their coalesced followers
@@ -382,6 +389,7 @@ class BatchedEngine:
                                         for k, v in self.mesh.shape.items()}
         return res
 
+    @hot_path
     def _run_impl(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
         if not self._queue:
             return {}
@@ -407,6 +415,14 @@ class BatchedEngine:
         tok = jnp.zeros((B, 1, 1), jnp.int32)
         steps = jnp.zeros((B,), jnp.int32)
         unc = jnp.zeros((B,), jnp.float32)
+        # host mirrors of tok/steps/unc, exact between ticks: every device
+        # update is either host-originated (admit/finalize/swap, mirrored
+        # below) or covered by the ONE batched device_get after each tick —
+        # so admission, victim picking and swap-out never touch the device
+        # (rule R1: zero per-slot host syncs on the hot path)
+        tok_h = np.zeros((B,), np.int32)
+        steps_h = np.zeros((B,), np.int32)
+        unc_h = np.zeros((B,), np.float32)
         slots = [_Slot() for _ in range(B)]
         rng = jax.random.PRNGKey(self.seed)
         results: Dict[int, RequestTrace] = {}
@@ -440,6 +456,8 @@ class BatchedEngine:
                 tok = tok.at[b, 0, 0].set(h["tok"])
                 steps = steps.at[b].set(h["steps"])
                 unc = unc.at[b].set(h["unc"])
+                tok_h[b], steps_h[b], unc_h[b] = \
+                    h["tok"], h["steps"], h["unc"]
             # ---- admit queued requests into free slots (batched cache
             # probe).  A stalled swap-in blocks NEW admissions entirely:
             # the victim predates every queued request, so letting
@@ -579,21 +597,26 @@ class BatchedEngine:
                             # pool full: preempt-by-swap — swap out the
                             # victim holding its reservation longest,
                             # retry until admitted or out of victims
-                            v = self._pick_victim(state, slots, steps,
+                            v = self._pick_victim(state, slots, steps_h,
                                                   wave)
                             if v is None:
                                 break
                             vreq = slots[v].req
+                            # the victim's decode scalars come from the
+                            # host mirrors — swap-out costs zero extra
+                            # device syncs (the blocks themselves move
+                            # via state.swap_out's one batched pull)
                             self._swapped[vreq.rid] = {
                                 "kv": state.swap_out(v),
                                 "slot": slots[v],
-                                "tok": int(np.asarray(tok[v, 0, 0])),
-                                "steps": int(np.asarray(steps[v])),
-                                "unc": float(np.asarray(unc[v])),
+                                "tok": int(tok_h[v]),
+                                "steps": int(steps_h[v]),
+                                "unc": float(unc_h[v]),
                             }
                             self._events[vreq.rid]["swaps"] += 1
                             slots[v] = _Slot()
                             steps = steps.at[v].set(0)
+                            steps_h[v] = 0
                             free.append(v)
                             self._preempts += 1
                             ok = admit(b, r.prompt, need)
@@ -630,6 +653,9 @@ class BatchedEngine:
                     tok = tok.at[idx].set(jnp.asarray(lasts, jnp.int32))
                     steps = steps.at[idx].set(jnp.asarray(news, jnp.int32))
                     unc = unc.at[idx].set(0.0)
+                    tok_h[bs] = [l[0][0] for l in lasts]
+                    steps_h[bs] = news
+                    unc_h[bs] = 0.0
 
             if cloud_wave:
                 # cloud-assigned lane: one grouped batched cloud generation
@@ -662,6 +688,9 @@ class BatchedEngine:
                     tok = tok.at[b, 0, 0].set(int(r.prompt[-1]))
                     steps = steps.at[b].set(r.max_new)
                     unc = unc.at[b].set(0.0)
+                    tok_h[b] = int(r.prompt[-1])
+                    steps_h[b] = r.max_new
+                    unc_h[b] = 0.0
 
             occupied = [b for b in range(B) if slots[b].req is not None]
             if not occupied:
@@ -685,8 +714,9 @@ class BatchedEngine:
 
             # ---- one batched decode tick (pow2-bucketed step count: the
             # scan recompiles per static n_steps, so bucketing bounds the
-            # compile set; overshoot decodes masked garbage)
-            steps_h = np.asarray(steps)
+            # compile set; overshoot decodes masked garbage).  The live
+            # step budget comes from the HOST MIRROR — no pre-tick sync
+            # repro-lint: ok(R1, steps_h is the numpy host mirror - no device pull)
             live = int(steps_h[occupied].max())
             if live <= 0:
                 continue            # every occupied slot is mid-prefill
@@ -698,7 +728,14 @@ class BatchedEngine:
                 n_steps=n)
             clock.on_steps(n)
             t_tick = clock.now()
-            toks_h, act_h = np.asarray(toks), np.asarray(actives)
+            # THE host readback: one batched explicit pull per tick covers
+            # retirement (steps/unc), the emitted streams (toks/actives)
+            # and the carry mirror (tok == last scan emission)
+            steps_d, unc_d, toks_h, act_h = jax.device_get(  # repro-lint: ok(R1, the single batched per-tick device pull)
+                (steps, unc, toks, actives))
+            steps_h = np.array(steps_d)     # device_get views are
+            unc_h = np.array(unc_d)         # read-only; mirrors mutate
+            tok_h = np.array(toks_h[-1])
             for b in occupied:
                 new = [int(t) for t, a in zip(toks_h[:, b], act_h[:, b])
                        if a]
@@ -709,7 +746,7 @@ class BatchedEngine:
                 slots[b].tokens.extend(new)
 
             # ---- retire finished slots; the policy names each one's action
-            steps_h, unc_h = np.asarray(steps), np.asarray(unc)
+            # (steps_h/unc_h are this tick's batched pull — already host)
             retiring: List[Tuple[_Request, float, List[int]]] = []
             for b in occupied:
                 if steps_h[b] > 0 or b in self._prefill_jobs:
@@ -735,12 +772,12 @@ class BatchedEngine:
                            if rq.lane != "edge"]
                 if decided:
                     acts = list(self.policy.decide(
-                        np.asarray([retiring[i][1] for i in decided],
-                                   np.float32),
-                        np.asarray([retiring[i][0].spent
-                                    for i in decided], np.int32),
-                        np.asarray([retiring[i][0].max_new
-                                    for i in decided], np.int32)))
+                        np.array([retiring[i][1] for i in decided],
+                                 np.float32),
+                        np.array([retiring[i][0].spent
+                                  for i in decided], np.int32),
+                        np.array([retiring[i][0].max_new
+                                  for i in decided], np.int32)))
                     if len(acts) != len(decided):
                         raise ValueError(
                             f"policy {self.policy.name!r} decided "
@@ -783,32 +820,33 @@ class BatchedEngine:
         self._kv_stats.update(state.stats())
         return results
 
-    def _pick_victim(self, state, slots, steps, wave) -> Optional[int]:
+    @hot_path
+    def _pick_victim(self, state, slots, steps_h, wave) -> Optional[int]:
         """Preemption victim by a cost model: score each candidate by the
         decode steps its eviction frees (remaining budget — how long it
         would hold its block reservation) per block of KV it has staged
-        (``steps / (1 + blocks_owned)`` — swap-out checkpoints those bytes
+        (``steps / (1 + owned_blocks)`` — swap-out checkpoints those bytes
         to host and swap-in restores them, so a fat slot is an expensive
-        victim even when it has far to go).  Dense states expose no block
-        pool, so the score degrades to raw remaining steps — the historic
-        most-steps ordering — and ties still break toward the youngest
-        request.  Slots admitted or resumed in the current wave are exempt
-        — their staged device writes have not flushed yet, and exempting
-        them prevents same-tick swap thrash.  Slots whose swap-in restore
-        could never fit the pool (admitted over a prefix larger than their
-        private footprint allows) are exempt too — swapping them would
-        strand their completed work.  So are slots mid-chunked-prefill:
-        their device blocks hold garbage until finalize, and swapping
-        would checkpoint that garbage."""
-        steps_h = np.asarray(steps)
-        pool = getattr(state, "pool", None)
+        victim even when it has far to go).  Layouts without a block pool
+        report ``owned_blocks == 0`` (the ``SequenceState`` protocol
+        query — rule R4 forbids probing pool internals here), so the
+        score degrades to raw remaining steps — the historic most-steps
+        ordering — and ties still break toward the youngest request.
+        ``steps_h`` is the run loop's HOST mirror, so scoring costs no
+        device sync (rule R1).  Slots admitted or resumed in the current
+        wave are exempt — their staged device writes have not flushed
+        yet, and exempting them prevents same-tick swap thrash.  Slots
+        whose swap-in restore could never fit the pool (admitted over a
+        prefix larger than their private footprint allows) are exempt too
+        — swapping them would strand their completed work.  So are slots
+        mid-chunked-prefill: their device blocks hold garbage until
+        finalize, and swapping would checkpoint that garbage."""
         best = None
         for b, s in enumerate(slots):
             if s.req is None or b in wave or b in self._prefill_jobs \
                     or not state.swappable(b):
                 continue
-            staged = len(pool.owned(b)) if pool is not None else 0
-            key = (float(steps_h[b]) / (1.0 + staged),
+            key = (float(steps_h[b]) / (1.0 + state.owned_blocks(b)),
                    int(steps_h[b]), s.req.rid)
             if best is None or key > best[0]:
                 best = (key, b)
@@ -879,18 +917,22 @@ class BatchedEngine:
             results[f.rid] = RequestTrace(
                 "cache", tokens=list(tr.tokens) if tr.tokens else None)
 
+    @hot_path
     def _group_generate(self, lane: Lane, params, prompts,
                         max_news: List[int], rng) -> List[List[int]]:
         """Batched greedy/sampled generation for an escalation group: per-
-        request prefill, then ONE decode scan over the padded group."""
+        request prefill, then ONE decode scan over the padded group.  The
+        initial tok/steps state is host-built and uploaded once; the only
+        readback is the single batched pull of the emitted tape (rule
+        R1)."""
         if max(max_news) == 0:
             return [[] for _ in prompts]
         n = pow2_steps(max(max_news), 1 << 30)      # bound scan compiles
         G = self.batch_size                         # pad: stable jit shapes
         need = [len(p) - 1 + m for p, m in zip(prompts, max_news) if m > 0]
         state = lane.make_state(params, G, self._slot_len, need_tokens=need)
-        tok = jnp.zeros((G, 1, 1), jnp.int32)
-        steps = jnp.zeros((G,), jnp.int32)
+        tok_h = np.zeros((G, 1, 1), np.int32)
+        steps_h = np.zeros((G,), np.int32)
         members = []
         for i, (p, m) in enumerate(zip(prompts, max_news)):
             if m <= 0:
@@ -898,18 +940,18 @@ class BatchedEngine:
             state.admit(i, p, len(p) - 1 + m)
             self.clock.on_prefill(len(p) - 1)
             members.append(i)
-            tok = tok.at[i, 0, 0].set(int(p[-1]))
-            steps = steps.at[i].set(m)
+            tok_h[i, 0, 0] = int(p[-1])
+            steps_h[i] = m
         state.flush()
-        state.prepare_tick(members, np.asarray(steps), n)
+        state.prepare_tick(members, steps_h, n)
         # escalation/cloud groups never stop early: their budgets come
         # from the retirement wave, so stop stays disarmed (-1)
         _, _, _, _, toks, actives = lane._chunk(
-            params, state.caches, tok, steps, jnp.zeros((G,), jnp.float32),
-            rng, jnp.int32(-1), n_steps=n)
+            params, state.caches, jnp.asarray(tok_h), jnp.asarray(steps_h),
+            jnp.zeros((G,), jnp.float32), rng, jnp.int32(-1), n_steps=n)
         self.clock.on_steps(n)
         self._note_group(state)
-        toks_h, act_h = np.asarray(toks), np.asarray(actives)
+        toks_h, act_h = jax.device_get((toks, actives))  # repro-lint: ok(R1, the single batched per-group device pull)
         return [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i]) if a]
                 for i in range(len(prompts))]
 
@@ -944,6 +986,7 @@ class BatchedEngine:
                 cloud_passes=k, uncertainty=u, tokens=s + rest)))
         return out
 
+    @hot_path
     def _spec_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
         """One BatchedSpecDecoder group over all escalated requests.  Paged
         groups pre-grow each slot to prompt + budget + one round of draft
@@ -963,11 +1006,12 @@ class BatchedEngine:
             t_state = self._spec_cloud.make_state(
                 cloud_params, G, self._slot_len, need_tokens=need)
             states.append(t_state)
-        last = jnp.zeros((G, 1, 1), jnp.int32)
+        last_h = np.zeros((G, 1, 1), np.int32)
         for i, (r, nd) in enumerate(zip(reqs, need)):
             for st in states:
                 st.admit(i, r.prompt, nd)
-            last = last.at[i, 0, 0].set(int(r.prompt[-1]))
+            last_h[i, 0, 0] = int(r.prompt[-1])
+        last = jnp.asarray(last_h)
         overdraft = np.zeros((G,), np.int32)
         overdraft[:len(reqs)] = [n - (r.prompt.size - 1)
                                  for n, r in zip(need, reqs)]

@@ -37,7 +37,15 @@ same slot/tick/escalation machinery:
   * ``Lane`` — the per-model jitted machinery (batched decode step,
     per-prompt-length prefill, multi-token decode scan) plus the
     ``make_state`` factory.  ALL layout/family dispatch lives here, in
-    ``layout_for`` / ``resolve_kv_layout`` / ``make_spec_ops``.
+    ``layout_for`` / ``resolve_kv_layout`` / ``dense_side``.
+
+Contracts pinned by ``repro-lint`` (``scripts/repro_lint.py``): every
+``SequenceState``/``SpecOps`` implementor must define the required
+surface with matching arity (rule R4); the per-tick methods marked
+``@hot_path`` (``PagedKV.flush`` / ``prepare_tick``, the ``Lane`` decode
+scan) must stay free of host syncs (rule R1); and the jitted scan must
+keep its step count static so steady-state decode never retraces (rule
+R2, asserted at runtime by the ``compile_stability`` bench arm).
 """
 from __future__ import annotations
 
@@ -49,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import hot_path
 from repro.core.paged_cache import (BlockPool, ShardedBlockPool, blocks_for,
                                     copy_pool_blocks, prompt_cache_to_blocks,
                                     read_pool_blocks, write_pool_blocks)
@@ -314,6 +323,13 @@ class SequenceState:
         """True if slot ``b`` may be chosen as a preemption victim (its
         ``swap_in`` restore is guaranteed to fit the pool eventually)."""
         return False
+
+    def owned_blocks(self, b: int) -> int:
+        """KV blocks slot ``b`` currently owns (0 on layouts without a
+        block pool) — the preemption cost model's swap-cost proxy, kept
+        on the protocol so the scheduler never probes pool internals
+        (rule R4)."""
+        return 0
 
     def swap_out(self, b: int):
         """Stage slot ``b``'s cache content to host memory and release its
@@ -776,6 +792,10 @@ class PagedKV(SequenceState):
         return (len(self.pool.owned(b)) + self._commit[b] - rsv
                 <= self.pool.usable())
 
+    def owned_blocks(self, b: int) -> int:
+        return len(self.pool.owned(b))
+
+    @hot_path
     def flush(self):
         if not (self._pend or self._stale):
             return
@@ -796,6 +816,7 @@ class PagedKV(SequenceState):
             jnp.asarray(poss, jnp.int32))
         self._pend, self._stale = [], set()
 
+    @hot_path
     def prepare_tick(self, occupied, steps_h, n: int):
         """Grow every occupied slot to cover this tick's REAL decode steps
         (``min(steps_left, n)``); the masked garbage tail past a slot's
@@ -961,9 +982,12 @@ class Lane:
                  layout: str = "dense", block_size: int = 32,
                  mesh=None, data_shards: int = 1):
         self.model = model
+        self.estimator = estimator
+        self.temperature = temperature
         self.layout = layout
         self.block_size = block_size
         self.mesh = mesh
+        self._dense_side: Optional["Lane"] = None
         self.data_shards = data_shards if mesh is not None else 1
         # model-axis byte division of the paged pool (1 when this model's
         # kv-heads/head-dim don't divide — replication fallback)
@@ -990,6 +1014,7 @@ class Lane:
         self._jit_extend = jax.jit(
             lambda p, toks, cache: model.extend_step(p, toks, cache))
 
+        @hot_path
         def chunk(params, caches, tok, steps_left, unc_sum, rng, stop,
                   n_steps: int):
             """n_steps decode steps over all slots in one scan.  Returns the
@@ -1018,6 +1043,23 @@ class Lane:
             return caches, tok, steps_left, unc_sum, toks, actives
 
         self._chunk = jax.jit(chunk, static_argnames=("n_steps",))
+
+    def dense_side(self) -> "Lane":
+        """This lane's model re-hosted on dense per-slot caches (cached
+        after the first call).  Tree/self speculation needs block-masked
+        extends — a dense-layout feature — so escalation groups build
+        their side states through here instead of the scheduler ever
+        comparing ``.layout`` (rule R4 keeps layout dispatch out of it).
+        Identity on lanes that are already dense."""
+        if self.layout == "dense":
+            return self
+        if self._dense_side is None:
+            self._dense_side = Lane(self.model, self.estimator,
+                                    self.temperature, layout="dense",
+                                    block_size=self.block_size,
+                                    mesh=self.mesh,
+                                    data_shards=self.data_shards)
+        return self._dense_side
 
     def prefill(self, params, prompt, max_seq: int):
         """Prefill ``prompt[:-1]`` into a fresh cache padded to ``max_seq``.

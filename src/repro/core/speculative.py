@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import runtime
+from repro.analysis import hot_path
 
 
 def _probs(logits, temperature: float):
@@ -575,6 +576,7 @@ class BatchedSpecDecoder:
             jnp.where(active[:, None, None], next_tok[:, None, None], last))
         return slots, last, draft_toks, n_acc, next_tok
 
+    @hot_path
     def generate_group(self, draft_params, target_params, d_slots, t_slots,
                        last, max_news, rng=None):
         """Decode a prefilled group until every member has its tokens.
@@ -589,7 +591,7 @@ class BatchedSpecDecoder:
             "self mode decodes one shared state: use generate_group_self"
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         G = last.shape[0]
-        remaining = np.asarray(max_news, np.int64).copy()
+        remaining = np.array(max_news, np.int64)    # host list, not a sync
         out: List[List[int]] = [[] for _ in range(G)]
         member_stats = [{"rounds": 0, "accepted": []} for _ in range(G)]
 
@@ -602,13 +604,14 @@ class BatchedSpecDecoder:
                           member_stats)
         return out, member_stats
 
+    @hot_path
     def generate_group_self(self, params, slots, last, max_news, rng=None):
         """Self-speculative twin of ``generate_group``: ONE model, ONE
         stacked dense cache (shallow draft + full-depth verify share it)."""
         assert self.mode == "self"
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         G = last.shape[0]
-        remaining = np.asarray(max_news, np.int64).copy()
+        remaining = np.array(max_news, np.int64)    # host list, not a sync
         out: List[List[int]] = [[] for _ in range(G)]
         member_stats = [{"rounds": 0, "accepted": []} for _ in range(G)]
 
@@ -621,13 +624,13 @@ class BatchedSpecDecoder:
                           member_stats)
         return out, member_stats
 
+    @hot_path
     def _collect(self, remaining, draft_toks, n_acc, next_tok, out,
                  member_stats):
         """Host half of a round: slice each active member's emission off
-        the padded tape and accumulate the lane counters."""
-        dt = np.asarray(draft_toks)
-        na = np.asarray(n_acc)
-        nt = np.asarray(next_tok)
+        the padded tape and accumulate the lane counters — fed by ONE
+        batched pull of the round's device outputs (rule R1)."""
+        dt, na, nt = jax.device_get((draft_toks, n_acc, next_tok))  # repro-lint: ok(R1, the single batched per-round device pull)
         per_draft, per_verify = self._per_round
         for i in range(len(out)):
             if remaining[i] <= 0:

@@ -11,6 +11,8 @@ import inspect
 import threading
 from typing import Optional, Tuple
 
+from repro.analysis import hot_path
+
 _state = threading.local()
 
 
@@ -84,6 +86,7 @@ def _dp_count(mesh) -> int:
     return n
 
 
+@hot_path
 def gather_wave(*arrays):
     """All-gather a grouped escalation wave across the data axes in ONE
     explicit collective (``shard_map`` + ``lax.all_gather``), so the
@@ -91,7 +94,9 @@ def gather_wave(*arrays):
     once.  Each array is (G, ...) with G sharded over the data axes on
     entry; the result is fully replicated over them.  Identity (and
     trace-identical) outside a mesh context or when G does not divide —
-    the single-device path never sees a collective."""
+    the single-device path never sees a collective.  ``@hot_path``: this
+    runs inside every escalation wave, so repro-lint rule R1 keeps host
+    syncs out of it."""
     mesh = current_mesh()
     if mesh is None:
         return arrays if len(arrays) > 1 else arrays[0]
@@ -116,6 +121,7 @@ def gather_wave(*arrays):
     return out if len(arrays) > 1 else out[0]
 
 
+@hot_path
 def scatter_wave(x):
     """Constrain a (G, ...) wave result back to per-slot data sharding —
     the scatter half of the wave's mesh crossing.  No-op outside a mesh

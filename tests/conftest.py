@@ -14,3 +14,14 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def compile_counter():
+    """Count XLA compilations inside the test body (``jax.log_compiles``
+    listener, ``repro.analysis.compile_guard.CompileCounter``).  Use to
+    assert a warmed path stays recompile-free: check ``c.count`` /
+    ``c.events`` after driving the code under test."""
+    from repro.analysis.compile_guard import CompileCounter
+    with CompileCounter() as c:
+        yield c

@@ -59,6 +59,9 @@ def _rows():
                 "self": {"req_s": 3.2, "accepted_tokens_per_step": 1.4,
                          "accept_rate": 0.1, "rounds": 90,
                          "spec_mode": "self"}}},
+        "compile_stability": {
+            "decode_compiles": 12, "steady_state_recompiles": 0,
+            "recompile_events": []},
         "multi_device": {
             "mesh_shape": {"data": 2, "model": 4}, "mesh_devices": 8,
             "single_req_s": 2.0, "mesh_req_s": 1.5, "kv_shards": 8,
@@ -111,6 +114,10 @@ def test_multi_device_skip_fails_when_required():
     lambda r: r["tree_spec"]["lanes"]["self"].pop("req_s"),
     lambda r: r["tree_spec"]["lanes"].pop("chain"),
     lambda r: r.pop("tree_spec"),
+    lambda r: r["compile_stability"].__setitem__(
+        "steady_state_recompiles", 1),
+    lambda r: r["compile_stability"].__setitem__("decode_compiles", 0),
+    lambda r: r.pop("compile_stability"),
     lambda r: r["multi_device"].__setitem__("token_parity", False),
     lambda r: r["multi_device"].__setitem__("kv_capacity_scale_x", 1.0),
     lambda r: r["multi_device"].__setitem__("kv_shards", 1),

@@ -1,0 +1,73 @@
+"""Runtime complement of repro-lint: warmed serving must be pure.
+
+Two teeth, one drain:
+
+* ``CompileCounter`` (``jax.log_compiles`` listener) around a SECOND,
+  identical-shape drain through a warmed ``BatchedEngine`` — zero XLA
+  compilations allowed.  This is the machine check behind the
+  ``steady_state_recompiles == 0`` bench gate, run at tier-1 size.
+* ``jax.transfer_guard_device_to_host("disallow")`` around the same
+  drain.  Device->host is the hot-path sync direction; host->device
+  stays unguarded because admission legitimately uploads prompts and
+  host mirrors (``jnp.asarray`` at the tick boundary).  On the CPU
+  backend d2h reads are zero-copy and the guard is vacuous, so on CI
+  this leg is structural — it pins that the steady-state path runs
+  entirely under the guard context, so on a real accelerator (where the
+  guard has teeth) the same test fails on any IMPLICIT d2h transfer.
+  The scheduler's one-batched-``jax.device_get``-per-wave pulls are
+  explicit transfers, which guards allow by design.
+
+Both drains must stay token-identical to the per-request reference —
+purity must not buy a different answer.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import CollaborativeEngine
+from repro.core.policy import SpeculativePolicy, ThresholdPolicy
+from repro.core.scheduler import BatchedEngine
+from repro.models import Model
+
+
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, n, length=8):
+    return [((np.arange(length) * 7 + 3 * i) % vocab).astype(np.int32)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("policy_cls,threshold", [
+    (ThresholdPolicy, 1.1),          # pure edge decode
+    (SpeculativePolicy, -1.0),       # every request escalates (group path)
+])
+def test_steady_state_drain_is_pure(pair, compile_counter, policy_cls,
+                                    threshold):
+    edge, ep, cloud, cp = pair
+    prompts = _prompts(edge.cfg.vocab_size, 4)
+    eng = BatchedEngine(edge, cloud, batch_size=2, temperature=0.0,
+                        policy=policy_cls(threshold), use_cache=False,
+                        tick_tokens=4)
+    warm = eng.serve_batch(ep, cp, prompts, 8)          # compiles here
+    assert compile_counter.count > 0, \
+        "warm-up drain compiled nothing — the counter is not listening"
+    compile_counter.reset()
+    with jax.transfer_guard_device_to_host("disallow"):
+        steady = eng.serve_batch(ep, cp, prompts, 8)
+    assert compile_counter.count == 0, (
+        "steady-state drain recompiled: " + "; ".join(compile_counter.events))
+    ref = CollaborativeEngine(edge, cloud, temperature=0.0,
+                              policy=policy_cls(threshold), use_cache=False)
+    for p, w, s in zip(prompts, warm, steady):
+        rt = ref.serve_reference(ep, cp, p, 8)
+        assert w.tokens == s.tokens == rt.tokens
+        assert w.path == s.path == rt.path

@@ -319,7 +319,8 @@ def _victim_env(specs, prefill_jobs=()):
         for rid, _ in specs]
     steps = np.array([s for _, s in specs], np.int32)
     me = types.SimpleNamespace(_prefill_jobs=dict.fromkeys(prefill_jobs))
-    state = types.SimpleNamespace(swappable=lambda b: True)
+    state = types.SimpleNamespace(swappable=lambda b: True,
+                                  owned_blocks=lambda b: 0)
     return me, state, slots, steps
 
 
@@ -350,15 +351,17 @@ def test_pick_victim_most_steps_then_youngest():
 
 
 def test_pick_victim_cost_model_bytes_vs_steps():
-    """Paged states expose per-slot staged blocks (``pool.owned``): the
-    victim maximizes decode-steps-saved per block staged, so a slot that
-    would stage many blocks needs proportionally more remaining steps to
-    be picked.  Zero-staging slots and dense states (no ``pool``) reduce
-    to the raw most-steps ordering pinned above."""
+    """Paged states expose per-slot staged blocks through the
+    ``SequenceState.owned_blocks`` protocol query (repro-lint rule R4
+    forbids the scheduler reaching into ``pool`` internals): the victim
+    maximizes decode-steps-saved per block staged, so a slot that would
+    stage many blocks needs proportionally more remaining steps to be
+    picked.  Zero-staging slots and dense states (``owned_blocks == 0``)
+    reduce to the raw most-steps ordering pinned above."""
     pick = BatchedEngine._pick_victim
     me, st, slots, steps = _victim_env([(0, 8), (1, 6), (2, 6)])
     owned = {0: [0] * 7, 1: [0], 2: [0]}
-    st.pool = types.SimpleNamespace(owned=lambda b: owned[b])
+    st.owned_blocks = lambda b: len(owned[b])
     # slot 0 leads on steps (8) but stages 7 blocks (score 8/8 = 1.0);
     # slots 1/2 stage one block each (6/2 = 3.0) — the cheap swaps win,
     # and their exact tie falls back to the youngest (largest) rid
