@@ -1,73 +1,150 @@
 """Collaborative training benchmark (survey §3 / Table 6): distillation
 uplift, LoRA communication savings, HETLoRA aggregation, quantization and
-pruning deployment costs."""
+pruning deployment costs.
+
+The distillation arm runs through the SERVING stack, not an oracle
+``teacher_logits_fn``: a capture-only ``AdaptationLoop`` behind an
+escalate-everything ``BatchedEngine`` harvests the supervision corpus —
+(prompt, discarded student draft, cloud continuation, teacher top-k)
+triples riding each wave's single device pull into the
+``FeedbackStore`` — and the student then distills from the STORED sparse
+top-k via ``FeedbackStore.sample_batch``, exactly the tensors the online
+``AdaptationLoop`` trains on (``core/adaptation.py``).  The from-scratch
+baseline trains on the same served corpus with CE alone, so the delta
+isolates what the teacher's logits add at equal steps and equal data.
+
+Emits ``name,case,value`` CSV rows and merges a ``collab_training`` row
+set into ``BENCH_serving.json`` (pass ``rows=`` to merge in-process, or
+``out=`` to read-modify-write the artifact).
+"""
 from __future__ import annotations
 
+import json
+
 import jax
+import numpy as np
 
 from repro.configs import get_config
-from repro.data import batches, dirichlet_clients
+from repro.core.adaptation import AdaptationLoop
+from repro.core.policy import ThresholdPolicy
+from repro.core.scheduler import BatchedEngine
+from repro.data import FeedbackStore, SyntheticLM, batches, dirichlet_clients
 from repro.models import Model, cross_entropy
 from repro.training import AdamW, make_train_step, train
-from repro.training.distillation import kd_loss, teacher_logits_fn
+from repro.training.distillation import kd_loss
 from repro.training.lora import (hetlora_aggregate, init_lora,
                                  lora_param_count)
 from repro.training.pruning import magnitude_masks, sparsity_report
 from repro.training.quantization import (quantization_error,
                                          quantize_params, quantized_bytes)
 
+REQUESTS = 16
+PROMPT_LEN = 12
+MAX_NEW = 24
 
-def run(csv=print):
+
+def run(csv=print, rows=None, out="BENCH_serving.json"):
+    row = {}
     cfg = get_config("smollm-135m").reduced()
     teacher_m = Model(cfg)
     teacher = train(teacher_m, teacher_m.init(jax.random.PRNGKey(0)),
                     batches(cfg, 8, 48), steps=60, opt=AdamW(lr=2e-3),
                     log_every=10_000, log=lambda *_: None)["params"]
-    tlf = teacher_logits_fn(teacher_m, teacher)
 
-    # ---- distillation vs from-scratch at equal steps (Table 6 row 1)
+    # ---- serve-time harvest: every request escalates, so each completion
+    # lands in the store as (prompt, student draft, cloud continuation,
+    # teacher top-8) — the same capture path online adaptation uses
     s_cfg = cfg.replace(num_layers=1)
     s_m = Model(s_cfg)
+    sp0 = s_m.init(jax.random.PRNGKey(1))
+    store = FeedbackStore(capacity=4 * REQUESTS)
+    harvest = AdaptationLoop(store=store, mode="distill", interval=0, topk=8)
+    eng = BatchedEngine(s_m, teacher_m, batch_size=8, temperature=0.0,
+                        policy=ThresholdPolicy(0.0), use_cache=False,
+                        adaptation=harvest)
+    synth = SyntheticLM(cfg.vocab_size)
+    rng = np.random.default_rng(0)
+    prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+               for i in range(REQUESTS)]
+    eng.serve_batch(sp0, teacher, prompts, MAX_NEW,
+                    domains=[i % synth.n_domains for i in range(REQUESTS)])
+    st = store.stats()
+    assert st["size"] == REQUESTS and st["by_path"].get("cloud") == REQUESTS
+    csv(f"collab_harvest,records,{st['size']}")
+    row["harvested_records"] = st["size"]
+
+    # ---- distillation vs from-scratch at equal steps on the SAME served
+    # corpus (Table 6 row 1): KD reads the stored sparse teacher top-k
     evalb = next(batches(cfg, 8, 48, seed=50))
 
-    def final_ce(loss_fn):
+    def final_ce(loss_fn, topk):
         opt = AdamW(lr=2e-3)
         p = s_m.init(jax.random.PRNGKey(1))
-        st = opt.init(p)
+        stt = opt.init(p)
         step = make_train_step(s_m, opt, loss_fn=loss_fn, donate=False)
-        it = batches(cfg, 8, 48)
+        r = np.random.default_rng(3)
         for _ in range(40):
-            p, st, _ = step(p, st, next(it))
+            b = store.sample_batch(r, 8, PROMPT_LEN + MAX_NEW,
+                                   cfg.vocab_size, topk=topk)
+            p, stt, _ = step(p, stt, b)
         lg, _ = s_m.forward(p, evalb)
         return float(cross_entropy(lg[:, :-1], evalb["labels"][:, 1:]))
 
-    ce_scratch = final_ce(None)
-    ce_kd = final_ce(lambda p, b: kd_loss(s_m, p, b, tlf(b), alpha=0.5))
+    ce_scratch = final_ce(None, 0)
+    ce_kd = final_ce(
+        lambda p, b: kd_loss(s_m, p, b, b["teacher_logits"], alpha=0.5,
+                             kd_mask=b["kd_mask"]), 8)
     csv(f"distill_student_ce,scratch,{ce_scratch:.4f}")
     csv(f"distill_student_ce,kd,{ce_kd:.4f}")
+    row["student_ce_scratch"] = ce_scratch
+    row["student_ce_kd"] = ce_kd
 
     # ---- LoRA: trainable/communicated params vs full fine-tune (§3.4)
     ad = init_lora(jax.random.PRNGKey(2), teacher, rank=4)
     full_params = sum(x.size for x in jax.tree.leaves(teacher))
-    csv(f"lora_comm_ratio,rank4,{lora_param_count(ad)/full_params:.5f}")
+    lora_ratio = lora_param_count(ad) / full_params
+    csv(f"lora_comm_ratio,rank4,{lora_ratio:.5f}")
+    row["lora_comm_ratio_rank4"] = lora_ratio
     clients = [init_lora(jax.random.PRNGKey(10 + i), teacher, rank=r)
                for i, r in enumerate((2, 4, 8))]
     agg = hetlora_aggregate(clients, max_rank=8)
-    csv(f"hetlora_agg_rank,max,{agg[next(iter(agg))]['A'].shape[-2]}")
+    agg_rank = int(agg[next(iter(agg))]["A"].shape[-2])
+    csv(f"hetlora_agg_rank,max,{agg_rank}")
+    row["hetlora_agg_rank"] = agg_rank
 
     # ---- deployment costs (§3.1)
     qp = quantize_params(teacher)
     err = quantization_error(teacher, qp)["mean_rel_err"]
+    bytes_ratio = quantized_bytes(qp) / (full_params * 4)
     csv(f"quant_int8_rel_err,mean,{err:.5f}")
-    csv(f"quant_bytes_ratio,int8,{quantized_bytes(qp)/(full_params*4):.3f}")
+    csv(f"quant_bytes_ratio,int8,{bytes_ratio:.3f}")
     rep = sparsity_report(magnitude_masks(teacher, 0.5))
     csv(f"prune_kept_frac,sparsity0.5,{rep['kept_frac']:.3f}")
+    row["quant_int8_rel_err"] = float(err)
+    row["quant_bytes_ratio"] = float(bytes_ratio)
+    row["prune_kept_frac"] = float(rep["kept_frac"])
 
     # ---- non-IID heterogeneity measure (§4 datasets)
     from repro.data.pipeline import client_divergence
+    row["fed_client_divergence"] = {}
     for alpha in (0.1, 1.0, 10.0):
         w = dirichlet_clients(8, 4, alpha=alpha)
-        csv(f"fed_client_divergence,alpha={alpha},{client_divergence(w):.3f}")
+        div = float(client_divergence(w))
+        csv(f"fed_client_divergence,alpha={alpha},{div:.3f}")
+        row["fed_client_divergence"][str(alpha)] = div
+
+    if rows is not None:
+        rows["collab_training"] = row
+    elif out:
+        try:
+            with open(out) as f:
+                existing = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            existing = {}
+        existing["collab_training"] = row
+        with open(out, "w") as f:
+            json.dump(existing, f, indent=2)
+    return row
 
 
 if __name__ == "__main__":

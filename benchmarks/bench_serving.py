@@ -71,6 +71,19 @@ ZERO further compilations (``steady_state_recompiles == 0``) — the
 runtime complement of repro-lint's static recompile-hazard rule (R2),
 gated by ``scripts/check_bench.py``.
 
+The ONLINE-ADAPTATION arm closes the serve->train->serve loop
+(``core/adaptation.py``): a stationary ``SyntheticLM`` stream behind a
+``ThresholdPolicy`` placed so the random-init edge escalates ~3/4 of the
+first segment; ``_finish`` captures each escalation's (prompt, discarded
+edge draft, cloud continuation, teacher top-k) triple into the
+``FeedbackStore``, and every segment's worth of observations triggers a
+distillation update whose result is hot-swapped into the live engine
+between ticks.  Asserts cloud-token share in the last third of the run
+is below the first third, edge acceptance rises, and — under
+``CompileCounter`` with at least one hot-swap inside the counted
+window — ``steady_state_recompiles == 0``.  Gated by
+``scripts/check_bench.py``.
+
 The RECURRENT arm runs mixed-family speculative escalation — mamba2 (ssm)
 and zamba2 (hybrid) drafts against a granite (transformer) cloud — where
 the batched scheduler's rewind is a replayed state select
@@ -639,6 +652,102 @@ def _compile_stability(edge, ep, cloud, cp, csv, rows):
         f"steady-state recompiles: {steady.events}"
 
 
+def _online_adaptation(edge, ep, cloud, cp, csv, rows):
+    """ONLINE-ADAPTATION arm: serve-time feedback -> background
+    distillation -> hot-swapped edge weights (``core/adaptation.py``),
+    measured end to end.  A stationary stream is served in segments
+    through ONE engine whose ``ThresholdPolicy`` gate sits at the
+    25th-percentile probe uncertainty, so the random-init edge escalates
+    ~3/4 of the cold segment; every escalation's cloud pass captures the
+    corrected continuation plus teacher top-k (riding the wave's existing
+    device pull), and one distillation update lands per segment.  As the
+    edge sharpens on its own traffic, escalations — and with them the
+    cloud-token share — must fall between the first and last third while
+    edge acceptance rises.  The LAST segment runs under ``CompileCounter``
+    with at least one hot-swap inside the counted window: the swap is a
+    pure pytree exchange, so ``steady_state_recompiles`` must be 0."""
+    from repro.analysis.compile_guard import CompileCounter
+    from repro.core.adaptation import AdaptationLoop
+    from repro.training.optimizer import AdamW
+
+    gamma = 4
+    segments = 9
+    synth = SyntheticLM(edge.cfg.vocab_size)
+    rng = np.random.default_rng(21)
+    prompts = [synth.sample(rng, i % synth.n_domains, PROMPT_LEN)
+               for i in range(REQUESTS)]
+    domains = [i % synth.n_domains for i in range(REQUESTS)]
+
+    # place the gate from a never-escalate probe of the same stream
+    probe = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
+                          policy=ThresholdPolicy(1.1), use_cache=False)
+    uncs = np.array([t.uncertainty
+                     for t in probe.serve_batch(ep, cp, prompts, MAX_NEW)])
+    thr = float(np.quantile(uncs, 0.25))
+
+    adapt = AdaptationLoop(mode="distill", interval=REQUESTS, batch_size=8,
+                           seq_len=PROMPT_LEN + MAX_NEW, topk=8,
+                           steps_per_update=8, opt=AdamW(lr=1e-3),
+                           min_records=4)
+    eng = BatchedEngine(edge, cloud, batch_size=BATCH, temperature=0.0,
+                        policy=ThresholdPolicy(thr), use_cache=False,
+                        adaptation=adapt)
+    shares, accepts = [], []
+    steady_recompiles = steady_swaps = -1
+    t0 = time.perf_counter()
+    for s in range(segments):
+        if s == segments - 1:
+            # steady window: pending update from the previous segment's
+            # observations lands HERE, so the counter brackets >= 1 swap
+            swaps_before = adapt.swaps
+            with CompileCounter() as steady:
+                traces = eng.serve_batch(ep, cp, prompts, MAX_NEW,
+                                         domains=domains)
+            steady_recompiles = steady.count
+            steady_events = steady.events
+            steady_swaps = adapt.swaps - swaps_before
+        else:
+            traces = eng.serve_batch(ep, cp, prompts, MAX_NEW,
+                                     domains=domains)
+        shares.append(sum(cloud_tokens(t, gamma) for t in traces)
+                      / (REQUESTS * MAX_NEW))
+        accepts.append(sum(t.path == "edge" for t in traces) / REQUESTS)
+    dt = time.perf_counter() - t0
+
+    third = max(1, segments // 3)
+    share_first = float(np.mean(shares[:third]))
+    share_last = float(np.mean(shares[-third:]))
+    accept_first = float(np.mean(accepts[:third]))
+    accept_last = float(np.mean(accepts[-third:]))
+    st = adapt.stats()
+    rows["online_adaptation"] = {
+        "threshold": thr,
+        "segments": segments,
+        "req_s": segments * REQUESTS / dt,
+        "cloud_share_first_third": share_first,
+        "cloud_share_last_third": share_last,
+        "accept_first_third": accept_first,
+        "accept_last_third": accept_last,
+        "swaps": st["swaps"],
+        "train_steps": st["train_steps"],
+        "last_loss": st["last_loss"],
+        "store_size": st["store_size"],
+        "steady_state_recompiles": steady_recompiles,
+        "steady_swaps": steady_swaps,
+    }
+    csv(f"online_adaptation,cloud_share_first_third,{share_first:.3f}")
+    csv(f"online_adaptation,cloud_share_last_third,{share_last:.3f}")
+    csv(f"online_adaptation,accept_first_third,{accept_first:.3f}")
+    csv(f"online_adaptation,accept_last_third,{accept_last:.3f}")
+    csv(f"online_adaptation,swaps,{st['swaps']}")
+    csv(f"online_adaptation,steady_state_recompiles,{steady_recompiles}")
+    assert share_last < share_first, (shares, "cloud share did not fall")
+    assert accept_last > accept_first, (accepts, "acceptance did not rise")
+    assert steady_swaps >= 1, "no hot-swap inside the counted window"
+    assert steady_recompiles == 0, \
+        f"recompiles across a hot-swap: {steady_events}"
+
+
 def _multi_device(edge, ep, cloud, cp, csv, rows):
     """SHARDED-SERVING arm: the batched scheduler on a simulated (2, 4)
     host mesh — cloud verifier tensor-parallel over 'model', edge drafts
@@ -712,6 +821,7 @@ def run(csv=print, smoke: bool = False, out: str = "BENCH_serving.json"):
         _policies(edge, ep, cloud, cp, csv, rows)
         _tree_spec(edge, ep, cloud, cp, csv, rows)
         _compile_stability(edge, ep, cloud, cp, csv, rows)
+        _online_adaptation(edge, ep, cloud, cp, csv, rows)
         _multi_device(edge, ep, cloud, cp, csv, rows)
     finally:
         REQUESTS, MAX_NEW, BATCH = saved

@@ -100,6 +100,22 @@ def check(rows: dict, *, require_multi_device: bool = False, out=print) -> None:
     out(f"compile stability: {cs['decode_compiles']} cold compiles, "
         f"{cs['steady_state_recompiles']} steady-state recompiles")
 
+    oa = rows["online_adaptation"]
+    # the serve->train->serve loop must pay off on its own traffic: cloud
+    # share falls, acceptance rises, and the hot-swap is compile-free —
+    # steady_swaps >= 1 proves the recompile counter actually bracketed a
+    # swap rather than measuring an idle window
+    assert oa["cloud_share_last_third"] < oa["cloud_share_first_third"], oa
+    assert oa["accept_last_third"] > oa["accept_first_third"], oa
+    assert oa["swaps"] >= 1 and oa["train_steps"] >= 1, oa
+    assert oa["steady_swaps"] >= 1, oa
+    assert oa["steady_state_recompiles"] == 0, oa
+    out(f"online adaptation: cloud share "
+        f"{oa['cloud_share_first_third']:.3f} -> "
+        f"{oa['cloud_share_last_third']:.3f}, accept "
+        f"{oa['accept_first_third']:.2f} -> {oa['accept_last_third']:.2f}, "
+        f"{oa['swaps']} swaps, {oa['steady_state_recompiles']} recompiles")
+
     md = rows["multi_device"]
     if "skipped" in md:
         msg = f"multi_device arm was skipped: {md['skipped']}"

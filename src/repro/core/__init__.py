@@ -3,6 +3,7 @@
 Inference (survey §2): routing, uncertainty, early_exit, partition,
 compression, cache, speculative, self_speculative, tree_speculation, engine.
 """
+from repro.core.adaptation import AdaptationLoop  # noqa: F401
 from repro.core.policy import (BanditPolicy, BudgetPolicy,  # noqa: F401
                                CascadePolicy, CollabPolicy, SkeletonPolicy,
                                SpeculativePolicy, ThresholdPolicy,

@@ -1,0 +1,212 @@
+"""Online adaptation: background distillation/LoRA over serve-time
+feedback, hot-swapped into live serving between scheduler ticks.
+
+This is the subsystem that makes the repo's serving and training halves
+meet (survey §3: collaborative *inference and learning*).  The flow:
+
+1. **Capture** — ``BatchedEngine._finish`` calls ``observe`` once per
+   completion with the supervision triple (prompt, discarded edge draft,
+   cloud-corrected continuation) plus the cloud's top-k teacher logits
+   when the wave already paid for the cloud pass (``capture_topk`` tells
+   the scheduler how many to keep; the capture rides each wave's single
+   designated ``jax.device_get`` — never a new sync).  Records land in a
+   bounded ``data/feedback_store.FeedbackStore`` with domain/SLA tags.
+
+2. **Train** — every ``interval`` observations, ``maybe_update`` (called
+   by the drain loop BETWEEN ticks) assembles a fixed-shape padded batch
+   from the store and takes jitted steps built on
+   ``training/trainer.make_train_step`` + ``training/optimizer.AdamW``:
+
+   * ``mode="distill"`` — forward KD on the full edge params
+     (``training/distillation.kd_loss`` from the stored sparse teacher
+     top-k, ``kd_mask`` confining the KL to captured positions).
+   * ``mode="lora"`` — adapter-only updates
+     (``training/lora.lora_loss_fn``) against the FROZEN base params
+     snapshotted at the first update; the swap value is
+     ``merge_lora(base, adapters)``.
+
+   Fixed batch/seq shapes + sampling with replacement mean the train
+   step compiles exactly ONCE; metrics stay device-side until ``stats``.
+
+3. **Swap** — the new weights go back as a PURE pytree swap: same
+   treedef, shapes and dtypes as the serving params (AdamW and
+   ``merge_lora`` both cast back to the input dtype), so no jitted
+   function's cache key changes and the PR 9 ``CompileCounter`` oracle
+   reads ``steady_state_recompiles == 0`` straight across a swap.
+
+``interval=0`` is capture-only: the store fills (e.g. for offline
+harvesting, ``benchmarks/bench_collab_training.py``) but ``maybe_update``
+never fires.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.data.feedback_store import FeedbackStore
+
+MODES = ("distill", "lora")
+
+
+class AdaptationLoop:
+    """Serve-time adaptation driver (see the module docstring).
+
+    Args:
+        store: the ``FeedbackStore`` to fill/train from (fresh if None).
+        mode: ``"distill"`` (full-param forward KD) or ``"lora"``
+            (adapter-only on frozen base params).
+        interval: take an update every this many observations (0 =
+            capture-only, never update).
+        batch_size / seq_len: fixed training-batch shape (one compile).
+        topk: teacher logits kept per captured cloud position; also what
+            the scheduler reads as ``capture_topk``.  ``topk=0`` disables
+            teacher capture (lora mode trains on CE alone).
+        steps_per_update: jitted steps taken per due update.
+        opt: ``training/optimizer.AdamW`` (default lr=1e-3 instance).
+        lora_rank: adapter rank (lora mode).
+        alpha / kd_temperature: ``kd_loss`` mixing knobs (distill mode).
+        min_records: updates are skipped until the store holds this many.
+    """
+
+    def __init__(self, store: Optional[FeedbackStore] = None, *,
+                 mode: str = "distill", interval: int = 64,
+                 batch_size: int = 8, seq_len: int = 64, topk: int = 8,
+                 steps_per_update: int = 1, opt=None, lora_rank: int = 8,
+                 alpha: float = 0.5, kd_temperature: float = 2.0,
+                 min_records: int = 1, seed: int = 0):
+        if mode not in MODES:
+            raise ValueError(f"unknown adaptation mode {mode!r}; "
+                             f"known: {' | '.join(MODES)}")
+        if interval < 0:
+            raise ValueError(f"interval must be >= 0, got {interval}")
+        self.store = store if store is not None else FeedbackStore()
+        self.mode = mode
+        self.interval = interval
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.topk = topk
+        self.steps_per_update = steps_per_update
+        self.lora_rank = lora_rank
+        self.alpha = alpha
+        self.kd_temperature = kd_temperature
+        self.min_records = min_records
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        if opt is None:
+            from repro.training.optimizer import AdamW
+            opt = AdamW(lr=1e-3)
+        self.opt = opt
+        self.model = None
+        self._train_step = None
+        self._opt_state = None
+        self._base = None           # frozen base params (lora mode)
+        self.adapters = None        # live adapter pytree (lora mode)
+        self._pending = False
+        self.observed = 0
+        self.updates = 0
+        self.steps = 0
+        self.swaps = 0
+        self.latest = None          # most recent hot-swapped edge weights
+        self._last_loss = None      # device scalar; float()ed in stats()
+
+    # ------------------------------------------------------------ capture
+    @property
+    def capture_topk(self) -> int:
+        """Top-k teacher logits the scheduler should emit on cloud passes
+        (0 = none).  Distill mode needs them; lora mode trains on the
+        corrected tokens alone, so capture stays free there."""
+        return self.topk if self.mode == "distill" else 0
+
+    def bind(self, model) -> None:
+        """Attach the edge model whose params the loop trains (the engine
+        calls this at construction)."""
+        self.model = model
+
+    def current(self, params):
+        """The latest adapted edge weights, or ``params`` unchanged when
+        no update has landed yet.  The scheduler starts every drain from
+        this, so adaptation PERSISTS across drains instead of resetting
+        to the caller's baseline each ``run``."""
+        return params if self.latest is None else self.latest
+
+    def observe(self, *, prompt, tokens, draft=None, teacher_topk=None,
+                domain=None, sla="none", path="edge") -> None:
+        """Record one completion (host-side data only — the scheduler
+        hands over what the wave's batched pull already fetched) and mark
+        an update pending every ``interval`` observations."""
+        self.store.add(prompt, tokens, draft=draft,
+                       teacher_topk=teacher_topk, domain=domain, sla=sla,
+                       path=path)
+        self.observed += 1
+        if self.interval and self.observed % self.interval == 0:
+            self._pending = True
+
+    # ------------------------------------------------------------ training
+    def _build(self, params):
+        from repro.training.trainer import make_train_step
+        if self.mode == "lora":
+            from repro.training.lora import init_lora, lora_loss_fn
+            # freeze the CURRENT serving params as the base: adapters are
+            # the only thing that trains, and B's zero init makes the
+            # first merge the identity
+            self._base = jax.tree.map(lambda x: x, params)
+            self.adapters = init_lora(jax.random.PRNGKey(self.seed),
+                                      self._base, rank=self.lora_rank)
+            loss = lora_loss_fn(self.model, self._base)
+        else:
+            model, alpha, temp = self.model, self.alpha, self.kd_temperature
+            from repro.training.distillation import kd_loss
+
+            def loss(p, b):
+                return kd_loss(model, p, b, b["teacher_logits"],
+                               alpha=alpha, temperature=temp,
+                               kd_mask=b["kd_mask"])
+        # donate=False: the donated buffers would be the LIVE serving
+        # params — serving still reads them until the swap lands
+        self._train_step = make_train_step(self.model, self.opt,
+                                           loss_fn=loss, donate=False)
+        self._opt_state = self.opt.init(
+            self.adapters if self.mode == "lora" else params)
+
+    def maybe_update(self, params):
+        """Offered the live edge params between ticks; returns the
+        hot-swap replacement (same treedef/shapes/dtypes) when an update
+        is due, else None.  All work here is enqueue-only — batches
+        upload, the jitted step runs async, metrics stay device-side."""
+        if not self._pending or self.model is None:
+            return None
+        self._pending = False
+        if len(self.store) < max(self.min_records, 1):
+            return None
+        if self._train_step is None:
+            self._build(params)
+        tk = self.capture_topk
+        target = self.adapters if self.mode == "lora" else params
+        for _ in range(self.steps_per_update):
+            batch = self.store.sample_batch(
+                self._rng, self.batch_size, self.seq_len,
+                self.model.cfg.vocab_size, topk=tk)
+            target, self._opt_state, metrics = self._train_step(
+                target, self._opt_state, batch)
+            self.steps += 1
+            self._last_loss = metrics["loss"]
+        self.updates += 1
+        self.swaps += 1
+        if self.mode == "lora":
+            from repro.training.lora import merge_lora
+            self.adapters = target
+            self.latest = merge_lora(self._base, self.adapters)
+        else:
+            self.latest = target
+        return self.latest
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, Any]:
+        return {"mode": self.mode, "interval": self.interval,
+                "observed": self.observed, "updates": self.updates,
+                "train_steps": self.steps, "swaps": self.swaps,
+                "last_loss": None if self._last_loss is None
+                else float(self._last_loss),
+                **{f"store_{k}": v for k, v in self.store.stats().items()}}

@@ -132,6 +132,10 @@ class RequestTrace:
     cloud_passes: int = 0
     uncertainty: float = 0.0
     tokens: Optional[List[int]] = None
+    # cloud top-k teacher logits for the emitted tokens, when the wave's
+    # cloud pass already paid for them: (values, indices) arrays of shape
+    # (len(tokens), k) — serve-time distillation supervision
+    teacher_topk: Optional[Tuple[np.ndarray, np.ndarray]] = None
 
 
 # ---------------------------------------------------------------- requests
@@ -144,6 +148,8 @@ class _Request:
     lane: Optional[str] = None          # policy.assign outcome (once per req)
     at: Optional[float] = None          # arrival time, clock ms (None = now)
     spent: int = 0                      # edge decode steps actually consumed
+    domain: Optional[int] = None        # workload tag for adaptation slicing
+    draft: Optional[List[int]] = None   # discarded edge draft (escalations)
 
 
 @dataclasses.dataclass
@@ -171,12 +177,16 @@ class BatchedEngine:
     slo_ms}`` (prompt features + live load stats + REAL deadline state —
     ``wait_ms`` is how long the request has already queued against
     ``slo_ms``); ``feedback`` sees ``{rid, unc, steps, budget, lane,
-    ttft_ms, e2e_ms, slo_ms, slo_met}`` — ``steps``/``budget`` matching
-    the aligned arrays ``decide`` saw for that request (``steps`` is what
-    it actually consumed; a stop-token hit makes it < ``budget``),
-    ``lane`` distinguishing decided actions from lane-assigned
-    completions that never reached ``decide``, and the latency fields
-    closing the loop for SLA/budget policies.
+    ttft_ms, e2e_ms, slo_ms, slo_met, prompt, tokens, draft,
+    teacher_topk, domain}`` — ``steps``/``budget`` matching the aligned
+    arrays ``decide`` saw for that request (``steps`` is what it actually
+    consumed; a stop-token hit makes it < ``budget``), ``lane``
+    distinguishing decided actions from lane-assigned completions that
+    never reached ``decide``, the latency fields closing the loop for
+    SLA/budget policies, and the supervision tape — the served
+    ``tokens``, the discarded edge ``draft`` (escalations), the cloud
+    ``teacher_topk`` logits when an adaptation loop requested them — all
+    host-side already (they rode the wave's single batched device pull).
 
     Serving knobs: ``clock`` (a ``core/traffic.py`` clock; default
     ``VirtualClock()`` — deterministic modeled ms), ``slo_ms`` (TTFT SLO
@@ -213,7 +223,7 @@ class BatchedEngine:
                  spec_mode: Optional[str] = None,
                  spec_tree_width: Optional[int] = None,
                  spec_exit_layer: Optional[int] = None,
-                 mesh=None):
+                 mesh=None, adaptation=None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if tick_tokens < 1:
@@ -271,6 +281,13 @@ class BatchedEngine:
                           block_size=kv_block_size, mesh=mesh)
         self.cache = SemanticCache(threshold=cache_threshold) if use_cache \
             else None
+        # online adaptation (core/adaptation.py AdaptationLoop or None):
+        # completions feed its FeedbackStore from _finish, and the drain
+        # loop offers it a hot-swap point between ticks.  adaptation=None
+        # keeps every path byte-identical to the pre-adaptation engine.
+        self.adaptation = adaptation
+        if adaptation is not None:
+            adaptation.bind(edge_model)
         # speculation lane: engine kwarg > policy attribute > linear.  A
         # model family the requested lane cannot serve falls back to the
         # linear tape; the EFFECTIVE mode is what stats()["spec_mode"]
@@ -330,17 +347,21 @@ class BatchedEngine:
         self._events: Dict[int, dict] = {}          # rid -> lifecycle stamps
 
     # ------------------------------------------------------------ submit
-    def submit(self, prompt, max_new: int, at: Optional[float] = None) -> int:
+    def submit(self, prompt, max_new: int, at: Optional[float] = None,
+               domain: Optional[int] = None) -> int:
         """Queue a request.  ``at`` is an OPEN-LOOP arrival time in clock
         milliseconds (``core/traffic.py`` generators produce them): the
         request is invisible to admission until the engine's clock reaches
-        it.  ``at=None`` (closed-loop) means "already arrived"."""
+        it.  ``at=None`` (closed-loop) means "already arrived".
+        ``domain`` is an optional workload tag carried through to the
+        adaptation feedback record (never affects serving)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size >= 2, "scheduler needs >= 2 prompt tokens"
         assert max_new >= 1
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append(_Request(rid, prompt, max_new, at=at))
+        self._queue.append(_Request(rid, prompt, max_new, at=at,
+                                    domain=domain))
         return rid
 
     def _note_group(self, *states):
@@ -393,6 +414,10 @@ class BatchedEngine:
     def _run_impl(self, edge_params, cloud_params) -> Dict[int, RequestTrace]:
         if not self._queue:
             return {}
+        # adaptation persists ACROSS drains: pick up from the last
+        # hot-swapped edge weights, not the caller's baseline
+        if self.adaptation is not None:
+            edge_params = self.adaptation.current(edge_params)
         clock = self.clock
         t0 = clock.now()
         for r in self._queue:
@@ -437,6 +462,16 @@ class BatchedEngine:
 
         while self._queue or self._swapped or any(s.req is not None
                                                   for s in slots):
+            # ---- online-adaptation hot-swap point: BETWEEN ticks, the
+            # loop offers the current edge weights for replacement.  The
+            # swap is a pure pytree rebind — same treedef/shapes/dtypes —
+            # so in-flight caches stay valid and no jitted function sees a
+            # new cache key (steady_state_recompiles == 0 across a swap)
+            if self.adaptation is not None:
+                swapped_p = self.adaptation.maybe_update(edge_params)
+                if swapped_p is not None:
+                    edge_params = swapped_p
+                    state.rebind(edge_params)
             free = [b for b in range(B) if slots[b].req is None]
             wave: set = set()       # slots admitted/resumed this wave
             stalled = False
@@ -664,13 +699,19 @@ class BatchedEngine:
                 # group completion
                 rng, r_ = jax.random.split(rng)
                 t_cw = clock.now()
+                tk = self.adaptation.capture_topk \
+                    if self.adaptation is not None else 0
                 toks = self._group_generate(
                     self.cloud, cloud_params,
                     [q.prompt for q in cloud_wave],
-                    [q.max_new for q in cloud_wave], r_)
-                for q, t in zip(cloud_wave, toks):
+                    [q.max_new for q in cloud_wave], r_, topk=tk)
+                teach = [None] * len(cloud_wave)
+                if tk:
+                    toks, teach = toks
+                for q, t, th in zip(cloud_wave, toks, teach):
                     self._finish(results, q, RequestTrace(
-                        "cloud", cloud_passes=q.max_new, tokens=t),
+                        "cloud", cloud_passes=q.max_new, tokens=t,
+                        teacher_topk=th),
                         t_first=t_cw + clock.step_ms)
 
             # ---- advance chunked prefills: one detached chunk per job per
@@ -798,9 +839,13 @@ class BatchedEngine:
                             "edge", edge_calls=req.spent, uncertainty=u,
                             tokens=toks))
                     else:
-                        # edge tokens are discarded — escalation
-                        # regenerates with cloud involvement (same as the
-                        # reference engine)
+                        # edge tokens are discarded from the CLIENT stream
+                        # — escalation regenerates with cloud involvement
+                        # (same as the reference engine) — but kept on the
+                        # request as the rejected draft: with the cloud's
+                        # corrected continuation it completes the
+                        # (prompt, draft, correction) supervision triple
+                        req.draft = toks
                         groups.setdefault(a, []).append((req, u))
                 # one batched group per decided action (a wave can mix).
                 # The escalation's own first step is the client-visible
@@ -853,15 +898,22 @@ class BatchedEngine:
         return None if best is None else best[1]
 
     def serve_batch(self, edge_params, cloud_params, prompts,
-                    max_new) -> List[RequestTrace]:
+                    max_new, domains=None) -> List[RequestTrace]:
         """Convenience: submit ``prompts``, drain, return traces in order.
-        ``max_new`` may be an int or a per-request sequence."""
+        ``max_new`` may be an int or a per-request sequence; ``domains``
+        an optional per-request workload-tag sequence (adaptation)."""
         if isinstance(max_new, int):
             max_new = [max_new] * len(prompts)
         if len(max_new) != len(prompts):
             raise ValueError(f"{len(prompts)} prompts but {len(max_new)} "
                              "max_new budgets")
-        rids = [self.submit(p, m) for p, m in zip(prompts, max_new)]
+        if domains is None:
+            domains = [None] * len(prompts)
+        if len(domains) != len(prompts):
+            raise ValueError(f"{len(prompts)} prompts but {len(domains)} "
+                             "domain tags")
+        rids = [self.submit(p, m, domain=d)
+                for p, m, d in zip(prompts, max_new, domains)]
         results = self.run(edge_params, cloud_params)
         return [results[rid] for rid in rids]
 
@@ -890,6 +942,13 @@ class BatchedEngine:
             # went through decide), plus the realized deadline outcome so
             # SLA policies reconcile against REAL latencies, not proxies
             ttft = ev["first_token_ms"] - ev["submit_ms"]
+            slo_met = self.slo_ms is None or ttft <= self.slo_ms
+            # the corrected token tape (and teacher top-k, when the wave
+            # already paid for the cloud pass) rides the feedback payload:
+            # policies used to see only the scalar quality proxy while the
+            # continuation itself was dropped on the floor.  Everything
+            # here is already host-side — it came off the wave's single
+            # batched device_get — so threading it costs zero extra syncs
             self.policy.feedback(
                 "accept" if tr.path == "edge" else tr.path,
                 trace_quality(tr, req.max_new),
@@ -898,8 +957,17 @@ class BatchedEngine:
                  "steps": req.spent if req.spent else req.max_new,
                  "budget": req.max_new, "lane": req.lane,
                  "ttft_ms": ttft, "e2e_ms": now - ev["submit_ms"],
-                 "slo_ms": self.slo_ms,
-                 "slo_met": self.slo_ms is None or ttft <= self.slo_ms})
+                 "slo_ms": self.slo_ms, "slo_met": slo_met,
+                 "prompt": req.prompt, "tokens": tr.tokens,
+                 "draft": req.draft, "teacher_topk": tr.teacher_topk,
+                 "domain": req.domain})
+            if self.adaptation is not None and tr.tokens:
+                self.adaptation.observe(
+                    prompt=req.prompt, tokens=tr.tokens, draft=req.draft,
+                    teacher_topk=tr.teacher_topk, domain=req.domain,
+                    sla="none" if self.slo_ms is None
+                    else ("met" if slo_met else "missed"),
+                    path=tr.path)
         if self.cache is not None and tr.tokens is not None \
                 and req.key is not None:
             self.cache.insert(req.key, tr.tokens)
@@ -919,14 +987,19 @@ class BatchedEngine:
 
     @hot_path
     def _group_generate(self, lane: Lane, params, prompts,
-                        max_news: List[int], rng) -> List[List[int]]:
+                        max_news: List[int], rng, topk: int = 0):
         """Batched greedy/sampled generation for an escalation group: per-
         request prefill, then ONE decode scan over the padded group.  The
         initial tok/steps state is host-built and uploaded once; the only
         readback is the single batched pull of the emitted tape (rule
-        R1)."""
+        R1).  Returns the per-request token lists; with ``topk > 0`` the
+        scan additionally emits top-k teacher logits and the return
+        becomes ``(tokens, teachers)`` where ``teachers[i]`` is a
+        ``(values, indices)`` pair trimmed to request ``i``'s emitted
+        length — capture extends the SAME batched pull, never adds one."""
         if max(max_news) == 0:
-            return [[] for _ in prompts]
+            empty = [[] for _ in prompts]
+            return (empty, [None] * len(prompts)) if topk else empty
         n = pow2_steps(max(max_news), 1 << 30)      # bound scan compiles
         G = self.batch_size                         # pad: stable jit shapes
         need = [len(p) - 1 + m for p, m in zip(prompts, max_news) if m > 0]
@@ -946,25 +1019,49 @@ class BatchedEngine:
         state.prepare_tick(members, steps_h, n)
         # escalation/cloud groups never stop early: their budgets come
         # from the retirement wave, so stop stays disarmed (-1)
-        _, _, _, _, toks, actives = lane._chunk(
+        outs = lane._chunk(
             params, state.caches, jnp.asarray(tok_h), jnp.asarray(steps_h),
-            jnp.zeros((G,), jnp.float32), rng, jnp.int32(-1), n_steps=n)
+            jnp.zeros((G,), jnp.float32), rng, jnp.int32(-1), n_steps=n,
+            topk=topk)
         self.clock.on_steps(n)
         self._note_group(state)
+        if topk:
+            toks, actives, tvals, tidx = outs[4:]
+            toks_h, act_h, tv_h, ti_h = jax.device_get(  # repro-lint: ok(R1, the single batched per-group device pull)
+                (toks, actives, tvals, tidx))
+            tokens = [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i])
+                       if a] for i in range(len(prompts))]
+            # emissions are a True-prefix of the scan (budgets only count
+            # down), so request i's teacher rows are its first len(tokens)
+            teachers = [(np.array(tv_h[:len(t), i]),
+                         np.array(ti_h[:len(t), i]))
+                        for i, t in enumerate(tokens)]
+            return tokens, teachers
+        toks, actives = outs[4:]
         toks_h, act_h = jax.device_get((toks, actives))  # repro-lint: ok(R1, the single batched per-group device pull)
         return [[int(t) for t, a in zip(toks_h[:, i], act_h[:, i]) if a]
                 for i in range(len(prompts))]
 
     def _cloud_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
-        """Grouped full-cloud regeneration (task assignment)."""
+        """Grouped full-cloud regeneration (task assignment).  When an
+        adaptation loop is attached, the SAME cloud pass also emits top-k
+        teacher logits (already paid for — the capture rides the group's
+        one batched pull) so the rejected edge draft gets distillation
+        supervision."""
         out: List[Tuple[_Request, RequestTrace]] = []
+        tk = self.adaptation.capture_topk \
+            if self.adaptation is not None else 0
         toks = self._group_generate(self.cloud, cloud_params,
                                     [r.prompt for r in reqs],
-                                    [r.max_new for r in reqs], rng)
-        for r, u, t in zip(reqs, uncs, toks):
+                                    [r.max_new for r in reqs], rng,
+                                    topk=tk)
+        teach = [None] * len(reqs)
+        if tk:
+            toks, teach = toks
+        for r, u, t, th in zip(reqs, uncs, toks, teach):
             out.append((r, RequestTrace(
                 "cloud", edge_calls=r.max_new, cloud_passes=r.max_new,
-                uncertainty=u, tokens=t)))
+                uncertainty=u, tokens=t, teacher_topk=th)))
         return out
 
     def _skeleton_escalate(self, edge_params, cloud_params, reqs, uncs, rng):
@@ -1067,4 +1164,6 @@ class BatchedEngine:
                 if c["member_rounds"] else 0.0,
                 "spec_lanes": {self.spec_mode: dict(c)},
                 **self.policy.stats(), **self._kv_stats,
+                **({"adaptation": self.adaptation.stats()}
+                   if self.adaptation is not None else {}),
                 **latency_rollup(self._events, self.slo_ms)}

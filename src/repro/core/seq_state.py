@@ -342,6 +342,15 @@ class SequenceState:
         cannot back it yet (the scheduler retries next tick)."""
         raise NotImplementedError(f"{type(self).__name__} does not swap")
 
+    def rebind(self, params):
+        """Point future prefills (``admit``/``begin``) at hot-swapped
+        ``params``.  An online-adaptation swap is a pure pytree swap —
+        same treedef, shapes and dtypes — so caches already staged stay
+        valid: decode just reads the new weights the scheduler passes to
+        the lane's jitted step.  Kept on the protocol so the scheduler
+        never reaches into state internals (rule R4)."""
+        self.params = params
+
     @property
     def capacity_bytes(self) -> int:
         return sum(x.nbytes for x in jax.tree.leaves(self.caches))
@@ -1016,12 +1025,17 @@ class Lane:
 
         @hot_path
         def chunk(params, caches, tok, steps_left, unc_sum, rng, stop,
-                  n_steps: int):
+                  n_steps: int, topk: int = 0):
             """n_steps decode steps over all slots in one scan.  Returns the
             advanced state plus per-step (token, active) for the host.
             ``stop`` is a traced int32 stop-token id (-1 = never): a slot
             that emits it keeps the token but zeroes its remaining budget,
-            so it retires early with steps-spent < budget."""
+            so it retires early with steps-spent < budget.  ``topk > 0``
+            (static) additionally emits each step's top-k logit values and
+            vocab indices — teacher supervision for serve-time adaptation,
+            coming out through the SAME batched pull as the token tape
+            (capture never adds a sync); the default-0 path traces the
+            exact tuple it always has, byte-identical."""
             def body(carry, r):
                 caches, tok, steps_left, unc_sum = carry
                 lg, caches = step(params, tok, caches)       # (B, V)
@@ -1034,15 +1048,25 @@ class Lane:
                 unc_sum = unc_sum + jnp.where(active, est(lg), 0.0)
                 steps_left = jnp.where(active & (nxt == stop),
                                        0, steps_left - active.astype(jnp.int32))
-                return (caches, nxt[:, None, None], steps_left, unc_sum), \
-                    (nxt, active)
+                out = (nxt, active)
+                if topk:
+                    tv, ti = jax.lax.top_k(lg.astype(jnp.float32), topk)
+                    out = (nxt, active, tv, ti.astype(jnp.int32))
+                return (caches, nxt[:, None, None], steps_left, unc_sum), out
 
+            carry = (caches, tok, steps_left, unc_sum)
+            keys = jax.random.split(rng, n_steps)
+            if topk:
+                (caches, tok, steps_left, unc_sum), \
+                    (toks, actives, tvals, tidx) = \
+                    jax.lax.scan(body, carry, keys)
+                return (caches, tok, steps_left, unc_sum, toks, actives,
+                        tvals, tidx)
             (caches, tok, steps_left, unc_sum), (toks, actives) = \
-                jax.lax.scan(body, (caches, tok, steps_left, unc_sum),
-                             jax.random.split(rng, n_steps))
+                jax.lax.scan(body, carry, keys)
             return caches, tok, steps_left, unc_sum, toks, actives
 
-        self._chunk = jax.jit(chunk, static_argnames=("n_steps",))
+        self._chunk = jax.jit(chunk, static_argnames=("n_steps", "topk"))
 
     def dense_side(self) -> "Lane":
         """This lane's model re-hosted on dense per-slot caches (cached

@@ -1,1 +1,2 @@
+from repro.data.feedback_store import FeedbackStore, FeedbackTriple  # noqa: F401
 from repro.data.pipeline import SyntheticLM, batches, dirichlet_clients  # noqa: F401

@@ -76,6 +76,24 @@ goodput-under-SLO.  ``--prefill-chunk`` caps how many prompt tokens a
 single tick may prefill, so a long prompt no longer blocks every decoding
 request for its whole prefill (chunked prefill interleaves with decode).
 
+Serve-time adaptation (batched scheduler): ``--adapt distill|lora``
+closes the inference/learning loop — every completion's supervision
+triple (prompt, discarded edge draft, cloud-corrected continuation, plus
+``--adapt-topk`` teacher logits when the wave already paid for the cloud
+pass) retires into a bounded ``data/feedback_store.FeedbackStore``, and
+every ``--adapt-interval`` completions a ``core/adaptation.py``
+``AdaptationLoop`` takes jitted background train steps (forward KD on
+the full edge params, or LoRA adapter-only updates on the frozen base)
+and hot-swaps the result into live serving between scheduler ticks.  The
+swap is a pure pytree swap — same treedef/shapes — so the steady state
+stays recompile-free across it (the ``bench_serving.py``
+``online_adaptation`` arm asserts this with the compile counter, along
+with cloud-token share falling as the edge model improves).
+``--adapt-checkpoint PATH`` persists the learned artifact on exit (the
+LoRA adapter pytree, or the distilled edge params): restore it with
+``training/checkpoint.restore``.  Omitting ``--adapt`` keeps serving
+byte-identical to the adaptation-free engine.
+
 Running on a mesh: ``--mesh data,model`` shards the batched scheduler over
 the local devices — the cloud verifier runs TENSOR-PARALLEL over the
 ``model`` axis (params partitioned by ``launch/sharding.py``'s rules),
@@ -215,6 +233,23 @@ def main():
                     help="max prompt tokens prefilled per scheduler tick "
                          "(chunked prefill); 0 disables chunking, default "
                          "= --tick-tokens")
+    ap.add_argument("--adapt", default=None, choices=["distill", "lora"],
+                    help="serve-time adaptation (batched scheduler): "
+                         "capture completion triples into a FeedbackStore "
+                         "and hot-swap background-trained edge weights "
+                         "(distill = forward KD on full params, lora = "
+                         "adapter-only on the frozen base)")
+    ap.add_argument("--adapt-interval", type=int, default=16,
+                    help="take an adaptation update every this many "
+                         "completions (0 = capture-only)")
+    ap.add_argument("--adapt-topk", type=int, default=8,
+                    help="teacher logits kept per cloud-generated token "
+                         "(distill mode; rides the wave's existing "
+                         "device pull)")
+    ap.add_argument("--adapt-checkpoint", default=None, metavar="PATH",
+                    help="persist the learned artifact on exit: the LoRA "
+                         "adapter pytree (--adapt lora) or the distilled "
+                         "edge params (--adapt distill)")
     ap.add_argument("--mesh", default=None, metavar="AXES",
                     help="shard the batched scheduler over the local "
                          "devices: comma-separated axis names, e.g. "
@@ -261,6 +296,15 @@ def main():
             and args.scheduler != "batched":
         raise SystemExit("--spec-mode tree/self needs --scheduler batched "
                          "(the per-request loop only drafts linear tapes)")
+    if args.adapt is not None and args.scheduler != "batched":
+        raise SystemExit("--adapt needs --scheduler batched (capture rides "
+                         "the batched scheduler's retirement path)")
+    adaptation = None
+    if args.adapt is not None:
+        from repro.core.adaptation import AdaptationLoop
+        adaptation = AdaptationLoop(mode=args.adapt,
+                                    interval=args.adapt_interval,
+                                    topk=args.adapt_topk)
     mesh = None
     if args.mesh is not None:
         from repro.launch.mesh import parse_mesh_arg
@@ -279,7 +323,7 @@ def main():
                             spec_mode=args.spec_mode,
                             spec_tree_width=args.spec_tree_width,
                             spec_exit_layer=args.spec_exit_layer,
-                            mesh=mesh)
+                            mesh=mesh, adaptation=adaptation)
         t0 = time.perf_counter()
         if args.arrival != "none":
             gen = (poisson_arrivals if args.arrival == "poisson"
@@ -287,7 +331,10 @@ def main():
             at = gen(args.arrival_rate, args.requests, seed=0)
             traces = replay(eng, ep, cp, prompts, args.max_new, at)
         else:
-            traces = eng.serve_batch(ep, cp, prompts, args.max_new)
+            traces = eng.serve_batch(
+                ep, cp, prompts, args.max_new,
+                domains=[i % synth.n_domains
+                         for i in range(args.requests)])
         dt = time.perf_counter() - t0
         for i, tr in enumerate(traces):
             paths[tr.path] = paths.get(tr.path, 0) + 1
@@ -354,6 +401,27 @@ def main():
             print(f"slo: ttft<={args.slo_ms:.0f}ms "
                   f"attainment={stats['slo_attainment']:.2f} "
                   f"goodput={stats['goodput_slo']:.2f} req/s")
+    if "adaptation" in stats:
+        a = stats["adaptation"]
+        loss = "n/a" if a["last_loss"] is None else f"{a['last_loss']:.4f}"
+        print(f"adapt: mode={a['mode']} observed={a['observed']} "
+              f"updates={a['updates']} steps={a['train_steps']} "
+              f"swaps={a['swaps']} loss={loss} "
+              f"store={a['store_size']}/{a['store_capacity']} "
+              f"(evicted={a['store_evicted']})")
+    if args.adapt_checkpoint is not None and adaptation is not None:
+        from repro.training import checkpoint
+        artifact = adaptation.adapters if args.adapt == "lora" \
+            else adaptation.latest
+        if artifact is None:
+            print(f"adapt: nothing learned yet — skipping checkpoint "
+                  f"{args.adapt_checkpoint}")
+        else:
+            checkpoint.save(args.adapt_checkpoint, artifact,
+                            step=adaptation.steps)
+            print(f"adapt: saved {args.adapt} artifact to "
+                  f"{args.adapt_checkpoint} "
+                  f"(restore via training/checkpoint.restore)")
 
 
 if __name__ == "__main__":

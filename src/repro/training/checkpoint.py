@@ -9,6 +9,16 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _esc(key: str) -> str:
+    """Escape "/" (and the escape char itself) WITHIN a single pytree key.
+    Flat npz keys are "/"-joined paths, so a dict key that itself contains
+    "/" — LoRA adapters are keyed by joined param paths like
+    ``blocks/0/attn/wq`` — would otherwise produce the SAME flat key as a
+    nested spelling of that path and silently collide (last writer wins on
+    save, and restore reads one leaf into both slots)."""
+    return key.replace("%", "%25").replace("/", "%2F")
+
+
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
@@ -20,7 +30,8 @@ def _flatten(tree, prefix=""):
     else:
         return {prefix: tree}
     for k, v in items:
-        path = f"{prefix}/{k}" if prefix else str(k)
+        k = _esc(str(k))
+        path = f"{prefix}/{k}" if prefix else k
         out.update(_flatten(v, path))
     return out
 
@@ -48,7 +59,7 @@ def _jax_paths(like):
                 parts.append(str(p.name))
             else:
                 parts.append(str(p))
-        keys.append("/".join(parts))
+        keys.append("/".join(_esc(part) for part in parts))
     return keys
 
 

@@ -21,21 +21,33 @@ def _ce_mask(labels, ignore=-1):
     return labels != ignore
 
 
-def kl_divergence(teacher_logits, student_logits, temperature: float = 1.0):
-    """KL(teacher || student), mean over positions. Inputs (..., V)."""
+def kl_divergence(teacher_logits, student_logits, temperature: float = 1.0,
+                  mask=None):
+    """KL(teacher || student), mean over positions. Inputs (..., V).
+    ``mask`` (broadcastable to the position dims) restricts the mean to
+    positions that actually carry teacher supervision — serve-time
+    capture stores teacher logits only at generated positions, so the
+    rest must contribute zero KL, not garbage."""
     t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / temperature, -1)
     s = jax.nn.log_softmax(student_logits.astype(jnp.float32) / temperature, -1)
-    return jnp.mean(jnp.sum(jnp.exp(t) * (t - s), axis=-1))
+    kl = jnp.sum(jnp.exp(t) * (t - s), axis=-1)
+    if mask is None:
+        return jnp.mean(kl)
+    m = mask.astype(kl.dtype)
+    return jnp.sum(kl * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
 def kd_loss(student_model, student_params, batch, teacher_logits, *,
-            alpha: float = 0.5, temperature: float = 2.0):
-    """alpha·CE(labels) + (1-alpha)·T²·KL(teacher‖student)."""
+            alpha: float = 0.5, temperature: float = 2.0, kd_mask=None):
+    """alpha·CE(labels) + (1-alpha)·T²·KL(teacher‖student).  ``kd_mask``
+    ((B, S) bool) marks the positions with real teacher logits (sparse
+    serve-time capture); None keeps the historical all-position mean."""
     logits, aux = student_model.forward(student_params, batch)[:2]
     if student_model.cfg.family == "vlm":
         logits = logits[:, batch["embeds"].shape[1]:, :]
     ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
-    kl = kl_divergence(teacher_logits[:, :-1], logits[:, :-1], temperature)
+    kl = kl_divergence(teacher_logits[:, :-1], logits[:, :-1], temperature,
+                       mask=None if kd_mask is None else kd_mask[:, :-1])
     return alpha * ce + (1 - alpha) * (temperature ** 2) * kl + aux
 
 

@@ -1,0 +1,249 @@
+"""Online adaptation subsystem (``core/adaptation.py`` +
+``data/feedback_store.py``): feedback capture off the scheduler's
+retirement path, background distillation/LoRA updates, and the hot-swap
+contract — a pure pytree exchange that must neither change served tokens
+(identity adapters) nor trigger a single steady-state recompile."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adaptation import AdaptationLoop
+from repro.core.policy import ThresholdPolicy, cloud_tokens
+from repro.core.scheduler import BatchedEngine
+from repro.data import SyntheticLM
+from repro.data.feedback_store import TOPK_FILL, FeedbackStore
+from repro.models import Model
+from repro.training import checkpoint
+from repro.training.lora import init_lora, merge_lora
+from repro.training.optimizer import AdamW
+
+
+@pytest.fixture(scope="module")
+def pair():
+    e_cfg = get_config("smollm-135m").reduced()
+    c_cfg = get_config("granite-8b").reduced().replace(
+        vocab_size=e_cfg.vocab_size)
+    edge, cloud = Model(e_cfg), Model(c_cfg)
+    return (edge, edge.init(jax.random.PRNGKey(0)),
+            cloud, cloud.init(jax.random.PRNGKey(1)))
+
+
+def _prompts(vocab, n, length=8):
+    return [((np.arange(length) * 7 + 3 * i) % vocab).astype(np.int32)
+            for i in range(n)]
+
+
+def _engine(edge, cloud, adapt, threshold=0.0, batch=4):
+    return BatchedEngine(edge, cloud, batch_size=batch, temperature=0.0,
+                         policy=ThresholdPolicy(threshold), use_cache=False,
+                         tick_tokens=4, adaptation=adapt)
+
+
+# --------------------------------------------------------------- store
+def test_store_ring_bounds_and_eviction():
+    s = FeedbackStore(capacity=4)
+    for i in range(6):
+        s.add(np.arange(3), [i], domain=i % 2,
+              sla="met" if i % 3 else "missed", path="cloud")
+    assert len(s) == 4
+    st = s.stats()
+    assert st["added"] == 6 and st["evicted"] == 2 and st["capacity"] == 4
+    # oldest two fell off the ring; counters still see every add
+    assert [r.tokens[0] for r in s.records()] == [2, 3, 4, 5]
+    assert st["by_domain"] == {"0": 3, "1": 3}
+    assert st["by_sla"] == {"missed": 2, "met": 4}
+    assert st["by_path"] == {"cloud": 6}
+
+
+def test_store_validation():
+    with pytest.raises(ValueError):
+        FeedbackStore(capacity=0)
+    with pytest.raises(ValueError):
+        FeedbackStore().sample_batch(np.random.default_rng(0), 2, 8, 16)
+    with pytest.raises(ValueError):
+        AdaptationLoop(mode="finetune")
+    with pytest.raises(ValueError):
+        AdaptationLoop(interval=-1)
+
+
+def test_sample_batch_shapes_and_teacher_scatter():
+    vocab, P = 32, 4
+    s = FeedbackStore()
+    prompt = np.arange(P, dtype=np.int32)
+    tokens = np.array([9, 11, 13], np.int32)
+    tv = np.array([[2.0, 1.0], [3.0, 0.5], [4.0, 0.25]], np.float32)
+    ti = np.array([[9, 1], [11, 2], [13, 3]], np.int32)
+    s.add(prompt, tokens, teacher_topk=(tv, ti), domain=1)
+    b = s.sample_batch(np.random.default_rng(0), 2, 12, vocab, topk=2)
+    assert b["tokens"].shape == (2, 12) and b["labels"].shape == (2, 12)
+    assert b["teacher_logits"].shape == (2, 12, vocab)
+    lab = np.array(b["labels"][0])
+    # only the continuation is supervised; prompt and pad stay -1
+    assert (lab[:P] == -1).all() and (lab[P:P + 3] == tokens).all()
+    assert (lab[P + 3:] == -1).all()
+    km = np.array(b["kd_mask"][0])
+    tl = np.array(b["teacher_logits"][0])
+    # generated token j scatters at teacher-forced position P-1+j
+    for j in range(3):
+        pos = P - 1 + j
+        assert km[pos]
+        assert tl[pos, ti[j, 0]] == tv[j, 0]
+        assert tl[pos, ti[j, 1]] == tv[j, 1]
+    assert not km[[0, P + 2, 11]].any()
+    assert tl[0].max() == TOPK_FILL       # unmasked rows stay at the fill
+
+
+def test_sample_batch_domain_filter():
+    s = FeedbackStore()
+    s.add(np.arange(2), [5], domain=0)
+    s.add(np.arange(2), [7], domain=1)
+    rng = np.random.default_rng(0)
+    b = s.sample_batch(rng, 8, 6, 16, domains=[1])
+    assert (np.array(b["labels"])[:, 2] == 7).all()
+    # empty tagged subset falls back to the whole ring, not an error
+    b = s.sample_batch(rng, 8, 6, 16, domains=[9])
+    assert set(np.array(b["labels"])[:, 2].tolist()) <= {5, 7}
+
+
+# ----------------------------------------------------------- capture
+def test_scheduler_capture_and_tagging(pair):
+    edge, ep, cloud, cp = pair
+    adapt = AdaptationLoop(mode="distill", interval=0, topk=4)
+    eng = _engine(edge, cloud, adapt)            # threshold 0 -> all cloud
+    prompts = _prompts(edge.cfg.vocab_size, 6)
+    traces = eng.serve_batch(ep, cp, prompts, 5,
+                             domains=[i % 2 for i in range(6)])
+    assert all(t.path == "cloud" for t in traces)
+    st = adapt.store.stats()
+    assert st["size"] == 6 and st["by_path"] == {"cloud": 6}
+    assert st["by_domain"] == {"0": 3, "1": 3}
+    for r in adapt.store.records():
+        assert r.tokens.size == 5 and r.draft is not None
+        assert r.teacher_values.shape == (5, 4)      # rode the wave's pull
+        assert r.teacher_indices.dtype == np.int32
+    assert "adaptation" in eng.stats()
+    # capture-only: interval=0 never marks an update pending
+    assert adapt.updates == 0 and adapt.maybe_update(ep) is None
+
+
+def test_capture_topk_gated_by_mode():
+    assert AdaptationLoop(mode="distill", topk=8).capture_topk == 8
+    assert AdaptationLoop(mode="lora", topk=8).capture_topk == 0
+
+
+# ------------------------------------------------------------- training
+def test_one_cold_compile_then_zero_across_swaps(pair, compile_counter):
+    edge, ep, cloud, cp = pair
+    adapt = AdaptationLoop(mode="distill", interval=6, batch_size=4,
+                           seq_len=16, topk=4, min_records=1)
+    eng = _engine(edge, cloud, adapt)
+    prompts = _prompts(edge.cfg.vocab_size, 6)
+    eng.serve_batch(ep, cp, prompts, 5)          # fill + mark pending
+    before = compile_counter.count
+    eng.serve_batch(ep, cp, prompts, 5)          # first update: cold compile
+    assert adapt.swaps == 1
+    cold = compile_counter.count - before
+    assert cold > 0, "first train step never compiled?"
+    steady_start = compile_counter.count
+    eng.serve_batch(ep, cp, prompts, 5)          # second update: warm step
+    eng.serve_batch(ep, cp, prompts, 5)
+    assert adapt.swaps == 3
+    assert compile_counter.count == steady_start, \
+        f"train step / swap recompiled: {compile_counter.events}"
+
+
+def test_lora_zero_init_hot_swap_parity(pair):
+    """lr=0 LoRA: every swap installs merge(base, zero adapters) == base,
+    so the adapted engine must be token-identical to an adaptation-free
+    one — the hot-swap mechanism itself cannot perturb serving."""
+    edge, ep, cloud, cp = pair
+    adapt = AdaptationLoop(mode="lora", interval=4, batch_size=4,
+                           seq_len=16, opt=AdamW(lr=0.0), min_records=1)
+    prompts = _prompts(edge.cfg.vocab_size, 8)
+    adapted = _engine(edge, cloud, adapt).serve_batch(ep, cp, prompts, 6)
+    plain = _engine(edge, cloud, None).serve_batch(ep, cp, prompts, 6)
+    assert adapt.swaps >= 1
+    assert all(a.tokens == b.tokens for a, b in zip(adapted, plain))
+
+
+def test_adaptation_persists_across_drains(pair):
+    edge, ep, cloud, cp = pair
+    adapt = AdaptationLoop(mode="distill", interval=4, batch_size=4,
+                           seq_len=16, topk=4, min_records=1)
+    eng = _engine(edge, cloud, adapt)
+    prompts = _prompts(edge.cfg.vocab_size, 4)
+    eng.serve_batch(ep, cp, prompts, 5)
+    eng.serve_batch(ep, cp, prompts, 5)
+    assert adapt.latest is not None
+    # the next drain starts from the adapted weights, not the caller's
+    assert adapt.current(ep) is adapt.latest
+    some = jax.tree.leaves(adapt.latest)[0]
+    assert not np.allclose(np.asarray(some),
+                           np.asarray(jax.tree.leaves(ep)[0]))
+
+
+# ----------------------------------------------------------- checkpoint
+def test_checkpoint_slash_keys_roundtrip(tmp_path):
+    """The regression the LoRA adapter tree exposed: a dict key that
+    itself contains "/" must not collide with the nested spelling of the
+    same path in the flat npz namespace."""
+    tree = {"a/b": np.full((2,), 1.0, np.float32),
+            "a": {"b": np.full((2,), 2.0, np.float32)}}
+    checkpoint.save(str(tmp_path / "amb"), tree, step=3)
+    back, step = checkpoint.restore(str(tmp_path / "amb"), tree)
+    assert step == 3
+    assert np.array_equal(np.asarray(back["a/b"]), tree["a/b"])
+    assert np.array_equal(np.asarray(back["a"]["b"]), tree["a"]["b"])
+
+
+def test_adapter_save_swap_restore(pair, tmp_path):
+    """Adapters trained at serve time survive a save -> fresh-process
+    restore -> merge: the restored merge is bit-identical to the live
+    hot-swapped weights."""
+    edge, ep, cloud, cp = pair
+    adapt = AdaptationLoop(mode="lora", interval=4, batch_size=4,
+                           seq_len=16, opt=AdamW(lr=1e-3), min_records=1)
+    eng = _engine(edge, cloud, adapt)
+    prompts = _prompts(edge.cfg.vocab_size, 4)
+    eng.serve_batch(ep, cp, prompts, 5)
+    eng.serve_batch(ep, cp, prompts, 5)
+    assert adapt.swaps >= 1 and adapt.adapters is not None
+    checkpoint.save(str(tmp_path / "adapters"), adapt.adapters,
+                    step=adapt.steps)
+    like = init_lora(jax.random.PRNGKey(0), ep, rank=adapt.lora_rank)
+    restored, step = checkpoint.restore(str(tmp_path / "adapters"), like)
+    assert step == adapt.steps
+    merged = merge_lora(ep, restored)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(adapt.latest)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------- integration
+def test_edge_improves_on_stationary_stream(pair):
+    """The subsystem's reason to exist: distilling on its own served
+    traffic must pull the edge below the escalation gate — cloud share
+    falls, acceptance rises — on a stationary synthetic stream."""
+    edge, ep, cloud, cp = pair
+    synth = SyntheticLM(edge.cfg.vocab_size)
+    rng = np.random.default_rng(21)
+    n, max_new = 8, 6
+    prompts = [synth.sample(rng, i % synth.n_domains, 8) for i in range(n)]
+    domains = [i % synth.n_domains for i in range(n)]
+    probe = _engine(edge, cloud, None, threshold=1.1)
+    uncs = [t.uncertainty for t in probe.serve_batch(ep, cp, prompts,
+                                                     max_new)]
+    thr = float(np.quantile(uncs, 0.25))
+    adapt = AdaptationLoop(mode="distill", interval=n, batch_size=8,
+                           seq_len=8 + max_new, topk=8, steps_per_update=8,
+                           opt=AdamW(lr=1e-3), min_records=4)
+    eng = _engine(edge, cloud, adapt, threshold=thr)
+    shares, accepts = [], []
+    for _ in range(3):
+        traces = eng.serve_batch(ep, cp, prompts, max_new, domains=domains)
+        shares.append(sum(cloud_tokens(t, 4) for t in traces))
+        accepts.append(sum(t.path == "edge" for t in traces) / n)
+    assert accepts[0] < 1.0, "gate placed too loose to measure improvement"
+    assert adapt.swaps >= 1
+    assert shares[-1] < shares[0], shares
+    assert accepts[-1] > accepts[0], accepts

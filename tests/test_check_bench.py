@@ -62,6 +62,14 @@ def _rows():
         "compile_stability": {
             "decode_compiles": 12, "steady_state_recompiles": 0,
             "recompile_events": []},
+        "online_adaptation": {
+            "threshold": 0.99, "segments": 9, "req_s": 8.0,
+            "cloud_share_first_third": 0.75,
+            "cloud_share_last_third": 0.0,
+            "accept_first_third": 0.25, "accept_last_third": 1.0,
+            "swaps": 8, "train_steps": 64, "last_loss": 7.5,
+            "store_size": 72, "steady_state_recompiles": 0,
+            "steady_swaps": 1},
         "multi_device": {
             "mesh_shape": {"data": 2, "model": 4}, "mesh_devices": 8,
             "single_req_s": 2.0, "mesh_req_s": 1.5, "kv_shards": 8,
@@ -118,6 +126,14 @@ def test_multi_device_skip_fails_when_required():
         "steady_state_recompiles", 1),
     lambda r: r["compile_stability"].__setitem__("decode_compiles", 0),
     lambda r: r.pop("compile_stability"),
+    lambda r: r["online_adaptation"].__setitem__(
+        "cloud_share_last_third", 0.8),
+    lambda r: r["online_adaptation"].__setitem__("accept_last_third", 0.1),
+    lambda r: r["online_adaptation"].__setitem__(
+        "steady_state_recompiles", 2),
+    lambda r: r["online_adaptation"].__setitem__("steady_swaps", 0),
+    lambda r: r["online_adaptation"].__setitem__("swaps", 0),
+    lambda r: r.pop("online_adaptation"),
     lambda r: r["multi_device"].__setitem__("token_parity", False),
     lambda r: r["multi_device"].__setitem__("kv_capacity_scale_x", 1.0),
     lambda r: r["multi_device"].__setitem__("kv_shards", 1),
